@@ -1,0 +1,78 @@
+"""Figs. 12–14: execution time vs number of parties.
+
+Measured: wall-clock of the full aggregation round (share-gen + routing
++ reconstruction) in the counting simulation on this host, for P2P vs
+two-phase — reproducing the *shape* of Fig. 12 (Local-SingleServer).
+
+Derived: network-bound execution time under the paper's two AWS
+settings, modeled as bytes/bandwidth + per-message latency with
+t3.medium-class links (5 Gb/s same-region, 100 ms RTT / 0.5 Gb/s
+cross-region), applied to the exact per-party message schedule —
+reproducing the ordering of Figs. 13–14 without AWS.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.costmodel import CostParams
+from repro.core import costmodel
+from repro.fl.simulation import FLSimulation
+
+ENVS = {
+    # bytes/s per link, per-message latency (s)
+    "same_region": (5e9 / 8, 0.001),
+    "cross_region": (0.5e9 / 8, 0.100),
+}
+
+
+def measured_round(n: int, s: int = 242, protocol: str = "two_phase",
+                   repeats: int = 3) -> float:
+    rng = np.random.RandomState(0)
+    flats = [jnp.asarray(rng.randn(s).astype(np.float32))
+             for _ in range(n)]
+    sim = FLSimulation(n=n, m=3, seed=1)
+    if protocol == "two_phase":
+        sim.elect_committee()
+        fn = sim.aggregate_two_phase
+    else:
+        fn = sim.aggregate_p2p
+    fn(flats)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(flats)
+    return (time.perf_counter() - t0) / repeats
+
+
+def derived_network_time(n: int, env: str, s: int = 242, e: int = 15,
+                         protocol: str = "two_phase") -> float:
+    """Critical-path network time for e epochs (elements are fp32)."""
+    bw, lat = ENVS[env]
+    p = CostParams(n=n, e=e, s=s, m=3, b=10)
+    if protocol == "p2p":
+        # per party per epoch: 2(n-1) serial sends of s elements
+        per_epoch = 2 * (n - 1) * (s * 4 / bw + lat)
+        return e * per_epoch
+    # two-phase: upload m shares + chain (m-1) + broadcast (n/m serial)
+    per_epoch = (p.m * (s * 4 / bw + lat)
+                 + (p.m - 1) * (s * 4 / bw + lat)
+                 + int(np.ceil(n / p.m)) * (s * 4 / bw + lat))
+    phase1 = 2 * (n - 1) * (p.b * 4 / bw + lat)
+    return phase1 + e * per_epoch
+
+
+def emit(writer):
+    for n in (4, 8, 16, 32):
+        for proto in ("p2p", "two_phase"):
+            t = measured_round(n, protocol=proto)
+            writer(f"exec_round_{proto}_n{n}", t * 1e6, None)
+    for env in ENVS:
+        for n in (4, 8, 16):
+            t2 = derived_network_time(n, env, protocol="two_phase")
+            tp = derived_network_time(n, env, protocol="p2p")
+            writer(f"net_time_{env}_2phase_n{n}", None, round(t2, 3))
+            writer(f"net_time_{env}_p2p_n{n}", None, round(tp, 3))
+            writer(f"net_speedup_{env}_n{n}", None, round(tp / t2, 2))

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: oracle wall time on CPU + HBM-roofline
+projections for TPU v5e from the kernels' exact byte/flop counts.
+
+CPU microseconds are NOT the TPU performance claim — the derived column
+reports the v5e roofline time (bytes/819GB/s or flops/197T) that the
+fused kernel's traffic model implies, which EXPERIMENTS.md §Perf uses.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import philox
+from repro.core.fixed_point import DEFAULT_FIELD, DEFAULT_RING
+from repro.kernels.share_gen import share_gen
+from repro.kernels.reconstruct import reconstruct
+from repro.kernels.shamir import shamir_share
+
+HBM = 819e9
+PEAK = 197e12
+
+
+def _time(fn, repeats=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def emit(writer):
+    d = 1 << 20
+    x = jnp.asarray(np.random.RandomState(0).randn(d).astype(np.float32))
+    k0, k1 = philox.derive_key(1, 1)
+
+    for m in (3, 8):
+        t = _time(lambda m=m: share_gen(x, m, k0, k1, DEFAULT_RING,
+                                        use_ref=True)[0])
+        # fused kernel HBM model: 4D read + 4mD write
+        bytes_moved = 4 * d + 4 * m * d
+        writer(f"share_gen_m{m}_1M", t * 1e6,
+               round(bytes_moved / HBM * 1e6, 2))
+
+        shares = share_gen(x, m, k0, k1, DEFAULT_RING, use_ref=True)[0]
+        t = _time(lambda s=shares: reconstruct(s, 4, DEFAULT_RING,
+                                               use_ref=True))
+        bytes_moved = 4 * m * d + 4 * d
+        writer(f"reconstruct_m{m}_1M", t * 1e6,
+               round(bytes_moved / HBM * 1e6, 2))
+
+        t = _time(lambda m=m: shamir_share(x, m, k0, k1, DEFAULT_FIELD,
+                                           use_ref=True)[0])
+        # Shamir: ~10 VPU-ops per fmul × (m·d) Horner terms; compute-bound
+        ops = 40.0 * m * (m - 1) * d
+        writer(f"shamir_share_m{m}_1M", t * 1e6,
+               round(max(ops / PEAK, (4 * d + 4 * m * d) / HBM) * 1e6, 2))
+
+    # naive (unfused) additive share-gen traffic for comparison: mask
+    # materialization makes it 4D·(3m-1) vs the kernel's 4D·(m+1)
+    for m in (3, 8):
+        naive = 4 * d * (3 * m - 1)
+        fused = 4 * d * (m + 1)
+        writer(f"share_gen_fusion_traffic_ratio_m{m}", None,
+               round(naive / fused, 2))

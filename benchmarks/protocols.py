@@ -1,0 +1,59 @@
+"""Figs. 15–16: Additive vs Shamir, SimpleNN vs ComplexNN execution time.
+
+Wall-clock of full secure aggregation rounds per (scheme × model size ×
+n).  On this host both schemes run the same jnp code paths as the TPU
+kernels' oracles, so the *ratios* (Shamir/Additive; Complex/Simple)
+reproduce the paper's ordering, which is what Figs. 15–16 establish.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.aggregation import SecureAggregator
+from repro.fl.simulation import FLSimulation
+
+SIZES = {"simple": 242, "complex": 7380}
+
+
+def round_time(n: int, scheme: str, s: int, repeats: int = 3) -> float:
+    rng = np.random.RandomState(0)
+    flats = [jnp.asarray(rng.randn(s).astype(np.float32))
+             for _ in range(n)]
+    sim = FLSimulation(n=n, m=3, scheme=scheme, seed=1)
+    sim.elect_committee()
+    sim.aggregate_two_phase(flats)          # warmup (jit)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        sim.aggregate_two_phase(flats)
+    return (time.perf_counter() - t0) / repeats
+
+
+def p2p_round_time(n: int, scheme: str, s: int, repeats: int = 3) -> float:
+    rng = np.random.RandomState(0)
+    flats = [jnp.asarray(rng.randn(s).astype(np.float32))
+             for _ in range(n)]
+    sim = FLSimulation(n=n, m=3, scheme=scheme, seed=1)
+    sim.aggregate_p2p(flats)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        sim.aggregate_p2p(flats)
+    return (time.perf_counter() - t0) / repeats
+
+
+def emit(writer):
+    for scheme in ("additive", "shamir"):
+        for n in (4, 8, 16):
+            t = round_time(n, scheme, SIZES["simple"])
+            writer(f"fig15_{scheme}_2phase_n{n}", t * 1e6, None)
+            tp = p2p_round_time(n, scheme, SIZES["simple"])
+            writer(f"fig15_{scheme}_p2p_n{n}", tp * 1e6, None)
+            writer(f"fig15_{scheme}_speedup_n{n}", None,
+                   round(tp / t, 2))
+    for kind, s in SIZES.items():
+        for n in (4, 8, 16):
+            t = round_time(n, "additive", s)
+            writer(f"fig16_{kind}_2phase_n{n}", t * 1e6, None)

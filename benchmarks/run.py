@@ -1,0 +1,71 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call empty for purely
+derived/analytic rows).  Sections:
+
+  msg_cost       — Eqs. 1-8 / Figs. 7-11 (counts verified vs simulation)
+  exec_time      — Figs. 12-14 (measured rounds + modeled network time)
+  protocols      — Figs. 15-16 (Additive vs Shamir; Simple vs Complex)
+  accuracy       — Table II (local / centralized / federated)
+  kernels_bench  — kernel traffic models + oracle timings
+  dryrun_summary — roofline terms per (arch × shape × mesh), if present
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = []
+
+    def writer(name, us_per_call, derived):
+        rows.append((name, us_per_call, derived))
+
+    from . import accuracy, exec_time, kernels_bench, msg_cost, protocols
+    sections = {
+        "msg_cost": msg_cost.emit,
+        "exec_time": exec_time.emit,
+        "protocols": protocols.emit,
+        "accuracy": accuracy.emit,
+        "kernels_bench": kernels_bench.emit,
+    }
+    for name, fn in sections.items():
+        if only and name != only:
+            continue
+        try:
+            fn(writer)
+        except Exception:
+            print(f"# section {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+            raise
+
+    # dry-run roofline summary (if the sweep has been run)
+    if only in (None, "dryrun_summary"):
+        for fn in sorted(glob.glob("experiments/dryrun/*.json")):
+            try:
+                r = json.load(open(fn))
+            except Exception:
+                continue
+            if r.get("status") != "ok" or r.get("overrides"):
+                continue
+            key = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+            roof = r["roofline"]
+            writer(f"roofline_bound_s[{key}]", None,
+                   round(max(roof["compute_s"], roof["memory_s"],
+                             roof["collective_s"]), 4))
+            writer(f"roofline_dominant[{key}]", None, roof["dominant"])
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        us_s = "" if us is None else f"{us:.2f}"
+        print(f"{name},{us_s},{derived if derived is not None else ''}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end driver: federated training of a small LM with two-phase
+MPC gradient aggregation, checkpoint/restart included.
+
+    PYTHONPATH=src python examples/fl_training.py [--steps 200]
+
+Delegates to the production trainer (``repro.launch.train``) with a
+~20M-parameter TinyLlama-family config (the full production meshes use
+the same code path with --production-mesh on real pods).
+"""
+
+import sys
+
+from repro.launch import train as train_mod
+
+if __name__ == "__main__":
+    argv = ["--arch", "tinyllama-1.1b", "--smoke", "--steps", "60",
+            "--batch", "8", "--seq", "128", "--protocol", "two_phase",
+            "--ckpt-dir", "/tmp/repro_fl_ckpt", "--ckpt-every", "25"]
+    argv += sys.argv[1:]
+    sys.argv = [sys.argv[0]] + argv
+    train_mod.main()

@@ -1,0 +1,33 @@
+"""Quickstart: securely average four parties' models in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SecureAggregator, secure_mean_pytrees
+from repro.core.costmodel import CostParams, summary
+
+# four parties, each with a private "model" (any pytree of floats)
+rng = np.random.RandomState(0)
+models = [{"w": jnp.asarray(rng.randn(121, 2).astype(np.float32)),
+           "b": jnp.asarray(rng.randn(2).astype(np.float32))}
+          for _ in range(4)]
+
+# two-phase MPC: m=3 committee members hold additive shares; nobody ever
+# sees another party's raw weights
+agg = SecureAggregator(scheme="additive", m=3)
+fed = secure_mean_pytrees(models, agg, seed=42)
+
+plain = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs), 0), *models)
+err = max(float(jnp.abs(a - b).max())
+          for a, b in zip(jax.tree.leaves(fed), jax.tree.leaves(plain)))
+print(f"secure mean == plain mean up to fixed-point: max err {err:.2e}")
+
+# the paper's headline: message cost vs peer-to-peer MPC
+for n in (16, 64, 128):
+    s = summary(CostParams(n=n))
+    print(f"n={n:4d}: two-phase moves {s['reduction_factor']:.1f}x fewer "
+          f"bytes than P2P MPC")

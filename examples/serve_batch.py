@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests (greedy decode + KV cache).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    argv = ["--arch", "qwen1.5-0.5b", "--smoke", "--batch", "4",
+            "--prompt-len", "16", "--gen", "32"]
+    argv += sys.argv[1:]
+    sys.argv = [sys.argv[0]] + argv
+    serve_mod.main()

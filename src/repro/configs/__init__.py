@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` -> config module."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ArchConfig
+from .base import (SHAPES, ShapeCell, decode_kv_len, input_specs,
+                   skip_reason, valid_shapes)
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "grok-1-314b": "grok1_314b",
+    "llama3.2-1b": "llama32_1b",
+    "tinyllama-1.1b": "tinyllama_11b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.ARCH
+
+
+__all__ = ["ARCH_NAMES", "get_config", "input_specs", "valid_shapes",
+           "skip_reason", "SHAPES", "ShapeCell", "decode_kv_len"]

@@ -1,0 +1,99 @@
+"""Shape cells + input specs shared by every architecture config.
+
+Each architecture is paired with four input-shape cells:
+
+  train_4k    — seq 4096,   global_batch 256  (lowers ``train_step``)
+  prefill_32k — seq 32768,  global_batch 32   (lowers ``prefill``)
+  decode_32k  — KV 32768,   global_batch 128  (lowers ``serve_step``)
+  long_500k   — KV 524288,  global_batch 1    (serve_step; sub-quadratic
+                                               architectures only)
+
+``input_specs`` returns global-shape ``ShapeDtypeStruct`` stand-ins (no
+allocation) for everything the step function consumes besides params;
+``valid_shapes`` encodes the per-family skips documented in DESIGN.md
+§Arch-applicability (full-attention archs skip long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+_SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def valid_shapes(cfg: ArchConfig) -> list[str]:
+    """Cells this architecture runs (skips per DESIGN.md)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in _SUBQUADRATIC:
+        cells.append("long_500k")
+    return cells
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> str | None:
+    if shape in valid_shapes(cfg):
+        return None
+    if shape == "long_500k":
+        return ("full quadratic attention: 512k-token decode KV/compute "
+                "infeasible by design; sub-quadratic archs only "
+                "(DESIGN.md §3)")
+    return "not applicable"
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                batch_override: int | None = None) -> dict:
+    """Global-shape input stand-ins for (arch × shape)."""
+    cell = SHAPES[shape_name]
+    b = batch_override or cell.global_batch
+    s = cell.seq
+
+    if cell.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            batch = {"frames": _bf16(b, cfg.enc_seq, cfg.d_model),
+                     "tokens": _i32(b, s)}
+        elif cfg.frontend == "embeddings":
+            batch = {"embeds": _bf16(b, s, cfg.d_model)}
+        else:
+            batch = {"tokens": _i32(b, s)}
+        if cell.kind == "train":
+            batch["labels"] = _i32(b, s)
+        return batch
+
+    # decode: one new token against a kv_len cache
+    batch = {"tokens": _i32(b, 1), "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "embeddings":
+        batch = {"embeds": _bf16(b, 1, cfg.d_model),
+                 "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    return batch
+
+
+def decode_kv_len(shape_name: str) -> int:
+    return SHAPES[shape_name].seq

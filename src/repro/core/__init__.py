@@ -1,0 +1,13 @@
+"""Core MPC library: the paper's contribution as composable JAX modules."""
+
+from .aggregation import (SecureAggregator, flatten_pytree,
+                          secure_mean_pytrees)
+from .committee import ElectionResult, elect
+from .costmodel import CostParams
+from .fixed_point import DEFAULT_FIELD, DEFAULT_RING, FixedPointConfig
+
+__all__ = [
+    "SecureAggregator", "flatten_pytree", "secure_mean_pytrees",
+    "ElectionResult", "elect", "CostParams",
+    "FixedPointConfig", "DEFAULT_RING", "DEFAULT_FIELD",
+]

@@ -1,0 +1,69 @@
+"""Additive secret sharing over the ring Z_2^32 (paper Alg. 1, bulk form).
+
+A secret vector ``v`` (uint32 codewords) is split into ``m`` shares:
+``m-1`` uniform Philox masks and a final share ``v - sum(masks)`` under
+wraparound.  Reconstruction is the wraparound sum of all shares.  The
+*addition MPC* of Alg. 1 then reduces to: every party sums the share it
+received from each peer (local), and the partial sums are summed again
+(global) — both plain ``uint32`` adds, which is why the whole protocol
+maps onto ``psum``-style collectives in the SPMD backend.
+
+This module is the pure-jnp oracle; ``repro/kernels/share_gen`` is the
+fused Pallas fast path (bit-identical by construction and by test).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import philox
+from .field import ring_sum
+
+
+def share(v, m: int, key0, key1, counter_base: int = 0):
+    """Split uint32 vector ``v`` into ``m`` additive shares.
+
+    Args:
+      v: uint32 array (any shape).
+      m: number of shares (committee size, or n for P2P).
+      key0, key1: Philox key for this (round, party) — callers derive it
+        with ``philox.derive_key(seed, stream)``.
+      counter_base: offset into the counter stream (for chunked calls).
+
+    Returns:
+      uint32 array ``[m, *v.shape]``; ``out.sum(0)`` wraps back to ``v``.
+    """
+    if m < 1:
+        raise ValueError(f"need at least one share, got m={m}")
+    v = jnp.asarray(v, dtype=jnp.uint32)
+    if m == 1:
+        return v[None]
+    masks = [
+        philox.random_bits_like(v, key0, key1, counter_hi=j + 1)
+        for j in range(m - 1)
+    ]
+    last = v
+    for mask in masks:
+        last = last - mask
+    return jnp.stack(masks + [last], axis=0)
+
+
+def reconstruct(shares):
+    """Wraparound sum over the leading share axis."""
+    return ring_sum(jnp.asarray(shares, dtype=jnp.uint32), axis=0)
+
+
+def aggregate_shares(per_party_shares):
+    """Committee-side aggregation (Alg. 3 lines 15 & 20).
+
+    Args:
+      per_party_shares: uint32 ``[n, m, ...]`` — share ``w`` of party
+        ``i`` at ``[i, w]``.
+
+    Returns:
+      uint32 ``[...]``: sum over parties then over shares — the encoded
+      sum of all parties' secrets.
+    """
+    s = jnp.asarray(per_party_shares, dtype=jnp.uint32)
+    partial = ring_sum(s, axis=0)      # each committee member's local sum
+    return ring_sum(partial, axis=0)   # exchange + add partial sums

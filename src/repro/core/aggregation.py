@@ -1,0 +1,144 @@
+"""Pytree-level secure aggregation — the paper's technique as a library.
+
+``SecureAggregator`` is the single entry point both backends use:
+
+* flatten a gradient/weight pytree into one contiguous codeword vector
+  (the paper's "parallel mechanism ... on the entire model tensors"),
+* encode to fixed point,
+* split into shares (additive / Shamir),
+* hand the shares to a *transport* (simulation message-passing or SPMD
+  collectives) that returns the summed shares,
+* reconstruct + decode + divide by the party count -> FedAvg mean.
+
+The aggregator itself is transport-agnostic; the message/wire behaviour
+(two-phase vs P2P, committee, dropouts) lives in ``repro/fl``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import additive, philox, shamir
+from .fixed_point import FixedPointConfig, DEFAULT_FIELD, DEFAULT_RING
+
+SCHEME_ADDITIVE = "additive"
+SCHEME_SHAMIR = "shamir"
+
+
+def flatten_pytree(tree):
+    """Pytree of float arrays -> (flat float32 vector, unflatten fn)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    flat = jnp.concatenate(
+        [jnp.ravel(l).astype(jnp.float32) for l in leaves]) if leaves else \
+        jnp.zeros((0,), jnp.float32)
+
+    def unflatten(vec):
+        out = []
+        off = 0
+        for shape, size in zip(shapes, sizes):
+            out.append(jnp.reshape(vec[off:off + size], shape))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggregator:
+    """Scheme + codec bundle; stateless and jit-friendly.
+
+    Attributes:
+      scheme: ``"additive"`` or ``"shamir"``.
+      m: number of shares each party produces (committee size; equals n
+        in P2P mode).
+      fp: fixed-point codec config (algebra must match the scheme).
+      shamir_degree: polynomial degree (default m-1, paper's choice).
+    """
+
+    scheme: str = SCHEME_ADDITIVE
+    m: int = 3
+    fp: FixedPointConfig | None = None
+    shamir_degree: int | None = None
+
+    def __post_init__(self):
+        if self.scheme not in (SCHEME_ADDITIVE, SCHEME_SHAMIR):
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.fp is None:
+            object.__setattr__(
+                self, "fp",
+                DEFAULT_RING if self.scheme == SCHEME_ADDITIVE
+                else DEFAULT_FIELD)
+        want = "ring" if self.scheme == SCHEME_ADDITIVE else "field"
+        if self.fp.algebra != want:
+            raise ValueError(
+                f"scheme {self.scheme} needs {want} codec, got "
+                f"{self.fp.algebra}")
+
+    # -- party side -----------------------------------------------------
+
+    def encode(self, flat_float):
+        return self.fp.encode(flat_float)
+
+    def make_shares(self, flat_float, *, seed: int, party: int,
+                    round_index: int = 0):
+        """Encode + split one party's flat update into ``[m, D]`` shares."""
+        code = self.encode(flat_float)
+        k0, k1 = philox.derive_key(seed, (round_index << 24) | party)
+        if self.scheme == SCHEME_ADDITIVE:
+            return additive.share(code, self.m, k0, k1)
+        return shamir.share(code, self.m, k0, k1,
+                            degree=self.shamir_degree)
+
+    # -- committee / reconstruction side ---------------------------------
+
+    def reduce_party_shares(self, stacked):
+        """Sum the per-party share stacks (``[n, m, D] -> [m, D]``).
+
+        This is the committee members' *local* aggregation (Alg. 3 l.15):
+        pure ring/field addition thanks to additive homomorphism.
+        """
+        stacked = jnp.asarray(stacked, dtype=jnp.uint32)
+        if self.scheme == SCHEME_ADDITIVE:
+            return jnp.sum(stacked, axis=0, dtype=jnp.uint32)
+        from .field import fsum
+        return fsum(stacked, axis=0)
+
+    def reconstruct_sum(self, member_sums):
+        """Combine committee members' sums (``[m, D] -> [D]`` codewords)."""
+        if self.scheme == SCHEME_ADDITIVE:
+            return additive.reconstruct(member_sums)
+        return shamir.reconstruct(member_sums)
+
+    def decode_mean(self, code_sum, n: int):
+        return self.fp.decode_mean(code_sum, n)
+
+    # -- one-shot reference path (no transport; used by tests) -----------
+
+    def aggregate_reference(self, flats, *, seed: int, round_index: int = 0):
+        """Share->sum->reconstruct->mean for a list of flat updates."""
+        n = len(flats)
+        self.fp.validate_for_parties(n)
+        stacks = jnp.stack([
+            self.make_shares(f, seed=seed, party=i, round_index=round_index)
+            for i, f in enumerate(flats)
+        ])  # [n, m, D]
+        member_sums = self.reduce_party_shares(stacks)
+        total = self.reconstruct_sum(member_sums)
+        return self.decode_mean(total, n)
+
+
+def secure_mean_pytrees(trees, agg: SecureAggregator, *, seed: int,
+                        round_index: int = 0):
+    """Convenience: securely average a list of pytrees (reference path)."""
+    flats_unf = [flatten_pytree(t) for t in trees]
+    flats = [f for f, _ in flats_unf]
+    unflatten = flats_unf[0][1]
+    mean = agg.aggregate_reference(flats, seed=seed, round_index=round_index)
+    return unflatten(mean)

@@ -1,0 +1,83 @@
+"""Phase I — MPC committee election (paper Alg. 2).
+
+Every party draws a batch of ``b`` uniform votes in ``[0, n)``; the vote
+vectors are summed *under secret sharing* (so nobody learns anyone's
+votes), the aggregate is reduced ``mod n``, and the resulting indices
+are tallied; the ``m`` highest-scoring parties form the committee.
+Because the sum of uniform randoms mod n is uniform as long as at least
+one party is honest, no party can bias the outcome.
+
+The paper runs one round with ``b = 10`` ("one round is more than
+sufficient"); we keep the re-draw loop with a bounded retry in case
+fewer than ``m`` distinct indices appear (possible for tiny ``b``).
+
+The message pattern of the election is the standard P2P additive MPC of
+Alg. 1 on a ``b``-vector — the simulation backend routes it through the
+same share/exchange machinery so its messages are counted against
+Eqs. 3–4, and the SPMD backend lowers it to one tiny ``psum``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import philox
+from .additive import share as additive_share
+
+
+@dataclasses.dataclass(frozen=True)
+class ElectionResult:
+    committee: tuple[int, ...]   # party indices, sorted by score desc
+    rounds: int                  # election rounds used
+    tally: np.ndarray            # final per-party vote tally [n]
+
+
+def draw_votes(n: int, b: int, key0, key1, round_index: int = 0):
+    """Party-local uniform votes in ``[0, n)`` as uint32 ``[b]``."""
+    bits = philox.random_bits(b, key0, key1, counter_hi=0x5E1EC7 + round_index)
+    return bits % jnp.uint32(n)
+
+
+def share_votes(votes, n: int, key0, key1):
+    """Secret-share the vote vector among all ``n`` parties (P2P MPC)."""
+    return additive_share(votes, n, key0, key1)
+
+
+def tally_votes(vote_sum, n: int) -> np.ndarray:
+    """Aggregate vote vector -> per-party tally (Alg. 2 lines 22-25)."""
+    idx = np.asarray(vote_sum, dtype=np.uint64) % np.uint64(n)
+    return np.bincount(idx.astype(np.int64), minlength=n)
+
+
+def select_committee(tally: np.ndarray, m: int) -> list[int]:
+    """Top-m parties by tally; deterministic lowest-index tie-break."""
+    order = np.lexsort((np.arange(len(tally)), -tally))
+    voted = [int(i) for i in order if tally[i] > 0]
+    return voted[:m]
+
+
+def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8
+          ) -> ElectionResult:
+    """Full election as every honest party computes it (deterministic
+    given the per-party Philox seeds, which the simulation backend uses
+    to cross-check that all parties agree on ``C``).
+    """
+    if m > n:
+        raise ValueError(f"committee m={m} larger than parties n={n}")
+    committee: list[int] = []
+    tally = np.zeros(n, dtype=np.int64)
+    for r in range(max_rounds):
+        total = jnp.zeros((b,), dtype=jnp.uint32)
+        for i in range(n):
+            k0, k1 = philox.derive_key(seed, (r << 20) | i)
+            total = total + draw_votes(n, b, k0, k1, round_index=r)
+        tally = tally + tally_votes(total, n)
+        committee = select_committee(tally, m)
+        if len(committee) == m:
+            return ElectionResult(tuple(committee), r + 1, tally)
+    raise RuntimeError(
+        f"election failed to fill committee of {m} in {max_rounds} rounds "
+        f"(n={n}, b={b}) — increase b")

@@ -1,0 +1,200 @@
+"""Finite-algebra substrate for MPC on TPU-native ``uint32``.
+
+Two algebraic structures are used by the secret-sharing schemes:
+
+* the ring ``Z_2^32`` (additive secret sharing) — plain ``uint32``
+  arithmetic with two's-complement wraparound; and
+* the Mersenne prime field ``F_p`` with ``p = 2**31 - 1`` (Shamir secret
+  sharing) — multiplication is emulated with 16-bit limb decomposition
+  (TPUs have no 64-bit integer multiply) and reduction uses the Mersenne
+  shift-add identity ``2**31 ≡ 1 (mod p)``.
+
+All functions are shape-polymorphic, jit-friendly, and dtype-strict:
+ring values are ``uint32``; field values are ``uint32`` in ``[0, p)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+
+#: The Mersenne prime 2**31 - 1 used as the Shamir field modulus.
+MERSENNE_P = np.uint32(0x7FFFFFFF)
+#: Python-int view of the modulus (handy for tests / host math).
+MERSENNE_P_INT = int(MERSENNE_P)
+
+_U16_MASK = np.uint32(0xFFFF)
+_U32_MASK = np.uint32(0xFFFFFFFF)
+
+
+def _u32(x) -> jnp.ndarray:
+    """Cast to uint32 (no-op if already)."""
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# 32x32 -> 64 bit multiply via 16-bit limbs (no uint64 anywhere)
+# ---------------------------------------------------------------------------
+
+def mulhilo32(a, b):
+    """Full 64-bit product of two uint32 arrays as a ``(hi, lo)`` pair.
+
+    Decomposes each operand into 16-bit limbs; every partial product then
+    fits exactly in uint32 and carries are propagated manually.  This is
+    the same sequence the Pallas kernels use on the TPU VPU.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    al = a & _U16_MASK
+    ah = a >> 16
+    bl = b & _U16_MASK
+    bh = b >> 16
+
+    ll = al * bl          # <= (2^16-1)^2 < 2^32, exact
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+
+    # Sum the three contributions to bits [16, 48): carry shows up in `mid`.
+    mid = (ll >> 16) + (lh & _U16_MASK) + (hl & _U16_MASK)   # <= 3*(2^16-1)
+    lo = (mid << 16) | (ll & _U16_MASK)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def mullo32(a, b):
+    """Low 32 bits of the product (ring Z_2^32 multiply)."""
+    return _u32(a) * _u32(b)
+
+
+# ---------------------------------------------------------------------------
+# Ring Z_2^32 (additive secret sharing)
+# ---------------------------------------------------------------------------
+
+def ring_add(a, b):
+    return _u32(a) + _u32(b)
+
+
+def ring_sub(a, b):
+    return _u32(a) - _u32(b)
+
+
+def ring_neg(a):
+    return jnp.uint32(0) - _u32(a)
+
+
+def ring_sum(x, axis=0):
+    """Wraparound sum along ``axis``."""
+    return jnp.sum(_u32(x), axis=axis, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Mersenne-31 field F_p, p = 2^31 - 1
+# ---------------------------------------------------------------------------
+
+def mersenne_reduce(x):
+    """Reduce a uint32 in ``[0, 2^32)`` to ``[0, p)``.
+
+    ``x = q*2^31 + r  =>  x ≡ q + r (mod p)`` with ``q ∈ {0,1}``; one
+    conditional subtract finishes the job.
+    """
+    x = _u32(x)
+    t = (x & MERSENNE_P) + (x >> 31)
+    return jnp.where(t >= MERSENNE_P, t - MERSENNE_P, t)
+
+
+def fadd(a, b):
+    """Field add: operands must be in ``[0, p)``; sum < 2^32 is safe."""
+    return mersenne_reduce(_u32(a) + _u32(b))
+
+
+def fsub(a, b):
+    a = _u32(a)
+    b = _u32(b)
+    return jnp.where(a >= b, a - b, a + MERSENNE_P - b)
+
+
+def fneg(a):
+    a = _u32(a)
+    return jnp.where(a == 0, a, MERSENNE_P - a)
+
+
+def fmul(a, b):
+    """Field multiply via (hi,lo) 64-bit product and ``2^32 ≡ 2 (mod p)``.
+
+    value = hi*2^32 + lo ≡ 2*hi + lo.  With a,b < p: hi < 2^30 so
+    ``2*hi`` fits; ``lo`` is first folded to <= p+1 so the final sum
+    stays below 2^32.
+    """
+    hi, lo = mulhilo32(a, b)
+    lo_folded = (lo & MERSENNE_P) + (lo >> 31)        # <= p + 1
+    total = hi + hi + lo_folded                       # < 2^32, exact
+    return mersenne_reduce(total)
+
+
+def fpow(a, e: int):
+    """Field exponentiation by a *static* Python-int exponent."""
+    a = _u32(a)
+    result = jnp.full_like(a, 1)
+    base = a
+    e = int(e)
+    while e > 0:
+        if e & 1:
+            result = fmul(result, base)
+        base = fmul(base, base)
+        e >>= 1
+    return result
+
+
+def finv(a):
+    """Field inverse via Fermat: a^(p-2)."""
+    return fpow(a, MERSENNE_P_INT - 2)
+
+
+def fsum(x, axis=0):
+    """Field sum along an axis (log-depth pairwise with lazy reduction).
+
+    Simple approach: accumulate with ``fadd`` via a fori-style reduce.
+    For small axis sizes (shares: m or n <= a few hundred) a Python loop
+    unrolled over the axis is fine and keeps everything exact.
+    """
+    x = _u32(x)
+    n = x.shape[axis]
+    x = jnp.moveaxis(x, axis, 0)
+    acc = x[0]
+    for i in range(1, n):
+        acc = fadd(acc, x[i])
+    return acc
+
+
+def to_field(x):
+    """Map arbitrary uint32 words into ``[0, p)``.
+
+    Masks to 31 bits then folds the single out-of-range value ``p`` to 0.
+    The resulting distribution is uniform up to a 2^-31 bias on 0 —
+    negligible for mask/coefficient sampling and irrelevant for
+    correctness (any value in ``[0, p)`` is a valid field element).
+    """
+    r = _u32(x) & MERSENNE_P
+    return jnp.where(r == MERSENNE_P, jnp.uint32(0), r)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy, arbitrary precision) oracles for tests
+# ---------------------------------------------------------------------------
+
+def np_fmul(a, b):
+    """Pure numpy/python reference field multiply (object/int64-free)."""
+    a64 = np.asarray(a, dtype=np.uint64)
+    b64 = np.asarray(b, dtype=np.uint64)
+    return ((a64 * b64) % np.uint64(MERSENNE_P_INT)).astype(np.uint32)
+
+
+def np_fadd(a, b):
+    a64 = np.asarray(a, dtype=np.uint64)
+    b64 = np.asarray(b, dtype=np.uint64)
+    return ((a64 + b64) % np.uint64(MERSENNE_P_INT)).astype(np.uint32)

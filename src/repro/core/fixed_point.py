@@ -1,0 +1,113 @@
+"""Float <-> fixed-point codec for secret-shared aggregation.
+
+MPC share schemes operate over integer rings/fields; model tensors are
+floats.  We encode ``x`` as ``round(clip(x) * 2**frac_bits)`` in two's
+complement inside ``uint32`` (ring) or ``[0, p)`` (field), sum under the
+scheme, decode, and divide by the party count — i.e. FedAvg's mean is
+computed exactly (up to quantization) under encryption.
+
+Headroom contract: with ``frac_bits = f`` and values clipped to
+``[-clip, clip]``, a sum of ``n`` parties stays within the representable
+range iff ``n * clip * 2**f < 2**31`` (ring) / ``< (p-1)/2`` (field).
+``FixedPointConfig.validate_for_parties`` enforces this at setup time —
+violating it is a *configuration* bug, not a runtime surprise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .field import MERSENNE_P, MERSENNE_P_INT
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointConfig:
+    """Quantization contract for secure aggregation.
+
+    Attributes:
+      frac_bits: fractional bits ``f`` — resolution is ``2**-f``.
+      clip: symmetric clip range applied before encoding.
+      algebra: ``"ring"`` (Z_2^32, additive scheme) or ``"field"``
+        (F_{2^31-1}, Shamir scheme).
+    """
+
+    frac_bits: int = 16
+    clip: float = 64.0
+    algebra: str = "ring"
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def modulus(self) -> int:
+        return 2 ** 32 if self.algebra == "ring" else MERSENNE_P_INT
+
+    def max_parties(self) -> int:
+        """Largest n for which a sum of encoded values cannot wrap."""
+        half = self.modulus // 2
+        return int(half // (self.clip * self.scale))
+
+    def validate_for_parties(self, n: int) -> None:
+        if n > self.max_parties():
+            raise ValueError(
+                f"fixed-point headroom violated: n={n} parties with "
+                f"clip={self.clip}, frac_bits={self.frac_bits} allows at "
+                f"most {self.max_parties()} parties; lower clip or "
+                f"frac_bits")
+
+    # -- ring codec ---------------------------------------------------------
+
+    def encode(self, x):
+        """float array -> uint32 codeword array."""
+        x = jnp.clip(jnp.asarray(x, dtype=jnp.float32), -self.clip, self.clip)
+        q = jnp.round(x * self.scale).astype(jnp.int32)
+        if self.algebra == "ring":
+            return q.astype(jnp.uint32)
+        # field: represent negatives as p - |q|
+        qu = jnp.where(q < 0,
+                       MERSENNE_P - (-q).astype(jnp.uint32),
+                       q.astype(jnp.uint32))
+        return qu
+
+    def decode(self, w, count: int = 1):
+        """uint32 codeword array -> float array.
+
+        ``count`` is how many encoded values were summed; the decoded sum
+        is interpreted in the symmetric range around zero for the wider
+        accumulated magnitude, then scaled back to a *mean* by the
+        caller if desired (we return the exact sum here).
+        """
+        w = jnp.asarray(w, dtype=jnp.uint32)
+        if self.algebra == "ring":
+            signed = w.astype(jnp.int32)  # two's-complement reinterpret
+            return signed.astype(jnp.float32) / self.scale
+        # field: values > p/2 are negative
+        half = jnp.uint32(MERSENNE_P_INT // 2)
+        is_neg = w > half
+        mag = jnp.where(is_neg, MERSENNE_P - w, w).astype(jnp.float32)
+        return jnp.where(is_neg, -mag, mag) / self.scale
+
+    def decode_mean(self, w, n: int):
+        """Decode a ring/field sum of ``n`` encodings into their mean."""
+        return self.decode(w, count=n) / float(n)
+
+    def quant_error_bound(self, n: int = 1) -> float:
+        """Worst-case |decode(sum encode) - sum| = n * 0.5 ulp."""
+        return float(n) * 0.5 / self.scale
+
+
+#: Paper-faithful default: Q15.16, clip 64 — supports up to 2^15/64 = 512
+#: parties in the ring before headroom runs out.
+DEFAULT_RING = FixedPointConfig(frac_bits=16, clip=64.0, algebra="ring")
+DEFAULT_FIELD = FixedPointConfig(frac_bits=16, clip=64.0, algebra="field")
+
+
+def np_encode(cfg: FixedPointConfig, x):
+    """numpy oracle for tests."""
+    x = np.clip(np.asarray(x, dtype=np.float32), -cfg.clip, cfg.clip)
+    q = np.round(x * cfg.scale).astype(np.int64)
+    return (q % cfg.modulus).astype(np.uint32)

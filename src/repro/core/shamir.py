@@ -1,0 +1,122 @@
+"""Shamir secret sharing over the Mersenne-31 field (paper §III-A).
+
+A secret ``v`` is the constant term of a random degree-``d`` polynomial
+``q(x) = v + a_1 x + ... + a_d x^d`` over ``F_p`` (p = 2^31 - 1); share
+``w`` is ``q(x_w)`` at the public evaluation point ``x_w = w`` (1-based).
+Any ``d+1`` shares reconstruct ``v = q(0)`` by Lagrange interpolation.
+
+The paper chooses ``d = m - 1`` for the committee of size ``m`` (all
+shares needed; the committee-collusion threshold the paper assumes).
+We keep ``d`` configurable so sub-threshold settings (dropout-tolerant
+reconstruction from any ``d+1`` of ``m``) also work — that is what makes
+Shamir the *fault-tolerant* scheme in this framework.
+
+Addition MPC: shares are additively homomorphic —
+``q_sum(x_w) = Σ_i q_i(x_w)`` — so committee aggregation is the field
+sum of received shares, identical dataflow to the additive scheme.
+
+Bulk ("parallel MPC") layout: the secret is a whole codeword vector;
+coefficients are Philox-derived vectors; evaluation is Horner's rule,
+``d`` fused multiply-adds over the full tensor per share.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import philox
+from .field import (MERSENNE_P_INT, fadd, finv, fmul, fsub, fsum, to_field)
+
+
+def _eval_points(m: int):
+    """Public evaluation points 1..m as uint32 scalars."""
+    return [np.uint32(w + 1) for w in range(m)]
+
+
+def share(v, m: int, key0, key1, degree: int | None = None):
+    """Split field-codeword vector ``v`` into ``m`` Shamir shares.
+
+    Args:
+      v: uint32 array in ``[0, p)`` (any shape).
+      m: number of shares / evaluation points.
+      degree: polynomial degree ``d`` (default ``m - 1``, the paper's
+        choice); reconstruction needs any ``d+1`` shares.
+
+    Returns:
+      uint32 ``[m, *v.shape]`` of shares, entries in ``[0, p)``.
+    """
+    d = (m - 1) if degree is None else degree
+    if not 0 <= d < m:
+        raise ValueError(f"degree {d} must satisfy 0 <= d < m={m}")
+    v = jnp.asarray(v, dtype=jnp.uint32)
+    coeffs = [
+        to_field(philox.random_bits_like(v, key0, key1, counter_hi=j + 1))
+        for j in range(d)
+    ]  # a_1 .. a_d
+    shares = []
+    for x in _eval_points(m):
+        # Horner: q(x) = ((a_d x + a_{d-1}) x + ... ) x + v
+        acc = jnp.zeros_like(v)
+        for a in reversed(coeffs):
+            acc = fadd(fmul(acc, x), a)
+        acc = fadd(fmul(acc, x), v)
+        shares.append(acc)
+    return jnp.stack(shares, axis=0)
+
+
+@functools.lru_cache(maxsize=64)
+def lagrange_weights_at_zero(points: tuple[int, ...]) -> tuple[int, ...]:
+    """Lagrange basis weights ``w_k = Π_{j≠k} x_j / (x_j - x_k)`` at 0.
+
+    Computed in exact Python integer arithmetic mod p (host side — these
+    are tiny scalars), returned as Python ints for embedding as kernel
+    constants.
+    """
+    p = MERSENNE_P_INT
+    ws = []
+    for k, xk in enumerate(points):
+        num, den = 1, 1
+        for j, xj in enumerate(points):
+            if j == k:
+                continue
+            num = (num * xj) % p
+            den = (den * ((xj - xk) % p)) % p
+        ws.append((num * pow(den, p - 2, p)) % p)
+    return tuple(ws)
+
+
+def reconstruct(shares, points: tuple[int, ...] | None = None):
+    """Interpolate ``q(0)`` from shares.
+
+    Args:
+      shares: uint32 ``[k, ...]`` — shares at ``points`` (default the
+        first ``k`` canonical points ``1..k``).
+    """
+    shares = jnp.asarray(shares, dtype=jnp.uint32)
+    k = shares.shape[0]
+    if points is None:
+        points = tuple(range(1, k + 1))
+    if len(points) != k:
+        raise ValueError("points/shares length mismatch")
+    ws = lagrange_weights_at_zero(tuple(int(x) for x in points))
+    acc = fmul(shares[0], np.uint32(ws[0]))
+    for i in range(1, k):
+        acc = fadd(acc, fmul(shares[i], np.uint32(ws[i])))
+    return acc
+
+
+def aggregate_shares(per_party_shares):
+    """Committee aggregation: field-sum over parties, then interpolate.
+
+    Args:
+      per_party_shares: uint32 ``[n, m, ...]``.
+
+    Returns:
+      uint32 ``[...]`` — the encoded field sum of all parties' secrets.
+    """
+    s = jnp.asarray(per_party_shares, dtype=jnp.uint32)
+    committee_sums = fsum(s, axis=0)     # [m, ...] — local sums per member
+    return reconstruct(committee_sums)   # exchange + interpolate

@@ -1,0 +1,7 @@
+from .faults import RoundOutcome, apply_faults, quorum_met
+from .rounds import FedAvgConfig, FedAvgResult, run_fedavg
+from .simulation import FLSimulation, Network, PhaseStats
+
+__all__ = ["FLSimulation", "Network", "PhaseStats", "FedAvgConfig",
+           "FedAvgResult", "run_fedavg", "RoundOutcome", "apply_faults",
+           "quorum_met"]

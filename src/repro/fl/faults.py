@@ -1,0 +1,49 @@
+"""Fault model: crashes, stragglers, elastic membership.
+
+Production-FL failure semantics (Bonawitz et al. system design),
+applied per round:
+
+* **crash/dropout** — a party fails before uploading shares; the round
+  aggregates over survivors (mean re-weighted to ``n_alive``).  With
+  per-round share masks this is safe for the additive scheme: a missing
+  party simply contributes nothing (its masks never entered any sum).
+* **straggler** — a party whose simulated latency exceeds the round
+  deadline is treated as dropped for that round (quorum aggregation);
+  it rejoins the next round automatically.
+* **elastic membership** — join/leave between rounds; the driver
+  re-runs Phase I election whenever membership changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RoundOutcome:
+    alive: set
+    dropped: set
+    straggled: set
+
+
+def apply_faults(members: set, latency_s: dict[int, float],
+                 deadline_s: float | None, *, seed: int = 0,
+                 crash_prob: float = 0.0) -> RoundOutcome:
+    rng = np.random.RandomState(seed)
+    dropped = {i for i in members if rng.rand() < crash_prob}
+    straggled = set()
+    if deadline_s is not None:
+        straggled = {i for i in members - dropped
+                     if latency_s.get(i, 0.0) > deadline_s}
+    alive = set(members) - dropped - straggled
+    if not alive:
+        # quorum floor: never lose the round entirely; keep fastest party
+        fastest = min(members, key=lambda i: latency_s.get(i, 0.0))
+        alive = {fastest}
+    return RoundOutcome(alive=alive, dropped=dropped, straggled=straggled)
+
+
+def quorum_met(alive: set, n: int, quorum_frac: float = 0.5) -> bool:
+    return len(alive) >= max(1, int(np.ceil(n * quorum_frac)))

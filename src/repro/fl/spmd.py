@@ -1,0 +1,233 @@
+"""The two-phase MPC protocol as SPMD mesh collectives (the scale path).
+
+Called *inside* a ``jax.shard_map`` that is **manual over the party
+axes** (``pod``, ``data``) and GSPMD-auto over ``model``.  Per party:
+
+  encode -> Philox share-gen (Pallas kernel / jnp oracle) ->
+  collective share-sum over the party axis -> reconstruct -> decode.
+
+Wire-fidelity mapping (DESIGN.md §2.2):
+
+* ``mode="psum"`` — paper-faithful dataflow: the ``[m, …]`` share stack
+  is ``psum``-med over the party axis.  Every party transmits exactly
+  its m masked shares and receives the summed stack (committee sum +
+  broadcast riding one reduction tree); per-device collective bytes
+  ∝ m·s versus n·s for P2P — the paper's headline n→m reduction.
+* ``mode="reduce_scatter"`` — beyond-paper optimization: shares are
+  ``psum_scatter``-ed (each party reconstructs 1/n of the model and
+  ``all_gather`` redistributes), halving traffic and sharding the
+  decode n ways.  Privacy is unchanged — only masked shares cross the
+  wire (DESIGN.md §6).
+* ``mode="p2p"`` — the paper's baseline: n shares per party (m = n),
+  psum'd.  Collective bytes ∝ n·s; exists to measure the gap.
+* ``mode="plain"`` — no MPC (the paper's "withoutMPC" curve).
+
+Shamir shares live in F_p so a raw ring ``psum`` could overflow; they
+are psum'd in a 16/16-bit split-limb representation (exact for up to
+65536 parties), then folded mod p — see ``field_psum``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import philox
+from repro.core.field import MERSENNE_P, mersenne_reduce, mulhilo32
+from repro.core.fixed_point import FixedPointConfig, DEFAULT_FIELD, DEFAULT_RING
+from repro.kernels.share_gen.ops import share_gen, unpad_flat
+from repro.kernels.share_gen.ref import share_gen_ref
+from repro.kernels.reconstruct.ops import reconstruct
+from repro.kernels.shamir.ops import shamir_share, shamir_reconstruct
+
+LANES = 128
+
+
+def party_index(party_axes: Sequence[str]):
+    """Linear party id from the manual mesh axes."""
+    idx = jnp.int32(0)
+    for ax in party_axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def party_count(party_axes: Sequence[str]) -> int:
+    n = 1
+    for ax in party_axes:
+        n *= jax.lax.axis_size(ax)
+    return n
+
+
+def field_psum(x, party_axes: Sequence[str]):
+    """Overflow-safe psum of F_p values: split-limb sum + Mersenne fold."""
+    lo = x & jnp.uint32(0xFFFF)
+    hi = x >> 16
+    lo_s = lo
+    hi_s = hi
+    for ax in party_axes:
+        lo_s = jax.lax.psum(lo_s, ax)
+        hi_s = jax.lax.psum(hi_s, ax)
+    # total = hi_s * 2^16 + lo_s  (hi_s, lo_s < 2^21 for n <= 2^5·...)
+    ph, pl = mulhilo32(hi_s, jnp.uint32(1 << 16))
+    acc = mersenne_reduce(pl)
+    # fold the (tiny) high word: 2^32 ≡ 2 (mod p)
+    acc = mersenne_reduce(acc + ph + ph)
+    return mersenne_reduce(acc + mersenne_reduce(lo_s))
+
+
+def _pad_len(d: int, block_rows: int, n_parties: int) -> int:
+    tile = LANES * block_rows * n_parties
+    return -(-d // tile) * tile
+
+
+def secure_aggregate(flat, *, scheme: str = "additive", m: int = 3,
+                     party_axes: Sequence[str] = ("data",),
+                     seed: int = 0, round_index: int = 0,
+                     mode: str = "psum", block_rows: int = 64,
+                     use_kernel: bool | None = None,
+                     fp: FixedPointConfig | None = None,
+                     tp_axis: str | None = None):
+    """Securely average per-party ``flat`` float32 [D] across parties.
+
+    Must run inside shard_map manual over ``party_axes``.  Returns the
+    aggregated mean [D] (identical on every party).
+
+    ``tp_axis``: optional GSPMD-auto mesh axis to keep the padded
+    codeword stream sharded over — without it, raveling a TP-sharded
+    gradient leaf re-replicates it and the share stack psum moves
+    TP×-more bytes (§Perf finding #1).
+    """
+    n = party_count(party_axes)
+    d = flat.shape[0]
+
+    if mode == "plain":
+        total = flat
+        for ax in party_axes:
+            total = jax.lax.psum(total, ax)
+        return total / n
+
+    if mode == "p2p":
+        m = n
+    fp = fp or (DEFAULT_RING if scheme == "additive" else DEFAULT_FIELD)
+    fp.validate_for_parties(n)
+    use_ref = not (use_kernel if use_kernel is not None
+                   else jax.default_backend() == "tpu")
+
+    # pad so rows divide evenly among parties for the scatter path
+    dp = _pad_len(d, block_rows, n)
+    flat_p = jnp.pad(flat, (0, dp - d))
+    if tp_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        flat_p = jax.lax.with_sharding_constraint(flat_p, P(tp_axis))
+
+    pid = party_index(party_axes)
+    k0, k1 = philox.derive_key(seed, round_index)
+    # per-party key separation via counter_hi base (party id in the
+    # Philox counter stream; key itself is round-global so the kernel
+    # signature stays static)
+    hi_base = pid * jnp.uint32(64)
+
+    if scheme == "additive":
+        shares, _ = _share_dynamic(flat_p, m, k0, k1, fp, hi_base,
+                                   block_rows, use_ref)
+        if mode == "reduce_scatter":
+            # scatter rows over the (last) party axis, sum en route
+            scat = shares
+            for ax in party_axes:
+                scat = jax.lax.psum_scatter(scat, ax, scatter_dimension=1,
+                                            tiled=True)
+            rec_shard = reconstruct(scat, n, fp, block_rows=block_rows,
+                                    use_ref=use_ref)
+            rec = rec_shard
+            for ax in reversed(party_axes):
+                rec = jax.lax.all_gather(rec, ax, axis=0, tiled=True)
+        else:
+            summed = shares
+            for ax in party_axes:
+                summed = jax.lax.psum(summed, ax)
+            rec = reconstruct(summed, n, fp, block_rows=block_rows,
+                              use_ref=use_ref)
+        return rec.reshape(-1)[:d]
+
+    # --- Shamir ------------------------------------------------------------
+    shares, _ = shamir_share(flat_p, m, k0, k1, fp, hi_base=0,
+                             block_rows=block_rows, use_ref=True) \
+        if use_ref else shamir_share(flat_p, m, k0, k1, fp,
+                                     block_rows=block_rows)
+    summed = field_psum(shares, party_axes)
+    rec = shamir_reconstruct(summed, n, fp, block_rows=block_rows,
+                             use_ref=use_ref)
+    return rec.reshape(-1)[:d]
+
+
+def _share_dynamic(flat_p, m, k0, k1, fp, hi_base, block_rows, use_ref):
+    """share_gen with a *traced* per-party counter_hi base.
+
+    The Pallas kernel takes ``hi_base`` statically; for the SPMD path we
+    fold the party id into the Philox key instead (equivalent stream
+    separation) and call with hi_base=0.
+    """
+    k0p = k0 ^ (hi_base * jnp.uint32(0x9E3779B9))
+    k1p = k1 + hi_base
+    return share_gen(flat_p, m, k0p, k1p, fp, hi_base=0,
+                     block_rows=block_rows, use_ref=use_ref)
+
+
+def secure_aggregate_tree(tree, **kw):
+    """Pytree wrapper: secure-aggregate **leaf-wise**.
+
+    Leaf-wise (vs one concatenated flat) matters twice at scale:
+      * a 7B-param concat exceeds the 2^31 single-dimension limit, and
+      * concatenation would force GSPMD to re-gather model-sharded
+        gradient leaves; per-leaf aggregation preserves their TP
+        sharding so share-gen/reduce compute stays distributed.
+    Counter streams are separated per leaf via a path-derived key tweak.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    max_chunk = 1 << 30   # stay under XLA's 2^31 single-dim limit
+    out = []
+    for path, leaf in flat:
+        tag = hash("/".join(str(p) for p in path)) & 0x7FFFFFFF
+        kw_leaf = dict(kw)
+        kw_leaf["seed"] = (kw.get("seed", 0) ^ tag) & 0x7FFFFFFF
+        fl = jnp.ravel(leaf).astype(jnp.float32)
+        if fl.shape[0] <= max_chunk:
+            mean = secure_aggregate(fl, **kw_leaf)
+        else:
+            pieces = []
+            for ci, off in enumerate(range(0, fl.shape[0], max_chunk)):
+                kw_c = dict(kw_leaf)
+                kw_c["seed"] = (kw_leaf["seed"] ^ (0x51ED << 8) ^ ci) \
+                    & 0x7FFFFFFF
+                pieces.append(secure_aggregate(
+                    fl[off:off + max_chunk], **kw_c))
+            mean = jnp.concatenate(pieces)
+        out.append(mean.reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Phase I election on the mesh (tiny psum — cost is negligible, as the
+# paper measures; returns the committee for metadata/seed derivation)
+# ---------------------------------------------------------------------------
+
+def elect_committee_spmd(n: int, m: int, b: int, seed: int,
+                         party_axes: Sequence[str] = ("data",)):
+    """Alg. 2 as one tiny uint32 psum over the party axis."""
+    pid = party_index(party_axes)
+    k0, k1 = philox.derive_key(seed, 0x0C0FFEE)
+    bits = philox.random_bits(b, k0 ^ pid.astype(jnp.uint32), k1)
+    votes = bits % jnp.uint32(n)
+    total = votes
+    for ax in party_axes:
+        total = jax.lax.psum(total, ax)
+    total = total % jnp.uint32(n)
+    tally = jnp.zeros((n,), jnp.int32).at[total.astype(jnp.int32)].add(1)
+    # deterministic top-m with lowest-index tie-break
+    score = tally * n - jnp.arange(n, dtype=jnp.int32)
+    _, top = jax.lax.top_k(score, m)
+    return top

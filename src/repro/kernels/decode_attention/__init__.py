@@ -1,0 +1,7 @@
+from .ops import decode_attention, decode_attention_partial
+from .ref import decode_attention_ref, combine_partials
+from .kernel import decode_attention_pallas
+
+__all__ = ["decode_attention", "decode_attention_partial",
+           "decode_attention_ref", "combine_partials",
+           "decode_attention_pallas"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: KV-blocked decode attention (FlashDecoding on TPU).
+
+One new token attends to a (possibly sharded) KV cache.  The query for
+all ``group`` heads of one KV head forms the MXU M-dimension (a
+``[group, D] @ [D, BK]`` contraction per block), so GQA is what makes
+decode MXU-viable at all — with group=16 (qwen3) each block is a
+16×D×BK matmul instead of 16 vector-matrix sweeps.
+
+Emits unnormalized partials + LSE stats so a mesh-axis ``psum`` can
+combine sequence shards exactly (see ``ref.combine_partials``); the
+normalization division happens after the combine, outside the kernel.
+
+Grid: ``(B, Hkv, S/BK)``, last dim sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                   acc_scr, m_scr, l_scr, *,
+                   sm_scale: float, block_k: int, kv_len: int,
+                   group: int):
+    kb = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [group, D]
+    k = k_ref[0, 0].astype(jnp.float32)          # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)          # [BK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    k_idx = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (group, block_k), 1)
+    s = jnp.where(k_idx >= kv_len, NEG_INF, s)   # ragged-cache mask
+
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        acc_ref[0, 0] = acc_scr[...].astype(acc_ref.dtype)
+        m_ref[0, 0] = m_scr[...].astype(m_ref.dtype)
+        l_ref[0, 0] = l_scr[...].astype(l_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, *, kv_len: int | None = None,
+                            sm_scale: float | None = None,
+                            block_k: int = 512, interpret: bool = False):
+    """q: [B,Hq,D], k/v: [B,Hkv,S,D] ->
+    (acc [B,Hq,D], m [B,Hq,128], l [B,Hq,128]) — stats lane-broadcast.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    scale = sm_scale if sm_scale is not None else float(1.0 / d ** 0.5)
+    kv_len = s if kv_len is None else kv_len
+
+    q4 = q.reshape(b, hkv, group, d)
+    kernel = functools.partial(_decode_kernel, sm_scale=scale,
+                               block_k=block_k, kv_len=kv_len, group=group)
+    grid = (b, hkv, s // block_k)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, kb: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, kb: (b_, h, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, kb: (b_, h, kb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, kb: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, LANES),
+                         lambda b_, h, kb: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, LANES),
+                         lambda b_, h, kb: (b_, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q4, k, v)
+    return (acc.reshape(b, hq, d),
+            m.reshape(b, hq, LANES)[:, :, 0],
+            l.reshape(b, hq, LANES)[:, :, 0])

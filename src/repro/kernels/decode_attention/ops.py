@@ -1,0 +1,45 @@
+"""Jit'd wrapper for decode attention: partials or fully-normalized."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref, combine_partials
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_len", "sm_scale", "block_k", "use_ref", "interpret"))
+def decode_attention_partial(q, k, v, *, kv_len: int | None = None,
+                             sm_scale: float | None = None,
+                             block_k: int = 512, use_ref: bool = False,
+                             interpret: bool | None = None):
+    """Returns (acc, m, l) for cross-shard LSE combination."""
+    s, d = k.shape[2], k.shape[3]
+    group = q.shape[1] // k.shape[1]
+    if use_ref or s % 128 != 0 or group % 8 != 0:
+        return decode_attention_ref(q, k, v, kv_len=kv_len,
+                                    sm_scale=sm_scale)
+    ip = (not _on_tpu()) if interpret is None else interpret
+    return decode_attention_pallas(q, k, v, kv_len=kv_len,
+                                   sm_scale=sm_scale, block_k=block_k,
+                                   interpret=ip)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_len", "sm_scale", "block_k", "use_ref", "interpret"))
+def decode_attention(q, k, v, *, kv_len: int | None = None,
+                     sm_scale: float | None = None, block_k: int = 512,
+                     use_ref: bool = False, interpret: bool | None = None):
+    """Fully-normalized decode attention for the unsharded-KV case."""
+    acc, m, l = decode_attention_partial(
+        q, k, v, kv_len=kv_len, sm_scale=sm_scale, block_k=block_k,
+        use_ref=use_ref, interpret=interpret)
+    return combine_partials(acc[None], m[None], l[None]).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for single-token (decode) attention with LSE partials.
+
+Contract: given one query token per sequence against a KV cache shard,
+return the *unnormalized* accumulator plus the log-sum-exp statistics
+
+    acc[b,h,:] = Σ_j exp(s_j − m) · v_j,   m = max_j s_j,   l = Σ_j exp(s_j − m)
+
+so that shards of the KV sequence can be combined exactly:
+
+    M = max_i m_i;  out = Σ_i acc_i·e^{m_i−M} / Σ_i l_i·e^{m_i−M}
+
+(`combine_partials` below).  This is FlashDecoding's split-K scheme
+mapped onto a TPU mesh axis: each model-axis device owns a sequence
+shard of the KV cache and the combine is one tiny ``psum``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, kv_len=None, sm_scale=None):
+    """q: [B,Hq,D], k/v: [B,Hkv,S,D] -> (acc [B,Hq,D], m [B,Hq], l [B,Hq]).
+
+    ``kv_len``: optional valid-length (int or [B] array) — positions >=
+    kv_len are masked (ragged cache support).
+    """
+    b, hq, dd = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(dd)
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kk) * scale
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        valid = jnp.arange(s)[None, None, :] < kv_len.reshape(-1, 1, 1)
+        scores = jnp.where(valid, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    e = jnp.exp(scores - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhs,bhsd->bhd", e, vv)
+    return acc, m, l
+
+
+def combine_partials(accs, ms, ls):
+    """Merge shard partials along a leading shard axis.
+
+    accs: [P,B,H,D], ms/ls: [P,B,H] -> normalized out [B,H,D].
+    """
+    m_glob = jnp.max(ms, axis=0)                       # [B,H]
+    w = jnp.exp(ms - m_glob[None])                     # [P,B,H]
+    num = jnp.sum(accs * w[..., None], axis=0)
+    den = jnp.sum(ls * w, axis=0)
+    return num / den[..., None]

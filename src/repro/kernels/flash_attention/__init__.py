@@ -1,0 +1,5 @@
+from .ops import flash_attention
+from .ref import attention_ref
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention", "attention_ref", "flash_attention_pallas"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for blockwise (flash) attention with GQA.
+
+Semantics: softmax(q·kᵀ·scale + mask) · v with
+  * grouped KV heads (``Hq = group · Hkv``),
+  * optional causal masking,
+  * optional sliding window (``window > 0``: key j visible to query i
+    iff ``i - window < j <= i`` in causal mode).
+
+Numerically the oracle uses the same streaming-softmax recurrence run
+densely, so tolerances against the kernel are tight (fp32 ~1e-6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  sm_scale: float | None = None):
+    """q: [B,Hq,Sq,D], k/v: [B,Hkv,Skv,D] -> [B,Hq,Sq,D] (float32)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+
+    q_idx = jnp.arange(sq)[:, None] + (skv - sq if causal else 0)
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.zeros((sq, skv), dtype=bool)
+    if causal:
+        mask = mask | (k_idx > q_idx)
+    if window and window > 0:
+        mask = mask | (k_idx <= q_idx - window)
+    s = jnp.where(mask[None, None], NEG_INF, s)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    out = jnp.einsum("bhqk,bhkd->bhqd", e, vv.astype(jnp.float32))
+    return out / jnp.sum(e, axis=-1, keepdims=True)

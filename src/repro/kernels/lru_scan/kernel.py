@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused RG-LRU linear scan (Griffin/RecurrentGemma).
+
+Same VMEM-resident-state design as ``kernels/ssm_scan`` but for the
+per-channel recurrence ``h_t = a_t·h_{t-1} + b_t``: the carry lives in
+scratch across sequence blocks, so the log-depth associative-scan tree
+(every level of which the XLA path materializes in HBM —
+EXPERIMENTS.md §Perf pair ①) never exists.  HBM traffic = read a, b +
+write h: the streaming minimum.
+
+Grid ``(B, W/BD, S/BT)``, time-sequential; channels on lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, y_ref, h_scr, *, block_t: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        at = a_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        h = at * h + bt
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h_scr[0, :] = jax.lax.fori_loop(0, block_t, step, h_scr[0, :])
+
+
+def lru_scan_pallas(a, b, *, block_t: int = 128, block_d: int = 128,
+                    interpret: bool = False):
+    """a, b: [B, S, W] -> h [B, S, W] (all states)."""
+    bsz, s, w = a.shape
+    block_t = min(block_t, s)
+    block_d = min(block_d, w)
+    assert s % block_t == 0 and w % block_d == 0, (s, w)
+
+    kernel = functools.partial(_lru_kernel, block_t=block_t)
+    grid = (bsz, w // block_d, s // block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda b_, d, t: (b_, t, d)),
+            pl.BlockSpec((1, block_t, block_d), lambda b_, d, t: (b_, t, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_d),
+                               lambda b_, d, t: (b_, t, d)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((8, block_d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the fused RG-LRU scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import lru_scan_pallas
+from .ref import lru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d",
+                                             "use_ref", "interpret"))
+def lru_scan(a, b, *, block_t: int = 128, block_d: int = 128,
+             use_ref: bool = False, interpret: bool | None = None):
+    s, w = a.shape[1], a.shape[2]
+    if use_ref or s % block_t != 0 or w % 128 != 0:
+        return lru_scan_ref(a, b)
+    ip = (not _on_tpu()) if interpret is None else interpret
+    return lru_scan_pallas(a, b, block_t=block_t, block_d=block_d,
+                           interpret=ip)

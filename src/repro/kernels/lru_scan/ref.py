@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused RG-LRU scan kernel.
+
+First-order gated recurrence over channels (Griffin Eq. 4):
+
+    h_t = a_t ⊙ h_{t-1} + b_t,      y_t = h_t
+
+a, b: [B, S, W]  ->  h: [B, S, W] (all states), fp32 recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a, b, h0=None):
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bsz, s, w = af.shape
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+
+    def step(h, inputs):
+        at, bt = inputs
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (af.swapaxes(0, 1), bf.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,5 @@
+from .ops import reconstruct
+from .ref import reconstruct_ref
+from .kernel import reconstruct_pallas
+
+__all__ = ["reconstruct", "reconstruct_ref", "reconstruct_pallas"]

@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the fused reconstruct kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import reconstruct_pallas
+from .ref import reconstruct_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "cfg", "block_rows",
+                                             "use_ref", "interpret"))
+def reconstruct(shares, n: int, cfg, block_rows: int = 64,
+                use_ref: bool = False, interpret: bool | None = None):
+    """uint32 [m, R, 128] -> float32 [R, 128] decoded mean over n parties."""
+    if use_ref:
+        return reconstruct_ref(shares, n, cfg)
+    ip = (not _on_tpu()) if interpret is None else interpret
+    return reconstruct_pallas(shares, n, cfg, block_rows=block_rows,
+                              interpret=ip)

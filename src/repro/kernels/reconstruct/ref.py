@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused reconstruct kernel.
+
+Contract: given summed share stacks ``S`` (uint32 ``[m, R, 128]``) that
+are the committee members' ring sums over ``n`` parties, produce the
+decoded FedAvg mean ``float32 [R, 128]``:
+
+    mean = int32(S.sum(0)) / 2^f / n
+
+(Alg. 1 lines 13–20 epilogue + fixed-point decode + 1/n, one sweep.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fixed_point import FixedPointConfig
+
+
+def reconstruct_ref(shares, n: int, cfg: FixedPointConfig):
+    assert shares.ndim == 3 and shares.shape[2] == 128, shares.shape
+    assert cfg.algebra == "ring"
+    total = jnp.sum(shares.astype(jnp.uint32), axis=0, dtype=jnp.uint32)
+    signed = total.astype(jnp.int32)
+    return signed.astype(jnp.float32) / (cfg.scale * n)

@@ -1,0 +1,7 @@
+from .ops import shamir_share, shamir_reconstruct
+from .ref import shamir_share_ref, shamir_reconstruct_ref
+from .kernel import shamir_share_pallas, shamir_reconstruct_pallas
+
+__all__ = ["shamir_share", "shamir_reconstruct", "shamir_share_ref",
+           "shamir_reconstruct_ref", "shamir_share_pallas",
+           "shamir_reconstruct_pallas"]

@@ -1,0 +1,52 @@
+"""Jit'd wrappers for the Shamir Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shamir import lagrange_weights_at_zero
+from repro.kernels.share_gen.ops import pad_to_tiles
+from .kernel import shamir_share_pallas, shamir_reconstruct_pallas
+from .ref import shamir_share_ref, shamir_reconstruct_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "cfg", "degree", "hi_base",
+                                    "block_rows", "use_ref", "interpret"))
+def shamir_share(flat, m: int, key0, key1, cfg, degree: int | None = None,
+                 hi_base: int = 0, block_rows: int = 64,
+                 use_ref: bool = False, interpret: bool | None = None):
+    """flat float32 [D] -> (uint32 [m, R, 128] shares, D)."""
+    x2d, d = pad_to_tiles(flat, block_rows)
+    if use_ref:
+        return shamir_share_ref(x2d, m, key0, key1, cfg, degree=degree,
+                                hi_base=hi_base), d
+    ip = (not _on_tpu()) if interpret is None else interpret
+    return shamir_share_pallas(x2d, m, key0, key1, cfg, degree=degree,
+                               hi_base=hi_base, block_rows=block_rows,
+                               interpret=ip), d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "cfg", "points", "block_rows",
+                                    "use_ref", "interpret"))
+def shamir_reconstruct(member_sums, n: int, cfg,
+                       points: tuple[int, ...] | None = None,
+                       block_rows: int = 64, use_ref: bool = False,
+                       interpret: bool | None = None):
+    """uint32 [k, R, 128] field sums -> float32 [R, 128] decoded mean."""
+    if use_ref:
+        return shamir_reconstruct_ref(member_sums, n, cfg, points=points)
+    k = member_sums.shape[0]
+    pts = points or tuple(range(1, k + 1))
+    weights = jnp.asarray(lagrange_weights_at_zero(pts), dtype=jnp.uint32)
+    ip = (not _on_tpu()) if interpret is None else interpret
+    return shamir_reconstruct_pallas(member_sums, weights, n, cfg,
+                                     block_rows=block_rows, interpret=ip)

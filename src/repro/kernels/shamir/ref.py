@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the Shamir Pallas kernels.
+
+Share-gen contract (bit-exact for ``kernel.py``): given float32
+``x [R,128]``,
+
+  1. field fixed-point encode (negatives as ``p - |q|``),
+  2. coefficients ``a_j = to_field(Philox(counter_hi = hi_base + j))``
+     for j = 1..d in the lane-tiled layout,
+  3. share ``w`` = Horner evaluation at ``x_w = w+1`` over F_p.
+
+Reconstruct contract: ``out = decode(Σ_k w_k · s_k mod p) / n`` with the
+Lagrange-at-zero weights ``w_k`` for the canonical points.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import philox
+from repro.core.field import fadd, fmul, to_field, MERSENNE_P, MERSENNE_P_INT
+from repro.core.fixed_point import FixedPointConfig
+from repro.core.shamir import lagrange_weights_at_zero
+
+
+def encode_field(x, cfg: FixedPointConfig):
+    q = jnp.round(jnp.clip(x.astype(jnp.float32), -cfg.clip, cfg.clip)
+                  * cfg.scale).astype(jnp.int32)
+    return jnp.where(q < 0, MERSENNE_P - (-q).astype(jnp.uint32),
+                     q.astype(jnp.uint32))
+
+
+def decode_field_mean(w, n: int, cfg: FixedPointConfig):
+    half = jnp.uint32(MERSENNE_P_INT // 2)
+    is_neg = w > half
+    mag = jnp.where(is_neg, MERSENNE_P - w, w).astype(jnp.float32)
+    return jnp.where(is_neg, -mag, mag) / (cfg.scale * n)
+
+
+def shamir_share_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
+                     degree: int | None = None, hi_base: int = 0,
+                     row_base: int = 0):
+    """float32 [R,128] -> uint32 [m, R, 128] Shamir shares."""
+    assert x.ndim == 2 and x.shape[1] == 128
+    assert cfg.algebra == "field"
+    d = (m - 1) if degree is None else degree
+    rows = x.shape[0]
+    v = encode_field(x, cfg)
+    coeffs = [
+        to_field(philox.tiled_words(rows, key0, key1,
+                                    counter_hi=hi_base + j + 1,
+                                    row_base=row_base))
+        for j in range(d)
+    ]
+    shares = []
+    for w in range(m):
+        xp = np.uint32(w + 1)
+        acc = jnp.zeros_like(v)
+        for a in reversed(coeffs):
+            acc = fadd(fmul(acc, xp), a)
+        acc = fadd(fmul(acc, xp), v)
+        shares.append(acc)
+    return jnp.stack(shares, axis=0)
+
+
+def shamir_reconstruct_ref(member_sums, n: int, cfg: FixedPointConfig,
+                           points: tuple[int, ...] | None = None):
+    """uint32 [k, R, 128] field sums -> float32 [R, 128] decoded mean."""
+    k = member_sums.shape[0]
+    pts = points or tuple(range(1, k + 1))
+    ws = lagrange_weights_at_zero(pts)
+    acc = fmul(member_sums[0], np.uint32(ws[0]))
+    for i in range(1, k):
+        acc = fadd(acc, fmul(member_sums[i], np.uint32(ws[i])))
+    return decode_field_mean(acc, n, cfg)

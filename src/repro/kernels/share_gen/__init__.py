@@ -1,0 +1,6 @@
+from .ops import share_gen, pad_to_tiles, unpad_flat
+from .ref import share_gen_ref
+from .kernel import share_gen_pallas
+
+__all__ = ["share_gen", "pad_to_tiles", "unpad_flat", "share_gen_ref",
+           "share_gen_pallas"]

@@ -1,0 +1,60 @@
+"""Public jit'd wrapper for the fused share-generation kernel.
+
+Handles arbitrary flat lengths (pad to lane/block multiples), picks
+interpret mode automatically off-TPU, and exposes a pytree-flat API the
+SPMD secure-aggregation layer calls directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixed_point import FixedPointConfig
+from .kernel import share_gen_pallas
+from .ref import share_gen_ref
+
+LANES = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to_tiles(flat, block_rows: int):
+    """float32 [D] -> ([R,128], D) with R % block_rows == 0."""
+    d = flat.shape[0]
+    tile = LANES * block_rows
+    padded = -(-d // tile) * tile
+    flat = jnp.pad(flat, (0, padded - d))
+    return flat.reshape(-1, LANES), d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "cfg", "hi_base", "block_rows",
+                                    "use_ref", "interpret"))
+def share_gen(flat, m: int, key0, key1, cfg: FixedPointConfig,
+              hi_base: int = 0, block_rows: int = 64,
+              use_ref: bool = False, interpret: bool | None = None):
+    """Encode + split a flat float32 vector into ``[m, R, 128]`` shares.
+
+    Returns (shares, orig_len).  Padding encodes zeros, which are valid
+    secrets — reconstruction of the pad region yields 0.
+    """
+    x2d, d = pad_to_tiles(flat, block_rows)
+    if use_ref:
+        shares = share_gen_ref(x2d, m, key0, key1, cfg, hi_base=hi_base)
+    else:
+        ip = (not _on_tpu()) if interpret is None else interpret
+        shares = share_gen_pallas(x2d, m, key0, key1, cfg, hi_base=hi_base,
+                                  block_rows=block_rows, interpret=ip)
+    return shares, d
+
+
+def unpad_flat(tiled, d: int):
+    """[..., R, 128] -> [..., D]."""
+    lead = tiled.shape[:-2]
+    return tiled.reshape(*lead, -1)[..., :d]

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused additive share-generation kernel.
+
+Semantics (bit-exact contract for ``kernel.py``): given a float32 tensor
+``x`` viewed as ``[R, 128]`` lane tiles,
+
+  1. fixed-point encode: ``u = uint32(int32(round(clip(x)·2^f)))``,
+  2. masks ``M_j = Philox(counter_hi = hi_base + j)`` for j = 1..m-1
+     in the lane-tiled counter layout of ``philox.tiled_words``,
+  3. shares ``S_j = M_j`` (j < m), ``S_m = u − ΣM_j`` (wraparound).
+
+Invariant: ``S.sum(0) == u`` exactly (ring addition).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import philox
+from repro.core.fixed_point import FixedPointConfig
+
+
+def share_gen_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
+                  hi_base: int = 0, row_base: int = 0):
+    """Oracle share generation.
+
+    Args:
+      x: float32 ``[R, 128]``.
+      m: share count (static).
+      cfg: ring-algebra fixed point config.
+
+    Returns:
+      uint32 ``[m, R, 128]``.
+    """
+    assert x.ndim == 2 and x.shape[1] == 128, x.shape
+    assert cfg.algebra == "ring"
+    rows = x.shape[0]
+    xq = jnp.clip(x.astype(jnp.float32), -cfg.clip, cfg.clip)
+    u = jnp.round(xq * cfg.scale).astype(jnp.int32).astype(jnp.uint32)
+    if m == 1:
+        return u[None]
+    masks = [
+        philox.tiled_words(rows, key0, key1,
+                           counter_hi=hi_base + j + 1, row_base=row_base)
+        for j in range(m - 1)
+    ]
+    last = u
+    for mk in masks:
+        last = last - mk
+    return jnp.stack(masks + [last], axis=0)

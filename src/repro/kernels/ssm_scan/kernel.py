@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused Mamba-1 selective scan.
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §2.4): the
+state ``h [st, BD]`` lives in **VMEM scratch** for the whole sequence —
+the ``[B, S, di, st]`` state tensor that dominates the XLA-path HBM
+traffic (≈12 TB/layer at falcon-mamba train_4k; see EXPERIMENTS.md
+§Perf) never exists.  HBM traffic collapses to the kernel's operands:
+x, dt (di-wide), B, C (st-wide) in and y out — a ~25× cut that moves
+the architecture from memory-bound toward compute/bandwidth balance.
+
+Layout: lanes carry the channel block (``BD = 128``); the tiny state
+dim (st = 16) sits on sublanes.  Grid ``(B, di/BD, S/BT)``, sequential
+over time blocks; within a block a ``fori_loop`` steps one token at a
+time against the VMEM-resident state (on the VPU this is an 8×128
+FMA per step — latency-bound but off the memory roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
+                block_t: int, block_d: int, st: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)              # [BD, st]
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)     # [BD]
+        dtt = dt_ref[0, t, :].astype(jnp.float32)   # [BD]
+        bt = b_ref[0, t, :].astype(jnp.float32)     # [st]
+        ct = c_ref[0, t, :].astype(jnp.float32)     # [st]
+        da = jnp.exp(dtt[None, :] * a.T)            # [st, BD]
+        h = da * h + (dtt * xt)[None, :] * bt[:, None]
+        y = jnp.sum(h * ct[:, None], axis=0)        # [BD]
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_scr[...])
+    h_scr[...] = h
+
+
+def ssm_scan_pallas(x, dt, bc, cc, a, *, block_t: int = 128,
+                    block_d: int = 128, interpret: bool = False):
+    """x, dt: [B,S,di]; bc, cc: [B,S,st]; a: [di,st] -> y [B,S,di]."""
+    bsz, s, di = x.shape
+    st = bc.shape[-1]
+    block_t = min(block_t, s)
+    block_d = min(block_d, di)
+    assert s % block_t == 0 and di % block_d == 0, (s, di)
+
+    kernel = functools.partial(_ssm_kernel, block_t=block_t,
+                               block_d=block_d, st=st)
+    grid = (bsz, di // block_d, s // block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_t, st), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, block_t, st), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((block_d, st), lambda b, d, t: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_d),
+                               lambda b, d, t: (b, t, d)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((st, block_d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, bc, cc, a)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused selective-scan (Mamba-1) kernel.
+
+Semantics (sequential fp32 recurrence — the ground truth the chunked
+associative scan and the Pallas kernel must both match):
+
+    h_t = exp(dt_t ⊗ A) ⊙ h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t
+    y_t = Σ_n h_t[·, n] · C_t[n]
+
+x, dt: [B, S, di];  Bc, Cc: [B, S, st];  A: [di, st]  ->  y: [B, S, di].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, bc, cc, a):
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bcf = bc.astype(jnp.float32)
+    ccf = cc.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bsz, s, di = xf.shape
+    st = bcf.shape[-1]
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs               # [B,di],[B,di],[B,st],[B,st]
+        da = jnp.exp(dtt[..., None] * af[None])          # [B,di,st]
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, st), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         bcf.swapaxes(0, 1), ccf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)                             # [B,S,di]

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the
+device count at first init) — which is why this module must be invoked
+directly (``python -m repro.launch.dryrun``) and is never imported by
+the rest of the package.
+
+Per cell: build the production mesh, the abstract params/opt/cache
+(ShapeDtypeStruct only — nothing is allocated), the step function for
+the cell kind, then ``.lower().compile()`` and record
+
+  * ``compiled.memory_analysis()``  (bytes/device — proves it fits),
+  * ``compiled.cost_analysis()``    (FLOPs/bytes for §Roofline),
+  * parsed per-device collective wire bytes (§Roofline third term)
+
+into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod both] [--skip-existing]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import (SHAPES, get_config, input_specs, skip_reason,
+                               decode_kv_len)
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh, party_count_of
+    from repro.launch.roofline import Roofline, model_flops
+    from repro.launch.steps import (make_prefill, make_serve_step,
+                                    make_train_step)
+    from repro.optim import adamw_init
+
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    if overrides.get("cfg"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides["cfg"])
+    reason = skip_reason(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "status": "skip", "skip_reason": reason}
+    if reason is not None:
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cell = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            gd = overrides.get("gather_dtype")
+            wrap, abs_p, abs_o = make_train_step(
+                cfg, mesh,
+                protocol=overrides.get("protocol", "two_phase"),
+                m=overrides.get("m", 3),
+                agg_mode=overrides.get("agg_mode", "psum"),
+                scheme=overrides.get("scheme", "additive"),
+                attn_impl=overrides.get("attn_impl", "xla_chunked"),
+                local_steps=overrides.get("local_steps", 1),
+                inner_lr=overrides.get("inner_lr", 0.02),
+                gather_dtype={"bf16": jnp.bfloat16}.get(gd),
+                tp_axis=overrides.get("tp_axis"),
+                fsdp=overrides.get("fsdp"))
+            step, _ = wrap(specs)
+            lowered = step.lower(
+                abs_p, abs_o, jax.ShapeDtypeStruct((), jnp.int32), specs)
+            tokens = cell.global_batch * cell.seq
+        elif cell.kind == "prefill":
+            wrap, abs_p = make_prefill(
+                cfg, mesh, attn_impl=overrides.get("attn_impl",
+                                                   "xla_chunked"))
+            step = wrap(specs)
+            lowered = step.lower(abs_p, specs)
+            tokens = cell.global_batch * cell.seq
+        else:
+            wrap, abs_p, abs_c = make_serve_step(
+                cfg, mesh, kv_len=decode_kv_len(shape),
+                batch=cell.global_batch)
+            step = wrap(specs)
+            lowered = step.lower(abs_p, abs_c, specs)
+            tokens = cell.global_batch
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    text = compiled.as_text()
+    t1 = time.time()
+    hlo = analyze_hlo(text, default_group=chips)
+    t_analyze = time.time() - t1
+
+    mf = model_flops(cfg, cell.kind, tokens)
+    roof = Roofline(flops_per_device=hlo.flops,
+                    bytes_per_device=hlo.hbm_bytes,
+                    wire_bytes_per_device=hlo.collective_wire_bytes,
+                    chips=chips, model_flops_global=mf)
+
+    result.update({
+        "status": "ok",
+        "kind": cell.kind,
+        "chips": chips,
+        "tokens": tokens,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "analyze_s": round(t_analyze, 1),
+        "cost_analysis_raw": {k: v for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "memory_analysis": mem_info,
+        "collectives": dict(hlo.collective_by_kind),
+        "collective_counts": dict(hlo.collective_counts),
+        "top_traffic": [[float(b), op, shp]
+                        for b, op, shp in hlo.top_traffic],
+        "collective_bytes_per_device": hlo.collective_wire_bytes,
+        "roofline": roof.to_dict(),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "overrides": overrides,
+    })
+    return result
+
+
+def _cell_filename(arch, shape, multi_pod, tag=""):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh_name}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", choices=["on", "off", "both"],
+                    default="off")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--overrides", default="{}",
+                    help="JSON dict: protocol/m/agg_mode/scheme/fsdp/"
+                         "attn_impl")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    overrides = json.loads(args.overrides)
+
+    if args.all:
+        # spawn one subprocess per cell (compile-memory hygiene)
+        from repro.configs import ARCH_NAMES, SHAPES
+        pods = {"on": [True], "off": [False],
+                "both": [False, True]}[args.multipod]
+        failures = []
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                for mp in pods:
+                    fn = os.path.join(
+                        args.out, _cell_filename(arch, shape, mp, args.tag))
+                    if args.skip_existing and os.path.exists(fn):
+                        print(f"skip existing {fn}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--multipod", "on" if mp else "off",
+                           "--out", args.out, "--tag", args.tag,
+                           "--overrides", args.overrides]
+                    print(">>", arch, shape, "multipod" if mp else
+                          "singlepod", flush=True)
+                    rc = subprocess.call(cmd)
+                    if rc != 0:
+                        failures.append((arch, shape, mp))
+        print("FAILURES:", failures if failures else "none")
+        sys.exit(1 if failures else 0)
+
+    multi_pod = args.multipod == "on"
+    try:
+        result = run_cell(args.arch, args.shape, multi_pod, args.out,
+                          overrides=overrides)
+    except Exception:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "status": "error", "traceback": traceback.format_exc(),
+                  "overrides": overrides}
+    fn = os.path.join(args.out,
+                      _cell_filename(args.arch, args.shape, multi_pod,
+                                     args.tag))
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=1)
+    if result["status"] == "ok":
+        r = result["roofline"]
+        print(f"OK {args.arch} {args.shape} {result['mesh']}: "
+              f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+              f"collective={r['collective_s']:.3e}s dom={r['dominant']} "
+              f"useful={r['useful_flops_ratio']:.2f} "
+              f"roofline={r['roofline_fraction']:.2f} "
+              f"(compile {result['compile_s']}s)")
+    elif result["status"] == "skip":
+        print(f"SKIP {args.arch} {args.shape}: {result['skip_reason']}")
+    else:
+        print(f"ERROR {args.arch} {args.shape} {result['mesh']}")
+        print(result["traceback"][-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""Trip-count-aware HLO analysis: FLOPs, HBM bytes, collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts every computation **once** —
+a ``lax.scan`` over 94 layers contributes 1/94th of its true FLOPs
+(verified empirically; see EXPERIMENTS.md §Methodology).  Since this
+framework scans everything (that is what makes 40-cell dry-runs
+compile in seconds), we parse the post-partitioning, post-fusion HLO
+text and weight every instruction by the product of enclosing
+while-loop trip counts:
+
+  * **trip counts** — from each while's condition computation: the
+    largest integer literal in a ``compare`` against the induction
+    variable.  Nested whiles multiply (e.g. chunked SSM scan inside the
+    layer scan).
+  * **FLOPs** — ``dot`` instructions: ``2 × |result| × Π(contracting
+    dims)``; elementwise FLOPs are ignored (≪1% for these models —
+    dominated by d×d_ff/d_head contractions).
+  * **HBM bytes** — per top-level instruction in counted computations:
+    typed operand bytes + result bytes.  Post-fusion, each fusion
+    instruction's boundary is (approximately) real HBM traffic;
+    intra-fusion intermediates never materialize.  Control opcodes
+    (parameter/constant/tuple/get-tuple-element/bitcast/while/call/
+    conditional) are skipped — their data movement is counted at the
+    instructions that produce/consume the buffers.
+  * **collective wire bytes** — operand bytes × ring wire factor
+    (all-reduce ``2(g−1)/g``, gather/scatter/a2a ``(g−1)/g``,
+    permute 1) × trip weight.
+
+Fusion sub-computations are never counted directly (their cost is on
+the calling fusion instruction); only entry + while bodies/conditions +
+called computations are walked.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "tuple": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)(?=[,)]|$).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+    r"|\bwhile\(.*?\).*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)",
+    re.DOTALL)
+_CALL_RE = re.compile(r"\b(?:call|async-start)\(.*to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\(")
+_LHS_SHAPE_RE = re.compile(r"dot\(\s*(\w+)\[([\d,]*)\]")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(",
+    "bitcast(", "while(", "conditional(", "call(", "after-all(",
+    "partition-id(", "replica-id(",
+)
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _prod(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+def split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (stripped.endswith("{") and "->" in stripped
+                and ("(" in stripped)):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(text: str, comps) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    m = re.search(r"entry_computation_name=\"?([\w\.\-]+)", text)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def _while_edges(comps: dict[str, list[str]]):
+    """(parent, body, cond) triples from while instructions."""
+    edges = []
+    for parent, lines in comps.items():
+        for line in lines:
+            if " while(" not in line and not line.startswith("while("):
+                continue
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            if mc and mb:
+                edges.append((parent, mb.group(1), mc.group(1)))
+    return edges
+
+
+def _call_edges(comps):
+    edges = []
+    for parent, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"to_apply=%?([\w\.\-]+)", line):
+                if "fusion(" in line or "reduce(" in line or \
+                        "scatter(" in line or "sort(" in line or \
+                        "select-and-scatter(" in line or "map(" in line:
+                    continue  # fusion/reduce bodies are elementwise glue
+                edges.append((parent, m.group(1)))
+    return edges
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for line in cond_lines:
+        if "compare(" in line:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    if not consts:
+        for line in cond_lines:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    big = [c for c in consts if c >= 1]
+    return max(big) if big else 1
+
+
+def computation_multipliers(text: str) -> tuple[dict[str, float], str]:
+    comps = split_computations(text)
+    entry = _entry_name(text, comps)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate to fixpoint over while/call edges (graphs are shallow)
+    wedges = _while_edges(comps)
+    cedges = _call_edges(comps)
+    for _ in range(12):
+        changed = False
+        for parent, body, cond in wedges:
+            if parent in mult:
+                t = _trip_count(comps.get(cond, []))
+                val = mult[parent] * t
+                if mult.get(body, 0) != val:
+                    mult[body] = val
+                    changed = True
+                cval = mult[parent] * (t + 1)
+                if mult.get(cond, 0) != cval:
+                    mult[cond] = cval
+                    changed = True
+        for parent, callee in cedges:
+            if parent in mult and callee in comps:
+                if mult.get(callee, 0) != mult[parent]:
+                    mult[callee] = mult[parent]
+                    changed = True
+        if not changed:
+            break
+    return dict(mult), entry
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLL_KINDS})
+    dot_flops_entry_only: float = 0.0
+    #: top HBM-traffic contributors: (bytes, opcode, result_shape) —
+    #: the §Perf loop reads this to find what to move into VMEM/fuse.
+    top_traffic: list = dataclasses.field(default_factory=list)
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _result_shapes(rhs: str) -> list[tuple[str, str]]:
+    """Typed shapes on the definition's RHS before the opcode's '('. """
+    paren = rhs.find("(")
+    # tuple results look like "(f32[..], f32[..]) opcode(...)" — the
+    # first '(' may open the tuple; find the opcode by scanning for
+    # " opcode(" after the type segment.
+    m = re.match(r"^\s*(\([^)]*\)|\S+)\s", rhs)
+    seg = m.group(1) if m else rhs[:paren if paren > 0 else len(rhs)]
+    return _SHAPE_RE.findall(seg)
+
+
+def _build_symtab(lines: list[str]) -> dict[str, list[tuple[str, str]]]:
+    tab: dict[str, list[tuple[str, str]]] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        tab[m.group(1)] = _result_shapes(m.group(2))
+    return tab
+
+
+def _operand_names(rhs: str) -> list[str]:
+    """Operand instruction names inside the opcode's argument list."""
+    # first '(' after the opcode token; arguments end at the matching ')'
+    m = re.search(r"[\w\-]+\(", rhs)
+    if not m:
+        return []
+    start = m.end()
+    depth = 1
+    i = start
+    while i < len(rhs) and depth:
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+        i += 1
+    return _OPERAND_RE.findall(rhs[start:i - 1])
+
+
+def _shapes_bytes(shapes: list[tuple[str, str]]) -> int:
+    return sum(_shape_bytes(d, s) for d, s in shapes)
+
+
+def analyze_hlo(text: str, default_group: int = 1,
+                top_k: int = 12) -> HloStats:
+    comps = split_computations(text)
+    mult, entry = computation_multipliers(text)
+    stats = HloStats()
+    traffic: dict[tuple[str, str], float] = defaultdict(float)
+
+    for comp, lines in comps.items():
+        w = mult.get(comp)
+        if w is None:
+            continue  # fusion / reduce-body subcomputation
+        symtab = _build_symtab(lines)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            res_shapes = _result_shapes(rhs)
+            opm = re.search(r"\)?\s*([\w\-]+)\(", rhs)
+            opcode = opm.group(1) if opm else ""
+
+            # ---- FLOPs (dot) ----
+            if opcode == "dot":
+                res = _shapes_bytes(res_shapes) // max(
+                    _DTYPE_BYTES.get(res_shapes[0][0], 4), 1) \
+                    if res_shapes else 0
+                ops = _operand_names(rhs)
+                mc = _LHS_CDIMS_RE.search(rhs)
+                if ops and mc and ops[0] in symtab and symtab[ops[0]]:
+                    lhs_dims = [int(d) for d in
+                                symtab[ops[0]][0][1].split(",") if d]
+                    cdims = [int(i) for i in mc.group(1).split(",") if i]
+                    k = 1
+                    for i in cdims:
+                        if i < len(lhs_dims):
+                            k *= lhs_dims[i]
+                    fl = 2.0 * res * k
+                    stats.flops += fl * w
+                    if comp == entry:
+                        stats.dot_flops_entry_only += fl
+
+            # ---- collectives ----
+            mcoll = _COLL_RE.search(rhs)
+            if mcoll and not opcode.endswith("-done"):
+                kind = mcoll.group(1)
+                g = default_group
+                m2 = _GROUPS_V2_RE.search(rhs)
+                if m2:
+                    g = int(m2.group(2))
+                else:
+                    m3 = _GROUPS_RE.search(rhs)
+                    if m3:
+                        g = len([x for x in m3.group(1).split(",") if x])
+                nbytes = 0
+                for name in _operand_names(rhs):
+                    nbytes += _shapes_bytes(symtab.get(name, []))
+                if nbytes == 0:
+                    nbytes = _shapes_bytes(res_shapes)
+                wire = nbytes * _WIRE_FACTOR[kind](max(g, 2)) * w
+                stats.collective_wire_bytes += wire
+                stats.collective_by_kind[kind] += wire
+                stats.collective_counts[kind] += int(w)
+
+            # ---- HBM bytes ----
+            if any(op in rhs for op in _SKIP_OPS):
+                continue
+            total = _shapes_bytes(res_shapes)
+            for name in _operand_names(rhs):
+                total += _shapes_bytes(symtab.get(name, []))
+            stats.hbm_bytes += total * w
+            if total * w > 0:
+                shape_key = ",".join(f"{d}[{s}]" for d, s in res_shapes[:2])
+                traffic[(opcode, shape_key)] += total * w
+
+    stats.top_traffic = sorted(
+        ((v, op, shp) for (op, shp), v in traffic.items()),
+        reverse=True)[:top_k]
+    return stats

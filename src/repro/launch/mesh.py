@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set ``XLA_FLAGS`` *before* the first jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips).
+
+    Axes: ``model`` = tensor parallelism inside a party; ``data`` (and
+    ``pod`` when multi-pod) = the FL party axes (DESIGN.md §2.2).
+    All axes are Auto-typed; the trainer's shard_map takes the party
+    axes Manual per call.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_parties: int = 4, tp: int = 2):
+    """Small mesh over forced host devices (tests/examples)."""
+    return jax.make_mesh((n_parties, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def party_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def party_count_of(mesh) -> int:
+    n = 1
+    for a in party_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,110 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, tag: str | None = None):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(fn))
+        name_tag = fn.rsplit("__", 1)[-1].replace(".json", "")
+        is_tagged = name_tag not in ("16x16", "2x16x16")
+        if tag is None and is_tagged:
+            continue
+        if tag is not None and name_tag != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(rows, mesh: str) -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        roof = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(roof['compute_s'])} | "
+            f"{fmt_s(roof['memory_s'])} | {fmt_s(roof['collective_s'])} | "
+            f"{roof['dominant']} | {roof['useful_flops_ratio']:.2f} | "
+            f"{roof['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | chips | compile_s | "
+           "HLO GFLOP/dev | HBM GB/dev | wire GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP (documented) | | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"**ERROR** | | | | | |")
+            continue
+        roof = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['chips']} | {r['compile_s']} | "
+            f"{roof['flops_per_device']/1e9:.1f} | "
+            f"{roof['bytes_per_device']/1e9:.1f} | "
+            f"{roof['wire_bytes_per_device']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def summary_stats(rows):
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    err = [r for r in rows if r["status"] == "error"]
+    return {"ok": len(ok), "skip": len(skip), "error": len(err)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir, args.tag)
+    print("## Dry-run status:", summary_stats(rows))
+    print()
+    print("### §Dry-run table\n")
+    print(dryrun_table(rows))
+    print()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### §Roofline — mesh {mesh}\n")
+        print(roofline_table(rows, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+  memory     = HLO_bytes_per_device / 819 GB/s HBM
+  collective = wire_bytes_per_device / 50 GB/s ICI (per-link, conservative)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition for an
+SPMD executable).  Collective bytes are parsed from the partitioned HLO
+text: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction's operand bytes, multiplied by
+
+  * the enclosing while-loop trip count (scan bodies execute L times —
+    counting each instruction once would undercount per-layer
+    collectives by the layer count), and
+  * a wire factor per kind (ring algorithms): all-reduce 2·(g−1)/g,
+    all-gather/reduce-scatter (g−1)/g, all-to-all (g−1)/g,
+    collective-permute 1.
+
+MODEL_FLOPS uses the standard 6·N_active·tokens (train), 2·N_active·T
+(prefill), 2·N_active·B (decode) accounting, and the ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) reports how much compiled compute is
+"useful" (catches remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_operand_bytes(line: str) -> int:
+    """Sum typed operand shapes inside the instruction's argument list."""
+    paren = line.find("(")
+    if paren < 0:
+        return 0
+    args = line[paren + 1:line.find(")", paren) if ")" in line else None]
+    total = 0
+    for m in _SHAPE_RE.finditer(args or ""):
+        total += _shape_bytes(m.group(1), m.group(2))
+    if total == 0:
+        # untyped operand refs: fall back to the result shape(s)
+        head = line[:paren]
+        for m in _SHAPE_RE.finditer(head.split("=", 1)[-1]):
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def _while_trip_counts(text: str) -> dict[str, int]:
+    """computation name -> trip count for while bodies (scan loops)."""
+    # while instructions: body=%name, condition=%cname
+    counts: dict[str, int] = {}
+    cond_const: dict[str, int] = {}
+    # constants inside condition computations: compare with constant(N)
+    cur_comp = None
+    comp_consts: dict[str, list[int]] = {}
+    for line in text.splitlines():
+        mc = re.match(r"%?([\w\.\-]+)\s+\([^)]*\)\s*->", line.strip())
+        if line.strip().startswith("%") and "{" in line and "(" in line \
+                and "->" in line:
+            name = line.strip().split()[0].lstrip("%")
+            cur_comp = name
+            comp_consts.setdefault(cur_comp, [])
+        elif line.strip().startswith(("ENTRY", "HloModule")):
+            cur_comp = line.strip().split()[1].lstrip("%") \
+                if len(line.strip().split()) > 1 else None
+            comp_consts.setdefault(cur_comp, [])
+        m = re.search(r"constant\((\d+)\)", line)
+        if m and cur_comp is not None:
+            comp_consts[cur_comp].append(int(m.group(1)))
+    for m in re.finditer(
+            r"while\([^)]*\).*?condition=%?([\w\.\-]+),.*?body=%?([\w\.\-]+)",
+            text):
+        cond, body = m.group(1), m.group(2)
+        consts = [c for c in comp_consts.get(cond, []) if c > 1]
+        counts[body] = max(consts) if consts else 1
+    return counts
+
+
+def parse_collective_bytes(text: str, default_group: int) -> dict:
+    """Wire bytes per device by collective kind (trip-count weighted)."""
+    trip = _while_trip_counts(text)
+    # map each instruction line to its enclosing computation
+    out = {k: 0.0 for k in _WIRE_FACTOR}
+    count = {k: 0 for k in _WIRE_FACTOR}
+    cur_comp = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and s.endswith("{") and "->" in s:
+            cur_comp = s.split()[0].lstrip("%")
+        elif s.startswith("ENTRY"):
+            cur_comp = "__entry__"
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        g = _group_size(line, default_group)
+        raw = _line_operand_bytes(line)
+        mult = trip.get(cur_comp, 1)
+        out[kind] += raw * _WIRE_FACTOR[kind](max(g, 2)) * mult
+        count[kind] += mult
+    out["total"] = sum(out[k] for k in _WIRE_FACTOR)
+    out["instruction_counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    chips: int
+    model_flops_global: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent at the *useful-compute* roofline:
+        (MODEL_FLOPS/chips/peak) / max(term) — 1.0 means the step time
+        equals the ideal compute time of the useful FLOPs."""
+        ideal = self.model_flops_global / self.chips / PEAK_FLOPS
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "chips": self.chips,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, kind: str, tokens: int) -> float:
+    n = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

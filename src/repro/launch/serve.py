@@ -1,0 +1,87 @@
+"""Batched serving driver: prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --smoke --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import party_count_of
+from repro.launch.steps import make_serve_step, place
+from repro.launch.train import make_mesh_for_host
+from repro.models.registry import get_api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = get_api(cfg)
+    mesh = make_mesh_for_host(args.tp)
+    kv_len = args.prompt_len + args.gen
+    b = args.batch
+
+    batch_specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                   "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "embeddings":
+        batch_specs = {
+            "embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                           jnp.bfloat16),
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    wrap, _, _ = make_serve_step(cfg, mesh, kv_len=kv_len, batch=b)
+    step, = (wrap(batch_specs),)
+
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    cache = api.init_cache(params, cfg, b, kv_len)
+    rng = np.random.RandomState(args.seed)
+    prompt = rng.randint(0, cfg.vocab, size=(b, args.prompt_len))
+
+    with jax.set_mesh(mesh):
+        # prefill via repeated decode (exercises the ring buffer too)
+        tok = jnp.asarray(prompt[:, :1], jnp.int32)
+        for t in range(args.prompt_len):
+            dbatch = _batchify(cfg, tok, t, b)
+            tok, cache = step(params, cache, dbatch)
+            if t + 1 < args.prompt_len:
+                tok = jnp.asarray(prompt[:, t + 1:t + 2], jnp.int32)
+            else:
+                tok = tok[:, None]
+        # timed generation
+        t0 = time.perf_counter()
+        out = []
+        for t in range(args.prompt_len, kv_len):
+            dbatch = _batchify(cfg, tok, t, b)
+            nxt, cache = step(params, cache, dbatch)
+            tok = nxt[:, None]
+            out.append(np.asarray(nxt))
+        dt = time.perf_counter() - t0
+    toks = np.stack(out, 1)
+    print(f"generated {toks.shape} tokens; "
+          f"{b * args.gen / dt:.1f} tok/s; sample row: {toks[0][:16]}")
+
+
+def _batchify(cfg, tok, t, b):
+    if cfg.frontend == "embeddings":
+        emb = jnp.zeros((b, 1, cfg.d_model), jnp.bfloat16)
+        return {"embeds": emb, "index": jnp.int32(t)}
+    return {"tokens": tok, "index": jnp.int32(t)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Parameter/batch/activation sharding policy.
+
+One policy function maps every parameter leaf to a PartitionSpec from
+its (path, shape):
+
+* ``model`` axis (TP): largest eligible dim divisible by the TP size —
+  with domain overrides (vocab dim of embeddings, ff dim of MLPs,
+  expert dim of MoE stacks when divisible: EP; else expert-ff: TP).
+* party axes (ZeRO/FSDP, optional): next eligible dim divisible by the
+  party count.  Only enabled for architectures whose replicated
+  parameters + optimizer state exceed per-chip HBM (the two MoE
+  giants); everything else keeps parameters party-replicated, which is
+  the paper-faithful FL layout (each org owns a full model replica).
+
+Leaves under ``layers`` are layer-stacked: dim 0 is the scan axis and
+is never sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, DEFAULT_RULES
+from .mesh import party_axes_of, party_count_of
+
+
+def activation_rules(cfg: ArchConfig, mesh,
+                     manual_axes: set | frozenset = frozenset()
+                     ) -> dict[str, Any]:
+    """Logical-axis -> mesh-axis table for ``models.common.shard``.
+
+    ``manual_axes``: axes taken Manual by an enclosing shard_map —
+    constraints may not mention them (data is already locally split),
+    so any rule entry using them is dropped.
+    """
+    rules = dict(DEFAULT_RULES)
+    party = party_axes_of(mesh)
+    rules["batch"] = party if len(party) > 1 else party[0]
+    if manual_axes:
+        def strip(e):
+            if e is None:
+                return None
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in manual_axes)
+                return kept or None
+            return None if e in manual_axes else e
+        rules = {k: strip(v) for k, v in rules.items()}
+    tp = mesh.shape["model"]
+    if cfg.n_heads % tp != 0:
+        rules["heads"] = None          # fall back to unsharded heads
+    if cfg.n_kv_heads % tp == 0:
+        rules["kv_heads"] = "model"
+        rules["kv_seq"] = None         # head- and seq-sharding exclusive
+    if cfg.n_experts:
+        if cfg.n_experts % tp == 0:
+            rules["experts"] = "model"     # expert parallelism
+            rules["expert_ff"] = None
+        else:
+            rules["experts"] = None        # TP inside each expert
+            rules["expert_ff"] = "model"
+    if cfg.vocab % tp != 0:
+        rules["vocab"] = None
+    return rules
+
+
+def _is_stacked(path: str) -> bool:
+    return "layers" in path or path.startswith("tail")
+
+
+def _pick_dim(shape, divisor: int, *, skip: set[int], prefer=None):
+    """Largest dim divisible by ``divisor`` (prefer listed dims first)."""
+    order = list(prefer or []) + sorted(
+        range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if i in skip or i >= len(shape):
+            continue
+        if shape[i] % divisor == 0 and shape[i] >= divisor:
+            return i
+    return None
+
+
+def param_spec(path: str, shape, cfg: ArchConfig, mesh,
+               fsdp: bool) -> P:
+    tp = mesh.shape["model"]
+    party = party_axes_of(mesh)
+    n_party = party_count_of(mesh)
+    spec: list[Any] = [None] * len(shape)
+    skip: set[int] = {0} if _is_stacked(path) else set()
+
+    prefer = None
+    if "embed" in path or "lm_head" in path or "dec_pos" in path:
+        # vocab/table rows on model axis (Megatron vocab-parallel)
+        prefer = [int(np.argmax(shape))]
+    if "router" in path:
+        prefer = []
+
+    mdim = _pick_dim(shape, tp, skip=skip, prefer=prefer)
+    if mdim is not None and len(shape) - len(skip) >= 1:
+        spec[mdim] = "model"
+        skip = skip | {mdim}
+    if fsdp:
+        pdim = _pick_dim(shape, n_party, skip=skip)
+        if pdim is not None:
+            spec[pdim] = party if len(party) > 1 else party[0]
+    return P(*spec)
+
+
+def needs_fsdp(cfg: ArchConfig, mesh, hbm_bytes: float = 16e9) -> bool:
+    """Replicated fp32 params + Adam moments must fit per-chip HBM."""
+    tp = mesh.shape["model"]
+    replicated = cfg.param_count() * (4 + 8) / tp
+    return replicated > 0.6 * hbm_bytes
+
+
+def param_shardings(abstract_params, cfg: ArchConfig, mesh,
+                    fsdp: bool | None = None):
+    """Pytree of NamedShardings matching ``abstract_params``."""
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        specs.append(NamedSharding(
+            mesh, param_spec(key, leaf.shape, cfg, mesh, fsdp)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_pspecs(abstract_params, cfg: ArchConfig, mesh,
+                 fsdp: bool | None = None, party_only: bool = False):
+    """PartitionSpecs (optionally restricted to party axes for shard_map
+    in_specs, where auto-axis placement must not appear)."""
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, mesh)
+    party = set(party_axes_of(mesh))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        full = param_spec(key, leaf.shape, cfg, mesh, fsdp)
+        if party_only:
+            def keep(e):
+                if e is None:
+                    return None
+                if isinstance(e, tuple):
+                    kept = tuple(a for a in e if a in party)
+                    return kept or None
+                return e if e in party else None
+            full = P(*[keep(e) for e in full])
+        specs.append(full)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _batch_spec(v, k, mesh):
+    party = party_axes_of(mesh)
+    ax = party if len(party) > 1 else party[0]
+    n = party_count_of(mesh)
+    if (hasattr(v, "shape") and len(v.shape) >= 1 and k != "index"
+            and v.shape[0] % n == 0):
+        return P(ax, *([None] * (len(v.shape) - 1)))
+    return P()
+
+
+def batch_shardings(batch_specs: dict, mesh):
+    return {k: NamedSharding(mesh, _batch_spec(v, k, mesh))
+            for k, v in batch_specs.items()}
+
+
+def batch_pspecs(batch_specs: dict, mesh):
+    return {k: _batch_spec(v, k, mesh) for k, v in batch_specs.items()}
+
+
+def cache_shardings(abstract_cache, cfg: ArchConfig, mesh):
+    """Decode caches: batch over party axes; KV seq over model (SP)."""
+    party = party_axes_of(mesh)
+    ax = party if len(party) > 1 else party[0]
+    tp = mesh.shape["model"]
+
+    def spec_of(path, leaf):
+        key = "/".join(str(p) for p in path)
+        shape = leaf.shape
+        spec: list[Any] = [None] * len(shape)
+        # stacked caches: [L, B, ...]; tails: [1, B, ...]; cross: [L,B,H,S,D]
+        bdim = 1 if len(shape) >= 2 else 0
+        if shape[bdim] % party_count_of(mesh) == 0:
+            spec[bdim] = ax
+        if ("k" == str(path[-1].key) if hasattr(path[-1], "key") else False) \
+                or "cross" in key or key.endswith("k") or key.endswith("v"):
+            pass
+        # seq-shard the KV buffer (dim -2 for [*,B,H,S,D]) when divisible
+        if len(shape) >= 4 and shape[-2] % tp == 0 and shape[-2] >= tp:
+            spec[-2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, l) for p, l in flat])

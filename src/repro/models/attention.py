@@ -1,0 +1,105 @@
+"""Attention: XLA-native chunked (online-softmax) path + Pallas dispatch.
+
+Three implementations behind one API:
+
+* ``pallas`` — the flash kernel (TPU production path, interpret-tested);
+* ``xla_chunked`` — ``lax.scan`` over KV blocks with the same streaming
+  softmax recurrence, pure jnp.  This is what the multi-device dry-run
+  lowers (Pallas can't target the CPU backend), and it has the *same*
+  O(S·block) activation footprint, so 32k-prefill memory analysis is
+  honest.  Gradients flow through the scan.
+* ``dense`` — materialized scores for tiny smoke shapes.
+
+Decode goes through ``decode_attention`` (KV-blocked, LSE partials) with
+an optional sequence-sharded variant the serving layer combines via
+``psum`` — see ``repro/launch/serve.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention, attention_ref
+from .common import ArchConfig, shard
+
+NEG_INF = -1e30
+
+
+def xla_chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                          sm_scale: float | None = None,
+                          block_k: int = 512):
+    """Streaming-softmax attention via lax.scan over KV blocks.
+
+    q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D].  Memory: O(Sq·block_k) per head
+    instead of O(Sq·Skv).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0
+    nkb = skv // block_k
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.reshape(b, hkv, nkb, block_k, d).swapaxes(0, 2)  # [nkb,Hkv,B,...]
+    vf = v.reshape(b, hkv, nkb, block_k, d).swapaxes(0, 2)
+    offs = skv - sq if causal else 0
+    q_idx = jnp.arange(sq) + offs
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kb, kc, vc = inputs                     # [Hkv,B,block,d] ×2
+        kc = kc.swapaxes(0, 1).astype(jnp.float32)   # [B,Hkv,block,d]
+        vc = vc.swapaxes(0, 1).astype(jnp.float32)
+        kk = jnp.repeat(kc, group, axis=1)
+        vv = jnp.repeat(vc, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        k_idx = kb * block_k + jnp.arange(block_k)
+        mask = jnp.zeros((sq, block_k), dtype=bool)
+        if causal:
+            mask = mask | (k_idx[None, :] > q_idx[:, None])
+        if window and window > 0:
+            mask = mask | (k_idx[None, :] <= q_idx[:, None] - window)
+        s = jnp.where(mask[None, None], NEG_INF, s)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nkb), kf, vf))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def attention(q, k, v, cfg: ArchConfig, *, causal: bool = True,
+              impl: str = "auto", block_k: int = 512):
+    """Dispatching attention entry point.  q:[B,H,Sq,D] k/v:[B,Hkv,Skv,D]."""
+    window = cfg.window
+    sq, skv = q.shape[2], k.shape[2]
+    if impl == "auto":
+        if jax.default_backend() == "tpu" and sq % 128 == 0 and \
+                skv % 128 == 0:
+            impl = "pallas"
+        elif skv >= 1024 and skv % 512 == 0:
+            impl = "xla_chunked"
+        else:
+            impl = "dense"
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "xla_chunked":
+        return xla_chunked_attention(q, k, v, causal=causal, window=window,
+                                     block_k=block_k)
+    return attention_ref(q, k, v, causal=causal, window=window
+                         ).astype(q.dtype)

@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment, ``input_specs()`` supplies *post-conv* frame
+embeddings ``[B, enc_seq, d]`` — the two strided conv1d layers of the
+real Whisper frontend are a stub.  Everything downstream is faithful:
+sinusoidal encoder positions, bidirectional encoder self-attention
+(MHA; kv = heads for whisper-large-v3), learned decoder positions,
+causal decoder self-attention + cross-attention, GELU MLPs, pre-LN
+LayerNorm with bias, tied decoder embedding/LM head.
+
+Both stacks are scanned (stacked leaves), like ``transformer.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention
+from .common import ArchConfig, dtype_of, shard
+from .layers import (apply_norm, chunked_softmax_xent, embed, embedding_init,
+                     layernorm, layernorm_init, mlp_apply, mlp_init,
+                     norm_init, sinusoidal_positions)
+from .transformer import attn_init, attn_apply, _decode_attn_block
+
+NEG_INF = -1e30
+
+
+def _enc_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg, dtype), "attn": attn_init(k1, cfg, dtype),
+            "ln2": norm_init(cfg, dtype), "mlp": mlp_init(k2, cfg, dtype)}
+
+
+def _dec_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg, dtype), "self": attn_init(k1, cfg, dtype),
+            "ln_x": norm_init(cfg, dtype), "cross": attn_init(k2, cfg, dtype),
+            "ln2": norm_init(cfg, dtype), "mlp": mlp_init(k3, cfg, dtype)}
+
+
+#: learned decoder positions sized for the largest decode cell (32k);
+#: whisper's real 448-token table is a special case of the same layout.
+MAX_DEC_LEN = 32768 + 8
+
+
+def init(key, cfg: ArchConfig):
+    dtype = dtype_of(cfg, "param_dtype")
+    k_emb, k_enc, k_dec, k_pos = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": embedding_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "dec_pos": jax.random.normal(k_pos, (MAX_DEC_LEN, cfg.d_model),
+                                     dtype) * 0.01,
+        "enc_layers": jax.vmap(
+            lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": norm_init(cfg, dtype),
+        "dec_layers": jax.vmap(
+            lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": norm_init(cfg, dtype),
+    }
+
+
+def _cross_attn(p, x, enc_kv, cfg: ArchConfig):
+    """x: [B,Sq,d] queries; enc_kv: precomputed {k,v: [B,H,Se,Dh]}."""
+    b, sq, _ = x.shape
+    cd = x.dtype
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p["wq"].astype(cd)).reshape(b, sq, h, dh).transpose(0, 2, 1, 3)
+    q = shard(q, "batch", "heads", None, None)
+    o = attention(q, enc_kv["k"].astype(cd), enc_kv["v"].astype(cd), cfg,
+                  causal=False, impl="auto")
+    o = o.transpose(0, 2, 1, 3).reshape(b, sq, h * dh)
+    return o @ p["wo"].astype(cd)
+
+
+def cross_kv(p, enc_out, cfg: ArchConfig):
+    b, se, _ = enc_out.shape
+    cd = enc_out.dtype
+    h, dh = cfg.n_heads, cfg.d_head
+    k = (enc_out @ p["wk"].astype(cd)).reshape(b, se, h, dh)
+    v = (enc_out @ p["wv"].astype(cd)).reshape(b, se, h, dh)
+    return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: [B, Se, d] post-conv embeddings -> encoder states."""
+    cd = dtype_of(cfg, "compute_dtype")
+    x = frames.astype(cd) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(cd)[None]
+    x = shard(x, "batch", "seq", "embed")
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32),
+                           frames.shape[:2])
+
+    def body(xc, lp):
+        h = xc + attn_apply(lp["attn"], apply_norm(cfg, lp["ln1"], xc),
+                            cfg, pos, causal=False)
+        return h + mlp_apply(lp["mlp"], apply_norm(cfg, lp["ln2"], h),
+                             cfg), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_hidden(params, tokens, enc_out, cfg: ArchConfig,
+                  positions=None):
+    cd = dtype_of(cfg, "compute_dtype")
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cd)
+    x = x + params["dec_pos"][:s].astype(cd)[None]
+    x = shard(x, "batch", "seq", "embed")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(xc, lp):
+        h = xc + attn_apply(lp["self"], apply_norm(cfg, lp["ln1"], xc),
+                            cfg, positions, causal=True)
+        kv = cross_kv(lp["cross"], enc_out, cfg)
+        h = h + _cross_attn(lp["cross"], apply_norm(cfg, lp["ln_x"], h),
+                            kv, cfg)
+        return h + mlp_apply(lp["mlp"], apply_norm(cfg, lp["ln2"], h),
+                             cfg), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return apply_norm(cfg, params["dec_norm"], x)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, impl: str = "auto"):
+    """batch: frames [B,Se,d], tokens [B,S], labels [B,S]."""
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode_hidden(params, batch["tokens"], enc_out, cfg)
+    w = params["embed"]["table"].T
+    return chunked_softmax_xent(h, w, batch["labels"],
+                                label_mask=batch.get("label_mask"))
+
+
+def prefill(params, batch, cfg: ArchConfig, impl: str = "auto"):
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode_hidden(params, batch["tokens"], enc_out, cfg)
+    last = h[:, -1, :]
+    w = params["embed"]["table"].T
+    return (last @ w.astype(last.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode with self-attn KV cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ArchConfig, batch: int, kv_len: int,
+               enc_out=None, dtype=jnp.bfloat16):
+    hkv, dh, L = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
+    cache: dict[str, Any] = {
+        "k": jnp.zeros((L, batch, hkv, kv_len, dh), dtype),
+        "v": jnp.zeros((L, batch, hkv, kv_len, dh), dtype),
+    }
+    if enc_out is None:
+        enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
+    # cross K/V computed once per request, layer-stacked
+    def per_layer(lp):
+        return cross_kv(lp["cross"], enc_out, cfg)
+    cache["cross"] = jax.vmap(per_layer)(
+        jax.tree.map(lambda a: a, params["dec_layers"]))
+    return cache
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig):
+    """batch: tokens [B,1], index scalar.  Returns (logits, cache)."""
+    cd = dtype_of(cfg, "compute_dtype")
+    index = batch["index"].astype(jnp.int32)
+    b = batch["tokens"].shape[0]
+    x = embed(params["embed"], batch["tokens"][:, 0], cd)
+    x = x + params["dec_pos"][index].astype(cd)[None]
+
+    def body(xc, inputs):
+        lp, kc, vc, xkv = inputs
+        h, new_kv = _decode_attn_block(
+            lp["self"], apply_norm(cfg, lp["ln1"], xc),
+            {"k": kc, "v": vc}, cfg, index)
+        h = xc + h
+        hx = apply_norm(cfg, lp["ln_x"], h[:, None, :])
+        h = h + _cross_attn(lp["cross"], hx, {"k": xkv["k"], "v": xkv["v"]},
+                            cfg)[:, 0]
+        h = h + mlp_apply(lp["mlp"], apply_norm(cfg, lp["ln2"],
+                                                h[:, None, :]), cfg)[:, 0]
+        return h, (new_kv["k"], new_kv["v"])
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross"]))
+    new_cache = dict(cache)
+    new_cache["k"] = new_k
+    new_cache["v"] = new_v
+    x = apply_norm(cfg, params["dec_norm"], x[:, None, :])[:, 0]
+    w = params["embed"]["table"].T
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

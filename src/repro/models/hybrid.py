@@ -1,0 +1,129 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrence + local attention.
+
+The 38-layer RecurrentGemma-9B stacks repeating (rec, rec, local-attn)
+triads (Griffin's 1-attention-per-3 pattern); the two leftover layers
+are recurrent.  The recurrent block is Griffin's dual-branch gated
+design: ``merge(GeLU(W_g x) ⊙ RG-LRU(conv1d(W_x x)))``.
+
+RG-LRU (per Griffin Eq. 2-4, c = 8):
+    r_t = σ(W_a x_t);  i_t = σ(W_x x_t)
+    a_t = exp(−c·softplus(Λ)·r_t)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+realized with the same chunked associative scan as Mamba.  Local
+attention uses the sliding-window path of the flash/chunked kernels
+(window 2048), giving O(S·w) prefill and an O(w) KV cache — the reason
+this architecture runs the 500k-context cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, shard
+from .scan_utils import chunked_linear_scan
+from .ssm import _causal_conv
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_init(key, width: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(width)
+    # Λ init so that a ∈ [0.9, 0.999] at r = 1 (Griffin appendix A)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, width)) / _C)).astype(jnp.float32)
+    return {
+        "w_a": jax.random.normal(k1, (width, width), dtype) * s,
+        "b_a": jnp.zeros((width,), dtype),
+        "w_i": jax.random.normal(k2, (width, width), dtype) * s,
+        "b_i": jnp.zeros((width,), dtype),
+        "lambda": lam,
+    }
+
+
+def _rglru_gates(params, x):
+    cd = x.dtype
+    r = jax.nn.sigmoid((x @ params["w_a"].astype(cd)
+                        + params["b_a"].astype(cd)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"].astype(cd)
+                        + params["b_i"].astype(cd)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(params, x, chunk: int = 64, h0=None):
+    """x: [B, S, W] -> ([B, S, W], h_last [B, W])."""
+    a, b = _rglru_gates(params, x)
+    if jax.default_backend() == "tpu" and h0 is None \
+            and x.shape[1] % 128 == 0 and x.shape[2] % 128 == 0:
+        # fused Pallas path: carry lives in VMEM (kernels/lru_scan)
+        from repro.kernels.lru_scan import lru_scan
+        hs = lru_scan(a, b)
+        return hs.astype(x.dtype), hs[:, -1].astype(jnp.float32)
+    hs, h_last = chunked_linear_scan(a, b, h0=h0, chunk=chunk)
+    return hs.astype(x.dtype), h_last
+
+
+def rglru_step(params, x, h):
+    """x: [B, W], h: [B, W] -> (y [B, W], h' [B, W])."""
+    a, b = _rglru_gates(params, x[:, None, :])
+    a = a[:, 0]
+    b = b[:, 0]
+    h_new = a * h + b
+    return h_new.astype(x.dtype), h_new
+
+
+def rec_block_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    sw = 1.0 / np.sqrt(w)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, w), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d, w), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (4, w), dtype) * 0.2,
+        "conv_b": jnp.zeros((w,), dtype),
+        "lru": rglru_init(ks[3], w, dtype),
+        "w_out": jax.random.normal(ks[4], (w, d), dtype) * sw,
+    }
+
+
+def rec_block_apply(params, x, cfg: ArchConfig, chunk: int = 64):
+    """Griffin recurrent block, full sequence.  x: [B,S,d]."""
+    cd = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(cd))
+    u = x @ params["w_x"].astype(cd)
+    u = shard(u, "batch", "seq", "ff")
+    u = _causal_conv(u, params["conv_w"].astype(cd),
+                     params["conv_b"].astype(cd))
+    y, _ = rglru_apply(params["lru"], u, chunk=chunk)
+    return (gate * y) @ params["w_out"].astype(cd)
+
+
+def rec_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rec_block_step(params, x, state, cfg: ArchConfig):
+    """Single-token decode for the recurrent block.  x: [B, d]."""
+    cd = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(cd))
+    u = x @ params["w_x"].astype(cd)
+    conv_buf = jnp.concatenate([state["conv"].astype(cd), u[:, None, :]], 1)
+    w = params["conv_w"].astype(cd)
+    u_c = jnp.einsum("bkd,kd->bd", conv_buf, w) + params["conv_b"].astype(cd)
+    y, h_new = rglru_step(params["lru"], u_c, state["h"])
+    out = (gate * y) @ params["w_out"].astype(cd)
+    return out, {"conv": conv_buf[:, 1:].astype(state["conv"].dtype),
+                 "h": h_new}

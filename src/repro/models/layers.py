@@ -1,0 +1,193 @@
+"""Building-block layers: norms, rotary embeddings, MLPs, losses.
+
+Pure functions over explicit param dicts (no module framework); all
+initializers are jit-traceable so the dry-run can ``jax.eval_shape``
+them without allocating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + \
+        params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(cfg: ArchConfig, dtype):
+    return (rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init)(
+        cfg.d_model, dtype)
+
+
+def apply_norm(cfg: ArchConfig, params, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(params, x, cfg.norm_eps)
+    return layernorm(params, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE stub)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4, mrope_sections=None):
+    """x: [B, H, S, D]; positions: [B, S] (or [3, B, S] for M-RoPE).
+
+    M-RoPE (Qwen2-VL): the head dim is split into three sections rotated
+    by temporal/height/width position streams.  For text tokens the
+    three streams coincide, reducing exactly to standard RoPE — the
+    frontend stub supplies equal streams, so we accept ``[B, S]`` and
+    broadcast; genuine 3-stream ids also work via ``[3, B, S]``.
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # [D/2]
+    if positions.ndim == 2:
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    else:
+        pos3 = positions
+    if mrope_sections is None:
+        angles = pos3[0][:, None, :, None].astype(jnp.float32) * freqs
+    else:
+        # split the D/2 frequency channels into 3 sections, each driven
+        # by its own position stream
+        secs = np.cumsum(mrope_sections)[:-1]
+        parts = []
+        prev = 0
+        for i, end in enumerate(list(secs) + [d // 2]):
+            parts.append(pos3[i][:, None, :, None].astype(jnp.float32)
+                         * freqs[prev:end])
+            prev = end
+        angles = jnp.concatenate(parts, axis=-1)                  # [B,1,S,D/2]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(f)
+    if cfg.act in ("silu", "geglu"):
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), dtype) * scale_in,
+            "w_up": jax.random.normal(k2, (d, f), dtype) * scale_in,
+            "w_down": jax.random.normal(k3, (f, d), dtype) * scale_out,
+        }
+    return {
+        "w_up": jax.random.normal(k1, (d, f), dtype) * scale_in,
+        "b_up": jnp.zeros((f,), dtype),
+        "w_down": jax.random.normal(k2, (f, d), dtype) * scale_out,
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_apply(params, x, cfg: ArchConfig):
+    cd = x.dtype
+    if cfg.act in ("silu", "geglu"):
+        gate = x @ params["w_gate"].astype(cd)
+        up = x @ params["w_up"].astype(cd)
+        gate = shard(gate, "batch", "seq", "ff")
+        act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+        return (act * up) @ params["w_down"].astype(cd)
+    h = x @ params["w_up"].astype(cd) + params["b_up"].astype(cd)
+    h = shard(h, "batch", "seq", "ff")
+    h = jax.nn.gelu(h)
+    return h @ params["w_down"].astype(cd) + params["b_down"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (vocab-sharded friendly)
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, tokens, compute_dtype):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def chunked_softmax_xent(x, w_vocab, labels, *, chunk: int = 1024,
+                         label_mask=None):
+    """Cross-entropy over a large vocab without materializing [B,S,V].
+
+    Scans over sequence chunks; each chunk's logits live only inside the
+    scan body (bf16), bounding activation memory at ``B·chunk·V`` —
+    *the* enabling trick for vocab≈152k models (20 GB of fp32 logits per
+    device otherwise).
+
+    x: [B, S, d] activations; w_vocab: [d, V]; labels: [B, S] int32.
+    Returns the mean NLL over unmasked positions.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    if label_mask is None:
+        label_mask = jnp.ones((b, s), dtype=jnp.float32)
+
+    def body(carry, inputs):
+        xc, yc, mc = inputs          # [B, C, d], [B, C], [B, C]
+        logits = (xc @ w_vocab.astype(xc.dtype)).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    xs = (x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1),
+          labels.reshape(b, n_chunks, chunk).swapaxes(0, 1),
+          label_mask.reshape(b, n_chunks, chunk).swapaxes(0, 1))
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     xs)
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with capacity-bounded top-k dispatch.
+
+Sort-free GShard/MaxText-style dispatch that stays gather/scatter-based
+(XLA-friendly, differentiable) while doing only *active* FLOPs:
+
+  1. router logits -> top-k experts + softmax weights per token;
+  2. position-in-expert via a cumulative count over the flattened
+     (token, k) assignments; assignments beyond ``capacity`` drop
+     (weights renormalized) — the standard capacity-factor contract;
+  3. gather tokens into per-expert buffers ``[E, C, d]``;
+  4. batched expert GEMMs ``[E, C, d] × [E, d, f]`` (MXU-shaped);
+  5. scatter-add back, scaled by routing weights.
+
+Sharding: expert FFN width is TP-sharded (``expert_ff -> model`` rule),
+so every model rank computes a ``f/TP`` slice of *all* experts — always
+divisible (1536/16, 32768/16), balanced regardless of routing skew.
+Expert-parallel all_to_all dispatch is the documented alternative
+(DESIGN.md §Perf) when E ≥ TP and routing is balanced.
+
+FLOP accounting for the roofline: 3·T·k·d·f_e per layer (active only),
+``cf`` overhead counted explicitly via buffer padding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, shard
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    si, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    return {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * si,
+        "w_gate": jax.random.normal(k2, (e, d, f), dtype) * si,
+        "w_up": jax.random.normal(k3, (e, d, f), dtype) * si,
+        "w_down": jax.random.normal(k4, (e, f, d), dtype) * so,
+    }
+
+
+def moe_apply(params, x, cfg: ArchConfig):
+    """x: [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.d_ff_expert
+    t = b * s
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)         # sublane-align the buffers
+    xt = x.reshape(t, d)
+
+    # --- routing ---------------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ params["router"])     # [T, E]
+    gates, eidx = jax.lax.top_k(logits, k)                   # [T, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # --- position-in-expert ------------------------------------------------
+    flat_e = eidx.reshape(-1)                                # [T*k]
+    if cfg.moe_dispatch == "sort":
+        # argsort over the assignment keys: O(T·k log) work and NO [T,E]
+        # intermediates — the §Perf fix for cumsum's E× HBM blowup.
+        order = jnp.argsort(flat_e, stable=True)
+        counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.cumsum(counts) - counts                 # [E]
+        pos_sorted = (jnp.arange(t * k, dtype=jnp.int32)
+                      - starts[flat_e[order]])
+        pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+        # NB: priority is token-major (not rank-major) under sort order
+        keep = pos < cap
+    else:
+        # Sort-free cumulative counting, one routing rank at a time so
+        # the transient one-hot is [T, E] (not [T·k, E]): rank-r
+        # assignments get priority over rank-(r+1), the GShard tie-break.
+        pos_cols, keep_cols = [], []
+        carry = jnp.zeros((e,), jnp.int32)
+        for r in range(k):
+            oh = jax.nn.one_hot(eidx[:, r], e, dtype=jnp.int32)  # [T, E]
+            pos_r = jnp.cumsum(oh, axis=0) - oh + carry[None, :]
+            pos_cols.append(jnp.sum(pos_r * oh, axis=-1))        # [T]
+            carry = carry + jnp.sum(oh, axis=0)
+            keep_cols.append(pos_cols[-1] < cap)
+        pos = jnp.stack(pos_cols, axis=1).reshape(-1)            # [T*k]
+        keep = jnp.stack(keep_cols, axis=1).reshape(-1)
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)      # overflow slot
+
+    # --- dispatch gather ---------------------------------------------------
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    tok_of_assign = jnp.repeat(jnp.arange(t), k)
+    buf = buf.at[slot].set(xt[tok_of_assign])
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = shard(buf, "experts", None, "embed")
+
+    # --- expert GEMMs -------------------------------------------------------
+    cd = xt.dtype
+    gate_h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(cd))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(cd))
+    gate_h = shard(gate_h, "experts", None, "expert_ff")
+    h = jax.nn.silu(gate_h) * up_h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(cd))
+
+    # --- combine scatter ----------------------------------------------------
+    out_flat = out_buf.reshape(e * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), cd)], 0)
+    per_assign = out_flat[slot]                              # [T*k, d]
+    w = (gates.reshape(-1) * keep.astype(gates.dtype))[:, None]
+    per_assign = per_assign.astype(jnp.float32) * w
+    out = jnp.sum(per_assign.reshape(t, k, d), axis=1)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits, eidx, e: int):
+    """Switch-style auxiliary loss (fraction·probability product)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(eidx[..., 0], e), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac * prob)

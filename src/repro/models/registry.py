@@ -1,0 +1,44 @@
+"""Model API registry: family -> (init, loss, prefill, cache, decode)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import encdec, transformer
+from .common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def _tf_init_cache(params, cfg, batch, kv_len, **kw):
+    del params
+    return transformer.init_cache(cfg, batch, kv_len, **kw)
+
+
+TRANSFORMER_API = ModelApi(
+    init=transformer.init,
+    loss_fn=transformer.loss_fn,
+    prefill=transformer.prefill,
+    init_cache=_tf_init_cache,
+    decode_step=transformer.decode_step,
+)
+
+ENCDEC_API = ModelApi(
+    init=encdec.init,
+    loss_fn=encdec.loss_fn,
+    prefill=encdec.prefill,
+    init_cache=encdec.init_cache,
+    decode_step=encdec.decode_step,
+)
+
+
+def get_api(cfg: ArchConfig) -> ModelApi:
+    return ENCDEC_API if cfg.enc_dec else TRANSFORMER_API

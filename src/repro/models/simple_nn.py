@@ -1,0 +1,60 @@
+"""The paper's own models: SimpleNN (121->2, s=242) and ComplexNN
+(121->60->2, s=7380) for the fault-detection use case (paper §IV-A).
+
+These are the models whose tensors the MPC protocols aggregate in the
+paper's experiments; ``benchmarks/accuracy.py`` reproduces Table II with
+them and ``benchmarks/protocols.py`` reproduces Figs. 15–16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_FEATURES = 121
+N_CLASSES = 2
+HIDDEN = 60
+
+
+def init_simple(key):
+    k1, = jax.random.split(key, 1)
+    s = 1.0 / np.sqrt(N_FEATURES)
+    return {"w": jax.random.normal(k1, (N_FEATURES, N_CLASSES)) * s,
+            "b": jnp.zeros((N_CLASSES,))}
+
+
+def init_complex(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (N_FEATURES, HIDDEN)) / np.sqrt(N_FEATURES),
+        "b1": jnp.zeros((HIDDEN,)),
+        "w2": jax.random.normal(k2, (HIDDEN, N_CLASSES)) / np.sqrt(HIDDEN),
+        "b2": jnp.zeros((N_CLASSES,)),
+    }
+
+
+def forward_simple(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def forward_complex(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def param_size(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def nll_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def make_model(kind: str):
+    if kind == "simple":
+        return init_simple, forward_simple
+    if kind == "complex":
+        return init_complex, forward_complex
+    raise ValueError(kind)

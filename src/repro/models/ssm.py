@@ -1,0 +1,128 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b architecture).
+
+Faithful Mamba-1 dataflow (in_proj -> causal depthwise conv -> selective
+SSM -> gated out_proj) with the selective scan realized as a chunked
+associative scan (see ``scan_utils``) — the TPU-native equivalent of the
+fused CUDA kernel, per DESIGN.md's hardware-adaptation ledger.
+
+Decode is O(1)/token: carries ``(conv_state [B, k-1, di],
+ssm_state [B, di, n])`` — this is why falcon-mamba runs the ``long_500k``
+cell that full-attention architectures skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, shard
+from .scan_utils import chunked_linear_scan
+
+
+def ssm_block_init(key, cfg: ArchConfig, dtype):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, kc = cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    si = 1.0 / np.sqrt(d)
+    sdi = 1.0 / np.sqrt(di)
+    sdt = 1.0 / np.sqrt(dtr)
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * si,
+        "conv_w": jax.random.normal(ks[1], (kc, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * st), dtype) * sdi,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * sdt,
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * sdi,
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: [B,S,di]; w: [k,di] depthwise causal conv along S."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def ssm_block_apply(params, x, cfg: ArchConfig, chunk: int = 64):
+    """x: [B, S, d] -> [B, S, d] (training / prefill path)."""
+    cd = x.dtype
+    di, st = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["in_proj"].astype(cd)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", "seq", "ff")
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"].astype(cd),
+                                   params["conv_b"].astype(cd)))
+
+    dbc = x_c @ params["x_proj"].astype(cd)
+    dt, bc, cc = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ params["dt_proj"].astype(cd)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))          # [B,S,di]
+    a = -jnp.exp(params["A_log"])                          # [di,st] f32
+
+    x_f = x_c.astype(jnp.float32)
+    if jax.default_backend() == "tpu" and x_c.shape[1] % 128 == 0 \
+            and x_c.shape[2] % 128 == 0:
+        # fused Pallas path: state lives in VMEM, the [B,S,di,st]
+        # tensor never reaches HBM (kernels/ssm_scan)
+        from repro.kernels.ssm_scan import ssm_scan
+        y = ssm_scan(x_c, dt.astype(jnp.float32), bc, cc, a)
+        y = y.astype(jnp.float32)
+    else:
+        sdt = (jnp.bfloat16 if cfg.scan_dtype == "bfloat16"
+               else jnp.float32)
+        da = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)
+        dbx = ((dt * x_f)[..., None]
+               * bc.astype(jnp.float32)[:, :, None, :]).astype(sdt)
+        hs, _ = chunked_linear_scan(da, dbx, chunk=chunk)  # [B,S,di,st]
+        y = jnp.einsum("bsdn,bsn->bsd", hs.astype(jnp.float32),
+                       cc.astype(jnp.float32))
+    y = y + x_f * params["D"][None, None, :]
+    y = (y.astype(cd) * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(cd)
+
+
+def ssm_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, st, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, kc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, st), jnp.float32),
+    }
+
+
+def ssm_block_step(params, x, state, cfg: ArchConfig):
+    """Single-token decode.  x: [B, d] -> ([B, d], new state)."""
+    cd = x.dtype
+    st = cfg.ssm_state
+    xz = x @ params["in_proj"].astype(cd)
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # [B, di]
+
+    conv_buf = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)
+    w = params["conv_w"].astype(cd)                        # [k, di]
+    x_c = jnp.einsum("bkd,kd->bd", conv_buf, w) + params["conv_b"].astype(cd)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = x_c @ params["x_proj"].astype(cd)
+    dt, bc, cc = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ params["dt_proj"].astype(cd)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))           # [B, di]
+    a = -jnp.exp(params["A_log"])                          # [di, st]
+    da = jnp.exp(dt[..., None] * a[None])                  # [B, di, st]
+    x_f = x_c.astype(jnp.float32)
+    dbx = (dt * x_f)[..., None] * bc.astype(jnp.float32)[:, None, :]
+    h = da * state["ssm"] + dbx                            # [B, di, st]
+    y = jnp.einsum("bdn,bn->bd", h, cc.astype(jnp.float32))
+    y = y + x_f * params["D"][None, :]
+    y = (y.astype(cd) * jax.nn.silu(z)) @ params["out_proj"].astype(cd)
+    new_state = {"conv": conv_buf[:, 1:], "ssm": h}
+    return y, new_state

@@ -1,0 +1,410 @@
+"""Unified decoder-only LM covering dense / MoE / VLM / SSM / hybrid.
+
+One parameter schema + three entry points per architecture family:
+
+* ``init(key, cfg)``          — parameters (jit-traceable, eval_shape-safe)
+* ``loss_fn(params, batch)``  — next-token NLL (training / train_4k cells)
+* ``prefill_logits`` / ``init_cache`` / ``decode_step`` — serving cells
+
+Layers are **stacked** (leading ``L`` dim on every leaf) and iterated
+with ``lax.scan`` so the lowered HLO is layer-count-independent —
+compile times for the 94-layer 235B config match the 16-layer 1B one.
+Heterogeneous stacks (RecurrentGemma triads) scan over repeating groups
+plus an unscanned tail.
+
+The KV cache is a pytree of stacked buffers:
+  full attention: ``k/v [L, B, Hkv, S_max, Dh]`` (absolute slots)
+  sliding window: ``k/v [L, B, Hkv, window, Dh]`` (ring buffer)
+  ssm/rec:        per-block states (O(1) in sequence length)
+so 500k-context decode on SSM/hybrid architectures is memory-flat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hybrid, moe, ssm
+from .attention import attention
+from .common import ArchConfig, dtype_of, shard
+from .layers import (apply_norm, chunked_softmax_xent, embed, embedding_init,
+                     mlp_apply, mlp_init, norm_init, apply_rope)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Per-block init/apply
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, dtype):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(h * dh)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * dh, d), dtype) * so,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    cd = x.dtype
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"].astype(cd)
+    k = x @ p["wk"].astype(cd)
+    v = x @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "kv_heads", None, None)
+    v = shard(v, "batch", "kv_heads", None, None)
+    if cfg.rope in ("rope", "mrope"):
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ArchConfig, positions, impl: str = "auto",
+               causal: bool = True):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = attention(q, k, v, cfg, causal=causal, impl=impl)
+    o = shard(o, "batch", "heads", None, None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def block_init(key, cfg: ArchConfig, dtype, kind: str):
+    """kind: attn | moe_attn | ssm | rec"""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {"ln": norm_init(cfg, dtype),
+                "ssm": ssm.ssm_block_init(k1, cfg, dtype)}
+    if kind == "rec":
+        return {"ln": norm_init(cfg, dtype),
+                "rec": hybrid.rec_block_init(k1, cfg, dtype),
+                "ln2": norm_init(cfg, dtype),
+                "mlp": mlp_init(k2, cfg, dtype)}
+    p = {"ln1": norm_init(cfg, dtype),
+         "attn": attn_init(k1, cfg, dtype),
+         "ln2": norm_init(cfg, dtype)}
+    if kind == "moe_attn":
+        p["moe"] = moe.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg, dtype)
+    return p
+
+
+def block_apply(p, x, cfg: ArchConfig, positions, kind: str,
+                impl: str = "auto"):
+    if kind == "ssm":
+        return x + ssm.ssm_block_apply(
+            {k: v for k, v in p["ssm"].items()},
+            apply_norm(cfg, p["ln"], x), cfg)
+    if kind == "rec":
+        h = x + hybrid.rec_block_apply(p["rec"],
+                                       apply_norm(cfg, p["ln"], x), cfg)
+        return h + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], h), cfg)
+    h = x + attn_apply(p["attn"], apply_norm(cfg, p["ln1"], x), cfg,
+                       positions, impl=impl)
+    inner = apply_norm(cfg, p["ln2"], h)
+    if kind == "moe_attn":
+        return h + moe.moe_apply(p["moe"], inner, cfg)
+    return h + mlp_apply(p["mlp"], inner, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack plan (which kinds, how scanned)
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ArchConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    """Returns (group_kinds, n_groups, tail_kinds)."""
+    if cfg.family == "ssm":
+        return ("ssm",), cfg.n_layers, ()
+    if cfg.family == "hybrid":
+        pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        per = len(pattern)
+        n_groups = (cfg.n_layers - cfg.n_tail_layers) // per
+        tail = tuple(["rec"] * cfg.n_tail_layers)
+        return tuple(pattern), n_groups, tail
+    kind = "moe_attn" if cfg.n_experts else "attn"
+    return (kind,), cfg.n_layers, ()
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig):
+    dtype = dtype_of(cfg, "param_dtype")
+    group_kinds, n_groups, tail_kinds = stack_plan(cfg)
+    k_emb, k_layers, k_tail, k_head = jax.random.split(key, 4)
+
+    def group_init(k):
+        ks = jax.random.split(k, len(group_kinds))
+        return {f"b{i}_{kind}": block_init(ks[i], cfg, dtype, kind)
+                for i, kind in enumerate(group_kinds)}
+
+    layer_keys = jax.random.split(k_layers, n_groups)
+    layers = jax.vmap(group_init)(layer_keys)
+
+    params: dict[str, Any] = {
+        "embed": embedding_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg, dtype),
+    }
+    if tail_kinds:
+        tkeys = jax.random.split(k_tail, len(tail_kinds))
+        params["tail"] = [block_init(tk, cfg, dtype, kind)
+                          for tk, kind in zip(tkeys, tail_kinds)]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": jax.random.normal(k_head, (cfg.d_model, cfg.vocab), dtype)
+            * (1.0 / np.sqrt(cfg.d_model))}
+    return params
+
+
+def abstract_params(cfg: ArchConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(seed), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward (full-sequence) + loss
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg: ArchConfig, positions, impl: str,
+               layer_transform=None):
+    """``layer_transform(group_params, group_index) -> group_params`` lets
+    the trainer interpose per-layer parameter movement (e.g. the
+    MPC-FSDP all-gather whose backward is a secure reduce-scatter)."""
+    group_kinds, n_groups, tail_kinds = stack_plan(cfg)
+
+    def group_body(xc, inputs):
+        gp, gidx = inputs
+        if layer_transform is not None:
+            gp = layer_transform(gp, gidx)
+        for i, kind in enumerate(group_kinds):
+            xc = block_apply(gp[f"b{i}_{kind}"], xc, cfg, positions, kind,
+                             impl=impl)
+        return xc, None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(group_body, policy=policy)
+    else:
+        body = group_body
+    x, _ = jax.lax.scan(body, x,
+                        (params["layers"],
+                         jnp.arange(n_groups, dtype=jnp.int32)))
+    for t_i, (tp, kind) in enumerate(zip(params.get("tail", []),
+                                         tail_kinds)):
+        if layer_transform is not None:
+            tp = layer_transform(tp, jnp.int32(n_groups + t_i))
+        x = block_apply(tp, x, cfg, positions, kind, impl=impl)
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def forward_hidden(params, batch, cfg: ArchConfig, impl: str = "auto",
+                   layer_transform=None):
+    cd = dtype_of(cfg, "compute_dtype")
+    if cfg.frontend == "embeddings":
+        x = batch["embeds"].astype(cd)
+    else:
+        x = embed(params["embed"], batch["tokens"], cd)
+    b, s, _ = x.shape
+    x = shard(x, "batch", "seq", "embed")
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return _run_stack(params, x, cfg, positions, impl,
+                      layer_transform=layer_transform)
+
+
+def lm_head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def loss_fn(params, batch, cfg: ArchConfig, impl: str = "auto",
+            layer_transform=None):
+    """Mean next-token NLL.  batch: tokens/embeds [B,S], labels [B,S]."""
+    h = forward_hidden(params, batch, cfg, impl=impl,
+                       layer_transform=layer_transform)
+    w = lm_head_weight(params, cfg)
+    return chunked_softmax_xent(h, w, batch["labels"],
+                                label_mask=batch.get("label_mask"))
+
+
+def logits_fn(params, batch, cfg: ArchConfig, impl: str = "auto"):
+    """Full logits (only for smoke-scale tests/examples)."""
+    h = forward_hidden(params, batch, cfg, impl=impl)
+    w = lm_head_weight(params, cfg)
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, kv_len: int,
+               dtype=jnp.bfloat16):
+    """Stacked decode state for every layer group."""
+    group_kinds, n_groups, tail_kinds = stack_plan(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+
+    def one(kind, n):
+        if kind == "ssm":
+            st = ssm.ssm_init_state(cfg, batch)
+            return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype),
+                                st)
+        if kind == "rec":
+            st = hybrid.rec_init_state(cfg, batch)
+            return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype),
+                                st)
+        s_buf = min(kv_len, cfg.window) if cfg.window else kv_len
+        return {
+            "k": jnp.zeros((n, batch, hkv, s_buf, dh), dtype),
+            "v": jnp.zeros((n, batch, hkv, s_buf, dh), dtype),
+        }
+
+    cache = {"groups": {f"b{i}_{kind}": one(kind, n_groups)
+                        for i, kind in enumerate(group_kinds)}}
+    if tail_kinds:
+        cache["tail"] = [one(kind, 1) for kind in tail_kinds]
+    return cache
+
+
+def _decode_attn_block(p, x, cache_kv, cfg: ArchConfig, index):
+    """One-token attention against a (ring-)buffered KV cache.
+
+    x: [B, d]; cache_kv: {k,v: [B,Hkv,S_buf,Dh]}; index: scalar int32.
+    """
+    b = x.shape[0]
+    cd = x.dtype
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos = jnp.broadcast_to(index[None, None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x[:, None, :], cfg, pos)
+
+    s_buf = cache_kv["k"].shape[2]
+    slot = (index % s_buf).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache_kv["k"], k_new.astype(cache_kv["k"].dtype),
+        (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache_kv["v"], v_new.astype(cache_kv["v"].dtype),
+        (0, 0, slot, 0))
+    k_cache = shard(k_cache, "batch", "kv_heads", "kv_seq", None)
+    v_cache = shard(v_cache, "batch", "kv_heads", "kv_seq", None)
+
+    # slot j holds absolute position p_j = index - ((index - j) mod s_buf)
+    j = jnp.arange(s_buf, dtype=jnp.int32)
+    abs_pos = index - ((index - j) % s_buf)
+    valid = abs_pos >= 0
+    if cfg.window:
+        valid = valid & (abs_pos > index - cfg.window)
+
+    kk = jnp.repeat(k_cache, h // hkv, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v_cache, h // hkv, axis=1).astype(jnp.float32)
+    qf = q[:, :, 0, :].astype(jnp.float32)                  # [B,H,Dh]
+    scores = jnp.einsum("bhd,bhsd->bhs", qf, kk) / np.sqrt(dh)
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    p_attn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", p_attn, vv).astype(cd)
+    o = o.reshape(b, h * dh)
+    out = o @ p["wo"].astype(cd)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_block(p, x, st, cfg: ArchConfig, index, kind: str):
+    if kind == "ssm":
+        y, st2 = ssm.ssm_block_step(p["ssm"],
+                                    apply_norm(cfg, p["ln"], x), st, cfg)
+        return x + y, st2
+    if kind == "rec":
+        y, st2 = hybrid.rec_block_step(p["rec"],
+                                       apply_norm(cfg, p["ln"], x), st, cfg)
+        h = x + y
+        h = h + mlp_apply(p["mlp"],
+                          apply_norm(cfg, p["ln2"], h[:, None, :]),
+                          cfg)[:, 0]
+        return h, st2
+    y, st2 = _decode_attn_block(p["attn"], apply_norm(cfg, p["ln1"], x),
+                                st, cfg, index)
+    h = x + y
+    inner = apply_norm(cfg, p["ln2"], h[:, None, :])
+    if kind == "moe_attn":
+        h = h + moe.moe_apply(p["moe"], inner, cfg)[:, 0]
+    else:
+        h = h + mlp_apply(p["mlp"], inner, cfg)[:, 0]
+    return h, st2
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig):
+    """One decode step.  batch: tokens [B,1] (or embeds [B,1,d]),
+    index: scalar int32 (current absolute position).
+
+    Returns (logits [B, V], new cache).
+    """
+    cd = dtype_of(cfg, "compute_dtype")
+    index = batch["index"].astype(jnp.int32)
+    if cfg.frontend == "embeddings":
+        x = batch["embeds"][:, 0, :].astype(cd)
+    else:
+        x = embed(params["embed"], batch["tokens"][:, 0], cd)
+    group_kinds, _, tail_kinds = stack_plan(cfg)
+
+    def group_body(xc, inputs):
+        gp, gc = inputs
+        new_c = {}
+        for i, kind in enumerate(group_kinds):
+            name = f"b{i}_{kind}"
+            xc, new_c[name] = _decode_block(gp[name], xc, gc[name], cfg,
+                                            index, kind)
+        return xc, new_c
+
+    x, new_groups = jax.lax.scan(group_body, x,
+                                 (params["layers"], cache["groups"]))
+    new_cache = {"groups": new_groups}
+    if tail_kinds:
+        new_tail = []
+        for tp, tc, kind in zip(params["tail"], cache["tail"], tail_kinds):
+            tc0 = jax.tree.map(lambda a: a[0], tc)
+            x, tc2 = _decode_block(tp, x, tc0, cfg, index, kind)
+            new_tail.append(jax.tree.map(lambda a: a[None], tc2))
+        new_cache["tail"] = new_tail
+    x = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
+    w = lm_head_weight(params, cfg)
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ArchConfig, impl: str = "auto"):
+    """Prefill forward returning last-position logits (inference-prefill
+    cells lower this).  Full-cache construction is exercised separately
+    by decode cells; prefill measures the compute-bound encode."""
+    h = forward_hidden(params, batch, cfg, impl=impl)
+    w = lm_head_weight(params, cfg)
+    last = h[:, -1, :]
+    return (last @ w.astype(last.dtype)).astype(jnp.float32)

@@ -1,0 +1,7 @@
+from .adamw import (AdamWConfig, SGDConfig, adamw_init, adamw_update,
+                    clip_by_global_norm, global_norm, sgd_init, sgd_update)
+from .schedule import inverse_sqrt, warmup_cosine
+
+__all__ = ["AdamWConfig", "SGDConfig", "adamw_init", "adamw_update",
+           "sgd_init", "sgd_update", "clip_by_global_norm", "global_norm",
+           "warmup_cosine", "inverse_sqrt"]

@@ -1,0 +1,96 @@
+"""AdamW + SGD(+momentum) implemented from scratch (no optax installed).
+
+Functional optimizers over pytrees: ``init(params) -> state``;
+``update(grads, state, params, step) -> (new_params, new_state)``.
+fp32 moments regardless of param dtype (mixed-precision master math).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(grads, state, params, step, cfg: AdamWConfig):
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        pf = pf - cfg.lr * (update + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.05
+    momentum: float = 0.0
+
+
+def sgd_init(params):
+    return {"mu": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_update(grads, state, params, step, cfg: SGDConfig):
+    del step
+
+    def upd(g, mu, p):
+        g = g.astype(jnp.float32)
+        mu2 = cfg.momentum * mu + g
+        return (p.astype(jnp.float32) - cfg.lr * mu2).astype(p.dtype), mu2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [upd(g, mu, p) for g, mu, p in zip(flat_g, flat_mu, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"mu": treedef.unflatten([o[1] for o in out])})

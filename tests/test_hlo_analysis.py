@@ -1,0 +1,78 @@
+"""Roofline measurement infrastructure: trip-count-aware HLO analysis."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+W = None
+
+
+def _text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_trip_counted():
+    w = jnp.zeros((256, 256))
+    x = jnp.ones((256, 256))
+    one = 2 * 256 ** 3
+
+    def f(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                            length=10)[0]
+    s = analyze_hlo(_text(f, x))
+    assert abs(s.flops / one - 10) < 0.2
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((128, 128))
+    x = jnp.ones((128, 128))
+    one = 2 * 128 ** 3
+
+    def f(x):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+    s = analyze_hlo(_text(f, x))
+    assert abs(s.flops / one - 20) < 0.5
+
+
+def test_unrolled_matches():
+    w = jnp.zeros((128, 128))
+    x = jnp.ones((128, 128))
+
+    def f(x):
+        for _ in range(7):
+            x = x @ w
+        return x
+    s = analyze_hlo(_text(f, x))
+    assert abs(s.flops / (2 * 128 ** 3) - 7) < 0.2
+
+
+def test_hbm_bytes_scale_with_trip_count():
+    w = jnp.zeros((256, 256))
+    x = jnp.ones((256, 256))
+
+    def f10(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                            length=10)[0]
+
+    def f20(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                            length=20)[0]
+    b10 = analyze_hlo(_text(f10, x)).hbm_bytes
+    b20 = analyze_hlo(_text(f20, x)).hbm_bytes
+    assert 1.7 < b20 / b10 < 2.3
+
+
+def test_batched_dot_flops():
+    a = jnp.ones((4, 64, 32))
+    b = jnp.ones((4, 32, 16))
+    s = analyze_hlo(_text(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                          a, b))
+    assert abs(s.flops - 2 * 4 * 64 * 32 * 16) / s.flops < 0.05

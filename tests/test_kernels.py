@@ -1,0 +1,193 @@
+"""Pallas kernel sweeps: shapes × params, interpret=True vs ref.py oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import philox
+from repro.core.fixed_point import DEFAULT_FIELD, DEFAULT_RING
+from repro.kernels.share_gen import share_gen, share_gen_ref
+from repro.kernels.share_gen.ops import pad_to_tiles, unpad_flat
+from repro.kernels.reconstruct import reconstruct, reconstruct_ref
+from repro.kernels.shamir import (shamir_share, shamir_share_ref,
+                                  shamir_reconstruct, shamir_reconstruct_ref)
+from repro.kernels.flash_attention import (attention_ref,
+                                           flash_attention_pallas)
+from repro.kernels.decode_attention import (combine_partials,
+                                            decode_attention_pallas,
+                                            decode_attention_ref)
+
+
+# ---------------------------------------------------------------------------
+# crypto kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [100, 1024, 5000, 131072])
+@pytest.mark.parametrize("m", [1, 2, 3, 8])
+def test_share_gen_bit_identical_and_invariant(d, m):
+    rng = np.random.RandomState(d + m)
+    x = jnp.asarray(rng.randn(d).astype(np.float32))
+    k0, k1 = philox.derive_key(3, m)
+    shares, dd = share_gen(x, m, k0, k1, DEFAULT_RING, block_rows=8,
+                           interpret=True)
+    x2d, _ = pad_to_tiles(x, 8)
+    ref = share_gen_ref(x2d, m, k0, k1, DEFAULT_RING)
+    np.testing.assert_array_equal(np.asarray(shares), np.asarray(ref))
+    # ring invariant: sum of shares == fixed-point encoding
+    enc = DEFAULT_RING.encode(x2d)
+    np.testing.assert_array_equal(
+        np.asarray(shares).astype(np.uint64).sum(0).astype(np.uint32),
+        np.asarray(enc))
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 64])
+def test_share_gen_block_shape_independence(block_rows):
+    """Different BlockSpec tilings must produce identical shares."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(128 * 128).astype(np.float32))
+    k0, k1 = philox.derive_key(5, 5)
+    s, _ = share_gen(x, 3, k0, k1, DEFAULT_RING, block_rows=block_rows,
+                     interpret=True)
+    s8, _ = share_gen(x, 3, k0, k1, DEFAULT_RING, block_rows=8,
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s8))
+
+
+@pytest.mark.parametrize("m,n", [(3, 4), (5, 16), (8, 128)])
+def test_reconstruct_kernel(m, n):
+    rng = np.random.RandomState(m * n)
+    shares = jnp.asarray(
+        rng.randint(0, 2**32, size=(m, 64, 128), dtype=np.uint64)
+        .astype(np.uint32))
+    got = reconstruct(shares, n, DEFAULT_RING, block_rows=8, interpret=True)
+    want = reconstruct_ref(shares, n, DEFAULT_RING)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+
+@pytest.mark.parametrize("d", [1000, 4096])
+@pytest.mark.parametrize("m", [2, 3, 6])
+def test_shamir_kernels_roundtrip(d, m):
+    rng = np.random.RandomState(d + m)
+    x = jnp.asarray((rng.randn(d) * 3).astype(np.float32))
+    k0, k1 = philox.derive_key(9, m)
+    shares, dd = shamir_share(x, m, k0, k1, DEFAULT_FIELD, block_rows=8,
+                              interpret=True)
+    x2d, _ = pad_to_tiles(x, 8)
+    ref = shamir_share_ref(x2d, m, k0, k1, DEFAULT_FIELD)
+    np.testing.assert_array_equal(np.asarray(shares), np.asarray(ref))
+    rec = shamir_reconstruct(shares, 1, DEFAULT_FIELD, block_rows=8,
+                             interpret=True)
+    recr = shamir_reconstruct_ref(ref, 1, DEFAULT_FIELD)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(recr), atol=1e-6)
+    err = np.abs(unpad_flat(rec, dd) - np.asarray(x)).max()
+    assert err <= 0.5 / DEFAULT_FIELD.scale + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# attention kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+def test_flash_attention_sweep(causal, window, hq, hkv):
+    rng = np.random.RandomState(hq * 10 + hkv)
+    b, sq, skv, d = 2, 128, 256, 64
+    q = jnp.asarray(rng.randn(b, hq, sq, d).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(b, hkv, skv, d).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(b, hkv, skv, d).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 8, 128, 64).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32)).astype(dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("s,block_k", [(512, 128), (1024, 256), (2048, 512)])
+def test_decode_attention_sweep(s, block_k):
+    rng = np.random.RandomState(s)
+    b, hq, hkv, d = 2, 16, 2, 64
+    q = jnp.asarray(rng.randn(b, hq, d).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32))
+    acc, m, l = decode_attention_pallas(q, k, v, block_k=block_k,
+                                        interpret=True)
+    ar, mr, lr = decode_attention_ref(q, k, v)
+    out = combine_partials(acc[None], m[None], l[None])
+    outr = combine_partials(ar[None], mr[None], lr[None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_shard_combine_exact():
+    """LSE combine over KV shards == unsharded attention (SP decode)."""
+    rng = np.random.RandomState(1)
+    b, hq, hkv, s, d = 2, 8, 2, 1024, 64
+    q = jnp.asarray(rng.randn(b, hq, d).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32))
+    full = combine_partials(*[x[None] for x in
+                              decode_attention_ref(q, k, v)])
+    for n_shards in [2, 4, 8]:
+        w = s // n_shards
+        parts = [decode_attention_ref(q, k[:, :, i*w:(i+1)*w],
+                                      v[:, :, i*w:(i+1)*w])
+                 for i in range(n_shards)]
+        out = combine_partials(jnp.stack([p[0] for p in parts]),
+                               jnp.stack([p[1] for p in parts]),
+                               jnp.stack([p[2] for p in parts]))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective-scan kernel (Mamba-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,di,st,bt", [(128, 128, 16, 64), (256, 256, 16, 128),
+                                        (256, 128, 8, 32)])
+def test_ssm_scan_kernel_sweep(s, di, st, bt):
+    from repro.kernels.ssm_scan import ssm_scan_pallas, ssm_scan_ref
+    rng = np.random.RandomState(s + di)
+    b = 2
+    x = jnp.asarray(rng.randn(b, s, di).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.randn(b, s, di)).astype(np.float32) * 0.1)
+    bc = jnp.asarray(rng.randn(b, s, st).astype(np.float32) * 0.5)
+    cc = jnp.asarray(rng.randn(b, s, st).astype(np.float32) * 0.5)
+    a = jnp.asarray(-np.abs(rng.randn(di, st)).astype(np.float32))
+    out = ssm_scan_pallas(x, dt, bc, cc, a, block_t=bt, interpret=True)
+    ref = ssm_scan_ref(x, dt, bc, cc, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_ssm_scan_state_carries_across_blocks():
+    """Output at t must depend on inputs before the block boundary."""
+    from repro.kernels.ssm_scan import ssm_scan_pallas
+    rng = np.random.RandomState(0)
+    b, s, di, st = 1, 128, 128, 8
+    x = jnp.asarray(rng.randn(b, s, di).astype(np.float32))
+    dt = jnp.asarray(np.full((b, s, di), 0.1, np.float32))
+    bc = jnp.asarray(rng.randn(b, s, st).astype(np.float32))
+    cc = jnp.asarray(rng.randn(b, s, st).astype(np.float32))
+    a = jnp.asarray(-np.ones((di, st), np.float32) * 0.01)
+    base = ssm_scan_pallas(x, dt, bc, cc, a, block_t=32, interpret=True)
+    x2 = x.at[0, 0].add(10.0)  # perturb before the first block boundary
+    pert = ssm_scan_pallas(x2, dt, bc, cc, a, block_t=32, interpret=True)
+    # effect visible in a later block (t=100 > 32)
+    assert np.abs(np.asarray(pert - base)[0, 100]).max() > 1e-4

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, output shapes + finiteness (assignment requirement f)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.registry import get_api
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _train_batch(cfg, b=2, s=16):
+    if cfg.enc_dec:
+        return {"frames": jnp.zeros((b, cfg.enc_seq, cfg.d_model),
+                                    jnp.bfloat16),
+                "tokens": jnp.ones((b, s), jnp.int32),
+                "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.frontend == "embeddings":
+        return {"embeds": jax.random.normal(KEY, (b, s, cfg.d_model),
+                                            jnp.bfloat16),
+                "labels": jnp.ones((b, s), jnp.int32)}
+    return {"tokens": jnp.ones((b, s), jnp.int32),
+            "labels": jnp.ones((b, s), jnp.int32)}
+
+
+def _decode_batch(cfg, b=2):
+    base = {"index": jnp.int32(3)}
+    if cfg.frontend == "embeddings":
+        base["embeds"] = jax.random.normal(KEY, (b, 1, cfg.d_model),
+                                           jnp.bfloat16)
+    else:
+        base["tokens"] = jnp.ones((b, 1), jnp.int32)
+    return base
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_loss_and_grad_step(name):
+    cfg = get_config(name, smoke=True)
+    api = get_api(cfg)
+    params = api.init(KEY, cfg)
+    batch = _train_batch(cfg)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: api.loss_fn(p, batch, cfg)))(params)
+    assert np.isfinite(float(loss)), name
+    gnorms = [float(jnp.abs(g.astype(jnp.float32)).max())
+              for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(gnorms)), name
+    assert max(gnorms) > 0, f"{name}: all-zero grads"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_decode_step(name):
+    cfg = get_config(name, smoke=True)
+    api = get_api(cfg)
+    params = api.init(KEY, cfg)
+    b = 2
+    cache = api.init_cache(params, cfg, b, 32)
+    logits, cache2 = jax.jit(
+        lambda p, c, d: api.decode_step(p, c, d, cfg))(
+            params, cache, _decode_batch(cfg, b))
+    assert logits.shape == (b, cfg.vocab), name
+    assert np.isfinite(np.asarray(logits)).all(), name
+    # cache must change where it should (KV write / state update)
+    changed = any(
+        (np.asarray(a) != np.asarray(b_)).any()
+        for a, b_ in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)))
+    assert changed, f"{name}: decode cache unchanged"
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "falcon-mamba-7b",
+                                  "recurrentgemma-9b"])
+def test_decode_matches_prefill_logits(name):
+    """Greedy decode after prefill == teacher-forced forward (causality)."""
+    from repro.models import transformer
+    cfg = get_config(name, smoke=True)
+    api = get_api(cfg)
+    params = api.init(KEY, cfg)
+    b, s = 1, 8
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    full_logits = jax.jit(
+        lambda p: transformer.logits_fn(p, {"tokens": toks}, cfg,
+                                        impl="dense"))(params)
+    cache = api.init_cache(params, cfg, b, 16)
+    step = jax.jit(lambda p, c, d: api.decode_step(p, c, d, cfg))
+    for t in range(s):
+        logits, cache = step(params, cache,
+                             {"tokens": toks[:, t:t + 1],
+                              "index": jnp.int32(t)})
+        # bf16 residual stream: decode and teacher-forced paths round
+        # differently; observed drift is ~0.03 on logits of O(5)
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), np.asarray(full_logits[0, t]),
+            atol=8e-2, rtol=5e-2)
+
+
+def test_sliding_window_cache_ring_buffer():
+    """Windowed arch: decode beyond the window stays correct/finite."""
+    cfg = get_config("recurrentgemma-9b", smoke=True)  # window = 8
+    api = get_api(cfg)
+    params = api.init(KEY, cfg)
+    cache = api.init_cache(params, cfg, 1, cfg.window)
+    step = jax.jit(lambda p, c, d: api.decode_step(p, c, d, cfg))
+    for t in range(cfg.window * 2 + 3):
+        logits, cache = step(params, cache,
+                             {"tokens": jnp.ones((1, 1), jnp.int32),
+                              "index": jnp.int32(t)})
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_moe_capacity_drop_and_weights():
+    from repro.models import moe
+    from repro.models.common import ArchConfig
+    cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
+    p = moe.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    out = moe.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    # zero input -> zero output (router gates silu paths through zeros)
+    out0 = moe.moe_apply(p, jnp.zeros_like(x), cfg)
+    assert np.abs(np.asarray(out0)).max() < 1e-5

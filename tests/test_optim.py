@@ -1,0 +1,44 @@
+"""Optimizer + schedule unit tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, SGDConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, global_norm, sgd_init,
+                         sgd_update, warmup_cosine, inverse_sqrt)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    p = {"w": jnp.array([10.0, -7.0])}
+    o = adamw_init(p)
+    for i in range(200):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - 2.0) ** 2))(p)
+        p, o = adamw_update(g, o, p, jnp.int32(i), cfg)
+    np.testing.assert_allclose(np.asarray(p["w"]), [2.0, 2.0], atol=1e-2)
+
+
+def test_sgd_momentum_converges():
+    cfg = SGDConfig(lr=0.05, momentum=0.9)
+    p = {"w": jnp.array([5.0])}
+    s = sgd_init(p)
+    for i in range(200):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        p, s = sgd_update(g, s, p, i, cfg)
+    assert abs(float(p["w"][0])) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedules_shapes():
+    lr0 = float(warmup_cosine(0, peak_lr=1.0, warmup=10, total=100))
+    lr10 = float(warmup_cosine(10, peak_lr=1.0, warmup=10, total=100))
+    lr100 = float(warmup_cosine(100, peak_lr=1.0, warmup=10, total=100))
+    assert lr0 == 0.0 and abs(lr10 - 1.0) < 1e-6 and lr100 < 0.2
+    assert float(inverse_sqrt(400, peak_lr=1.0, warmup=100)) == 0.5

@@ -1,25 +1,40 @@
 """Figs. 7–11: message count/volume vs number of parties.
 
-For every n the closed forms (Eqs. 1–8) are evaluated AND, for n ≤ 32,
-cross-checked against the counting simulation — the benchmark fails
-loudly if theory and the implementation ever diverge.
+For every n the closed forms (Eqs. 1–8) are evaluated AND, up to a
+verification cutoff, cross-checked against the counting simulation —
+the benchmark fails loudly if theory and the implementation ever
+diverge.  With the batched Transport engine the cross-check now runs at
+two orders of magnitude more parties than the seed (n = 10,000 instead
+of tens), and ``write_bench_json`` records the measured wall-clock of a
+full vectorized two-phase round at that scale into
+``BENCH_msgcost.json`` so future PRs have a perf trajectory.
 """
 
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import costmodel
 from repro.core.costmodel import CostParams
+from repro.core.fixed_point import FixedPointConfig
+from repro.fl import make_transport
 from repro.fl.simulation import FLSimulation
 
 SIMPLE_S = 242
 COMPLEX_S = 7380
 
+#: headroom for 10k+ party ring sums (frac_bits 16 caps out at 512)
+LARGE_N_FP = FixedPointConfig(frac_bits=10, clip=64.0, algebra="ring")
+
 
 def sweep(n_values=(4, 8, 16, 32, 64, 128), e=15, s=SIMPLE_S, m=3, b=10,
-          verify_up_to=16):
+          verify_up_to=128):
+    # the batched engine makes the n=128 cross-check as cheap as the
+    # seed's n=16 one, so the whole default sweep is now verified
     rows = []
     for n in n_values:
         p = CostParams(n=n, e=e, s=s, m=m, b=b)
@@ -54,6 +69,77 @@ def phase_split(n_values=(4, 8, 16, 32, 64, 128), e=15, s=SIMPLE_S):
             "phase1_size": costmodel.phase1_msg_size(p),
             "phase2_size": costmodel.phase2_msg_size(p),
         })
+    return out
+
+
+def vectorized_round(n: int = 10_000, s: int = 10_000, m: int = 3,
+                     chunk: int = 1024, seed: int = 1) -> dict:
+    """One full two-phase round at scale through the vectorized engine.
+
+    Measures Phase I (election + batched wire accounting) and Phase II
+    (batched share-gen -> committee sums -> reconstruct -> broadcast
+    accounting) wall-clock, and asserts the counters still equal the
+    paper's closed forms exactly.
+    """
+    rng = np.random.RandomState(0)
+    flats = jnp.asarray(rng.randn(n, s).astype(np.float32) * 0.1)
+    tr = make_transport("two_phase", n, m=m, seed=seed, fp=LARGE_N_FP,
+                        chunk=chunk)
+    t0 = time.perf_counter()
+    tr.elect()
+    elect_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    mean = tr.aggregate(flats)
+    mean.block_until_ready()
+    round_s = time.perf_counter() - t0
+
+    p = CostParams(n=n, e=1, s=s, m=m, b=tr.b)
+    st1 = tr.net.stats("phase1")
+    p2_num = sum(tr.net.stats(ph).msg_num for ph in
+                 ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    p2_size = sum(tr.net.stats(ph).msg_size for ph in
+                  ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    assert st1.msg_num == costmodel.phase1_msg_num(p), (st1, p)
+    assert p2_num == costmodel.phase2_msg_num(p), (p2_num, p)
+    assert p2_size == costmodel.phase2_msg_size(p), (p2_size, p)
+    err = float(np.abs(np.asarray(mean) - np.asarray(flats).mean(0)).max())
+    return {
+        "n": n, "s": s, "m": m, "scheme": "additive", "chunk": chunk,
+        "phase1_wall_s": round(elect_s, 3),
+        "phase2_wall_s": round(round_s, 3),
+        "msg_num": st1.msg_num + p2_num,
+        "msg_size": st1.msg_size + p2_size,
+        "mean_max_err": err,
+        "counters_match_eqs": True,
+    }
+
+
+def write_bench_json(path: str = "BENCH_msgcost.json",
+                     n_values=(4, 16, 64, 256, 1024, 4096, 10_000),
+                     e: int = 15, s: int = SIMPLE_S,
+                     include_round: bool = True) -> dict:
+    """Emit the msg_num/msg_size-vs-n trajectory (+10k round timing)."""
+    sweep_rows = []
+    for n in n_values:
+        p = CostParams(n=n, e=e, s=s, m=3, b=10)
+        sweep_rows.append({
+            "n": n,
+            "p2p_msg_num": costmodel.p2p_msg_num(p),
+            "p2p_msg_size": costmodel.p2p_msg_size(p),
+            "twophase_msg_num": costmodel.twophase_msg_num(p),
+            "twophase_msg_size": costmodel.twophase_msg_size(p),
+            "reduction_factor": round(costmodel.reduction_factor(p), 2),
+        })
+    out = {
+        "generated_by": "benchmarks/msg_cost.py",
+        "params": {"e": e, "s": s, "m": 3, "b": 10},
+        "sweep": sweep_rows,
+    }
+    if include_round:
+        out["vectorized_two_phase_round"] = vectorized_round()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
     return out
 
 

@@ -45,6 +45,14 @@ def main() -> None:
             traceback.print_exc()
             raise
 
+    # perf trajectory for future PRs: msg_num/msg_size vs n plus the
+    # measured n=10,000-party vectorized two-phase round
+    if only in (None, "msg_cost"):
+        bench = msg_cost.write_bench_json("BENCH_msgcost.json")
+        vr = bench["vectorized_two_phase_round"]
+        writer("bench_10k_round_wall_s", None, vr["phase2_wall_s"])
+        writer("bench_10k_round_msg_num", None, vr["msg_num"])
+
     # dry-run roofline summary (if the sweep has been run)
     if only in (None, "dryrun_summary"):
         for fn in sorted(glob.glob("experiments/dryrun/*.json")):

@@ -96,6 +96,63 @@ class SecureAggregator:
         return shamir.share(code, self.m, k0, k1,
                             degree=self.shamir_degree)
 
+    def make_shares_batch(self, flats, *, seed: int, party_ids,
+                          round_index: int = 0):
+        """All parties' share stacks in one vmap: ``[l, D] -> [l, m, D]``.
+
+        Bit-identical to stacking per-party ``make_shares`` calls for
+        every ``round_index``: party ids stay below 2**24, so the low
+        stream word is ``((round_index << 24) | party) & 0xFFFFFFFF``
+        and the high word ``round_index >> 8`` is party-independent —
+        both are fed to ``derive_key`` exactly as the Python-int path
+        of ``make_shares`` derives them.
+        """
+        flats = jnp.asarray(flats, dtype=jnp.float32)
+        ids = jnp.asarray(np.asarray(party_ids), dtype=jnp.uint32)
+        stream_lo = jnp.uint32((round_index << 24) & 0xFFFFFFFF) | ids
+        stream_hi = (round_index << 24) >> 32
+
+        def _one(flat, lo):
+            k0, k1 = philox.derive_key(seed, (lo, stream_hi))
+            code = self.encode(flat)
+            if self.scheme == SCHEME_ADDITIVE:
+                return additive.share(code, self.m, k0, k1)
+            return shamir.share(code, self.m, k0, k1,
+                                degree=self.shamir_degree)
+
+        return jax.vmap(_one)(flats, stream_lo)
+
+    def sum_shares_batch(self, flats, *, seed: int, party_ids,
+                         round_index: int = 0, chunk: int = 2048):
+        """Streaming share-stack sum: ``[l, D] -> [m, D]`` member sums.
+
+        Generates shares in party chunks of ``chunk`` and accumulates the
+        ring/field sum on the fly, so peak memory is ``O(chunk·m·D)``
+        instead of ``O(l·m·D)`` — this is what makes l = 10,000-party
+        rounds feasible.  The modular sums are order-independent, so the
+        result is bit-identical to ``reduce_party_shares`` over the full
+        ``make_shares_batch`` stack.
+        """
+        flats = jnp.asarray(flats, dtype=jnp.float32)
+        ids = np.asarray(party_ids)
+        l = flats.shape[0]
+        if ids.shape[0] != l:
+            raise ValueError(f"{l} updates but {ids.shape[0]} party ids")
+        acc = None
+        for off in range(0, l, chunk):
+            stacks = self.make_shares_batch(
+                flats[off:off + chunk], seed=seed,
+                party_ids=ids[off:off + chunk], round_index=round_index)
+            part = self.reduce_party_shares(stacks)
+            if acc is None:
+                acc = part
+            elif self.scheme == SCHEME_ADDITIVE:
+                acc = acc + part
+            else:
+                from .field import fadd
+                acc = fadd(acc, part)
+        return acc
+
     # -- committee / reconstruction side ---------------------------------
 
     def reduce_party_shares(self, stacked):
@@ -110,11 +167,23 @@ class SecureAggregator:
         from .field import fsum
         return fsum(stacked, axis=0)
 
-    def reconstruct_sum(self, member_sums):
-        """Combine committee members' sums (``[m, D] -> [D]`` codewords)."""
+    def reconstruct_sum(self, member_sums, points: tuple[int, ...] | None
+                        = None):
+        """Combine committee members' sums (``[k, D] -> [D]`` codewords).
+
+        ``points``: the Shamir evaluation points the ``k`` rows sit at
+        (default the canonical ``1..k``).  Passing a strict subset of the
+        committee's points enables sub-threshold reconstruction after
+        member dropouts — only valid for the Shamir scheme, and only
+        when ``k >= degree + 1``.
+        """
         if self.scheme == SCHEME_ADDITIVE:
+            if points is not None:
+                raise ValueError(
+                    "additive reconstruction needs all m shares; "
+                    "points= is a Shamir-only argument")
             return additive.reconstruct(member_sums)
-        return shamir.reconstruct(member_sums)
+        return shamir.reconstruct(member_sums, points=points)
 
     def decode_mean(self, code_sum, n: int):
         return self.fp.decode_mean(code_sum, n)
@@ -125,11 +194,9 @@ class SecureAggregator:
         """Share->sum->reconstruct->mean for a list of flat updates."""
         n = len(flats)
         self.fp.validate_for_parties(n)
-        stacks = jnp.stack([
-            self.make_shares(f, seed=seed, party=i, round_index=round_index)
-            for i, f in enumerate(flats)
-        ])  # [n, m, D]
-        member_sums = self.reduce_party_shares(stacks)
+        member_sums = self.sum_shares_batch(
+            jnp.stack([jnp.asarray(f) for f in flats]), seed=seed,
+            party_ids=np.arange(n), round_index=round_index)
         total = self.reconstruct_sum(member_sums)
         return self.decode_mean(total, n)
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -69,11 +70,16 @@ def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8
         raise ValueError(f"committee m={m} larger than parties n={n}")
     committee: list[int] = []
     tally = np.zeros(n, dtype=np.int64)
+    ids = jnp.arange(n, dtype=jnp.uint32)
     for r in range(max_rounds):
-        total = jnp.zeros((b,), dtype=jnp.uint32)
-        for i in range(n):
-            k0, k1 = philox.derive_key(seed, (r << 20) | i)
-            total = total + draw_votes(n, b, k0, k1, round_index=r)
+        # all parties' draws in one vmap (the wraparound uint32 sum is
+        # order-independent, so this is bit-identical to the party loop)
+        def _draw(stream):
+            k0, k1 = philox.derive_key(seed, stream)
+            return draw_votes(n, b, k0, k1, round_index=r)
+
+        votes = jax.vmap(_draw)(jnp.uint32(r << 20) | ids)     # [n, b]
+        total = jnp.sum(votes, axis=0, dtype=jnp.uint32)
         tally = tally + tally_votes(total, n)
         committee = select_committee(tally, m)
         if len(committee) == m:

@@ -116,10 +116,17 @@ def derive_key(seed, stream):
     """Stateless (key0, key1) derivation from a seed and a stream id.
 
     A single Philox invocation whitens the pair so related seeds do not
-    produce related keys.  ``seed``/``stream`` may be Python ints or
-    traced int32/uint32 scalars (traced values use their low 32 bits).
+    produce related keys.  ``seed``/``stream`` may be Python ints,
+    traced int32/uint32 scalars (traced values use their low 32 bits),
+    or explicit ``(lo, hi)`` word pairs — the pair form lets vmapped
+    callers keep the high word of a >32-bit stream id (bit-identical to
+    passing the same id as a Python int).
     """
     def split(v):
+        if isinstance(v, tuple):
+            lo, hi = v
+            return (jnp.asarray(lo).astype(jnp.uint32),
+                    jnp.asarray(hi).astype(jnp.uint32))
         if isinstance(v, (int, np.integer)):
             v = int(v)
             return (jnp.uint32(v & 0xFFFFFFFF),

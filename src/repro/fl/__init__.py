@@ -1,7 +1,11 @@
 from .faults import RoundOutcome, apply_faults, quorum_met
 from .rounds import FedAvgConfig, FedAvgResult, run_fedavg
-from .simulation import FLSimulation, Network, PhaseStats
+from .simulation import FLSimulation
+from .transport import (Network, P2PTransport, PhaseStats, PlainTransport,
+                        SPMDTransport, Transport, TwoPhaseTransport,
+                        make_transport)
 
 __all__ = ["FLSimulation", "Network", "PhaseStats", "FedAvgConfig",
            "FedAvgResult", "run_fedavg", "RoundOutcome", "apply_faults",
-           "quorum_met"]
+           "quorum_met", "Transport", "P2PTransport", "TwoPhaseTransport",
+           "PlainTransport", "SPMDTransport", "make_transport"]

@@ -14,10 +14,6 @@ import dataclasses
 import time
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.aggregation import flatten_pytree
 from .faults import RoundOutcome, apply_faults
 from .simulation import FLSimulation
@@ -60,7 +56,7 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
                        seed=cfg.seed, b=cfg.vote_batch,
                        latency_s=latency_s)
     params = init_params
-    flat0, unflatten = flatten_pytree(params)
+    _, unflatten = flatten_pytree(params)
     if cfg.protocol == "two_phase":
         sim.elect_committee()
     history, outcomes = [], []
@@ -70,37 +66,26 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
     for epoch in range(cfg.epochs):
         if membership_schedule is not None:
             new_members = set(membership_schedule(epoch))
-            if new_members != members and cfg.protocol == "two_phase":
+            if new_members != members:
                 members = new_members
-                sim.elect_committee()      # elastic re-election (Phase I)
-            members = new_members
+                if cfg.protocol == "two_phase":
+                    sim.elect_committee()  # elastic re-election (Phase I)
 
         outcome: RoundOutcome = apply_faults(
             members, latency_s or {}, cfg.deadline_s, seed=cfg.seed + epoch)
         outcomes.append(outcome)
 
+        live = sorted(outcome.alive)
         locals_flat = []
-        for i in sorted(outcome.alive):
+        for i in live:
             p_i = params
             for it in range(cfg.local_steps):
                 p_i = local_train_step(p_i, party_batches(i, epoch, it))
             locals_flat.append(flatten_pytree(p_i)[0])
 
-        if cfg.protocol == "plain":
-            mean = jnp.mean(jnp.stack(locals_flat), axis=0)
-            # un-encrypted exchange: n*(n-1) messages of size s
-            s = int(flat0.shape[0])
-            live = sorted(outcome.alive)
-            for i in live:
-                for j in live:
-                    if i != j:
-                        sim.net.send(i, j, s, "plain")
-        elif cfg.protocol == "p2p":
-            mean, _ = sim.aggregate_p2p(
-                locals_flat, alive=set(range(len(locals_flat))))
-        else:
-            mean, _ = sim.aggregate_two_phase(
-                locals_flat, alive=set(range(len(locals_flat))))
+        # survivors keep their original ids: party i always masks with
+        # party-i's Philox stream regardless of who else dropped
+        mean, _ = sim.aggregate(cfg.protocol, locals_flat, party_ids=live)
 
         params = unflatten(mean)
         if eval_fn is not None:

@@ -1,141 +1,101 @@
 """Bit-faithful multi-party simulation of the paper's protocols.
 
-Every point-to-point message is routed through a ``Network`` object that
-counts messages and element-volume per phase; the tests assert these
-counters equal the paper's closed forms (Eqs. 1–8) *exactly* — that is
-the reproduction of §III's theoretical analysis, and the benchmark
-driver regenerates Figs. 7–11 from the same counters.
+``FLSimulation`` is a thin driver: one ``Network`` (batched wire
+counters) shared by one transport per protocol (``fl.transport``); the
+tests assert the counters equal the paper's closed forms (Eqs. 1–8)
+*exactly* — that is the reproduction of §III's theoretical analysis,
+and the benchmark driver regenerates Figs. 7–11 from the same counters.
 
-Protocol fidelity notes:
-  * P2P aggregation is Alg. 1 on the whole flattened model ("parallel
-    MPC"): each party sends n−1 share messages + n−1 partial-sum
-    messages per epoch  ⇒ 2n(n−1) messages of size s  (Eqs. 1–2).
-  * Phase I election is Alg. 2: one P2P additive round on b-element
-    vote vectors  ⇒ 2n(n−1) messages of size b  (Eqs. 3–4).
-  * Phase II is Alg. 3 with the committee exchange realized as a
-    *chain* reduction (member w adds its partial and forwards), which
-    is what makes the paper's middle term (m−1) — not m(m−1) — exact.
-    Upload: n·m; chain: m−1; broadcast: n (member w serves parties
-    i ≡ w−1 mod m, Alg. 3 line 22)  ⇒ (n·m + n + m − 1)·e  (Eqs. 5–6).
+The protocol logic itself (who sends what to whom, per phase, and the
+vectorized party-side share math) lives in ``fl/transport.py`` — see
+its docstring and DESIGN.md for the fidelity notes.  With the batched
+engine a full two-phase round at n = 10,000 parties runs in seconds on
+CPU (``benchmarks/msg_cost.py`` records the timing).
 
 Fault model: parties can drop (crash before upload) or straggle past
 the round deadline; the committee aggregates exactly the share sets it
 received and the mean is over survivors.  Membership changes trigger
-re-election (elastic scaling).
+re-election (elastic scaling).  Committee-member dropouts are tolerated
+by the Shamir scheme (sub-threshold reconstruction) via
+``aggregate_two_phase(..., committee_dropout=...)``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import committee as committee_mod
-from repro.core import philox
 from repro.core.aggregation import SecureAggregator
 from repro.core.costmodel import CostParams
+from repro.core.fixed_point import FixedPointConfig
 
+from .transport import (Network, P2PTransport, PhaseStats, PlainTransport,
+                        Transport, TwoPhaseTransport)
 
-# ---------------------------------------------------------------------------
-# Message-counting network
-# ---------------------------------------------------------------------------
+__all__ = ["FLSimulation", "Network", "PhaseStats"]
 
-@dataclasses.dataclass
-class PhaseStats:
-    msg_num: int = 0
-    msg_size: int = 0          # in elements, paper convention
-
-    def add(self, size: int):
-        self.msg_num += 1
-        self.msg_size += size
-
-
-class Network:
-    """Counts every P2P message; optionally models per-party latency."""
-
-    def __init__(self, latency_s: dict[int, float] | None = None):
-        self.phases: dict[str, PhaseStats] = {}
-        self.latency_s = latency_s or {}
-
-    def send(self, src: int, dst: int, n_elems: int, phase: str):
-        # NB: the paper's Eq. 5 counts committee self-uploads and
-        # self-broadcasts as messages (n·m and n terms have no self-send
-        # exclusion), so src == dst is allowed and counted.
-        self.phases.setdefault(phase, PhaseStats()).add(n_elems)
-
-    def stats(self, phase: str | None = None) -> PhaseStats:
-        if phase is not None:
-            return self.phases.get(phase, PhaseStats())
-        total = PhaseStats()
-        for p in self.phases.values():
-            total.msg_num += p.msg_num
-            total.msg_size += p.msg_size
-        return total
-
-
-# ---------------------------------------------------------------------------
-# Protocols
-# ---------------------------------------------------------------------------
 
 class FLSimulation:
-    """n-party simulation driving the share schemes over a Network."""
+    """n-party simulation driving the transports over one Network."""
 
     def __init__(self, n: int, m: int = 3, scheme: str = "additive",
                  seed: int = 0, b: int = 10,
                  agg: SecureAggregator | None = None,
-                 latency_s: dict[int, float] | None = None):
+                 latency_s: dict[int, float] | None = None,
+                 fp: FixedPointConfig | None = None,
+                 shamir_degree: int | None = None,
+                 chunk: int = 2048):
+        if agg is not None:
+            # a custom aggregator donates its codec configuration; the
+            # committee size still comes from m (it differs per protocol)
+            scheme = agg.scheme
+            fp = fp if fp is not None else agg.fp
+            if shamir_degree is None:
+                shamir_degree = agg.shamir_degree
         self.n = n
         self.m = m
         self.b = b
         self.seed = seed
         self.scheme = scheme
+        self.fp = fp
         self.net = Network(latency_s)
         self.round = 0
-        self.committee: tuple[int, ...] | None = None
-        self._members = tuple(range(n))
-        self.agg_p2p = agg or SecureAggregator(scheme=scheme, m=n)
-        self.agg_two = SecureAggregator(scheme=scheme, m=m)
+        kw = dict(scheme=scheme, seed=seed, net=self.net, fp=fp,
+                  shamir_degree=shamir_degree, chunk=chunk)
+        self.transports: dict[str, Transport] = {
+            "plain": PlainTransport(n, m=m, b=b, **kw),
+            "p2p": P2PTransport(n, m=m, b=b, **kw),
+            "two_phase": TwoPhaseTransport(n, m=m, b=b, **kw),
+        }
+
+    @property
+    def committee(self):
+        return self.transports["two_phase"].committee
 
     # -- Phase I ----------------------------------------------------------
 
     def elect_committee(self) -> tuple[int, ...]:
         """Alg. 2 with counted messages (P2P MPC on b-vectors)."""
-        n, b = self.n, self.b
-        result = committee_mod.elect(n, self.m, b, self.seed + self.round)
-        # wire accounting: each election round is one P2P additive MPC
-        # exchange of b-element messages (shares + partial sums)
-        for _ in range(result.rounds):
-            for i in range(n):
-                for j in range(n):
-                    if i != j:
-                        self.net.send(i, j, b, "phase1")     # share
-                for j in range(n):
-                    if i != j:
-                        self.net.send(i, j, b, "phase1")     # partial sum
-        self.committee = result.committee
-        return result.committee
+        return self.transports["two_phase"].elect(self.round)
+
+    # -- protocol dispatch -------------------------------------------------
+
+    def aggregate(self, protocol: str, flats, party_ids=None, **kw):
+        """Run one aggregation round over the named transport.
+
+        ``flats`` holds one flat update per *live* party; ``party_ids``
+        are their original ids (party i always masks with party-i's
+        Philox stream).  Returns ``(mean, total network stats)``.
+        """
+        mean = self.transports[protocol].aggregate(
+            flats, party_ids, round_index=self.round, **kw)
+        self.round += 1
+        return mean, self.net.stats()
 
     # -- P2P aggregation (baseline framework) ------------------------------
 
     def aggregate_p2p(self, flats: list, alive: set[int] | None = None):
         """Alg. 1 over the whole model; returns (mean, stats)."""
-        n = self.n
-        alive = alive if alive is not None else set(range(n))
-        live = sorted(alive)
-        s = int(flats[0].shape[0])
-        for i in live:
-            for j in live:
-                if i != j:
-                    self.net.send(i, j, s, "p2p")            # share V(i,j)
-        for i in live:
-            for j in live:
-                if i != j:
-                    self.net.send(i, j, s, "p2p")            # partial S(i)
-        agg = SecureAggregator(scheme=self.scheme, m=len(live))
-        mean = agg.aggregate_reference(
-            [flats[i] for i in live], seed=self.seed,
+        live = sorted(alive) if alive is not None else list(range(self.n))
+        mean = self.transports["p2p"].aggregate(
+            [flats[i] for i in live], party_ids=live,
             round_index=self.round)
         self.round += 1
         return mean, self.net.stats("p2p")
@@ -143,42 +103,13 @@ class FLSimulation:
     # -- Two-phase aggregation (the paper's contribution) -------------------
 
     def aggregate_two_phase(self, flats: list,
-                            alive: set[int] | None = None):
+                            alive: set[int] | None = None,
+                            committee_dropout=()):
         """Alg. 3: share upload -> committee chain-sum -> broadcast."""
-        if self.committee is None:
-            self.elect_committee()
-        n, m = self.n, self.m
-        alive = alive if alive is not None else set(range(n))
-        live = sorted(alive)
-        s = int(flats[0].shape[0])
-        com = self.committee
-
-        # 1) every live party uploads m shares to the committee
-        shares = {}
-        for i in live:
-            stack = self.agg_two.make_shares(
-                flats[i], seed=self.seed, party=i, round_index=self.round)
-            shares[i] = stack
-            for w, member in enumerate(com):
-                self.net.send(i, member, s, "phase2_upload")
-
-        # 2) committee members sum received shares; chain-exchange the
-        #    partial sums (m-1 messages — matches Eq. 5's middle term)
-        member_sums = []
-        for w in range(m):
-            member_sums.append(
-                self.agg_two.reduce_party_shares(
-                    jnp.stack([shares[i][w] for i in live])[:, None])[0])
-        for w in range(m - 1):
-            self.net.send(com[w], com[w + 1], s, "phase2_exchange")
-        total = self.agg_two.reconstruct_sum(jnp.stack(member_sums))
-        mean = self.agg_two.decode_mean(total, len(live))
-
-        # 3) committee broadcasts G to every party (n messages, member
-        #    w -> parties i with i mod m == w-1, Alg. 3 line 22)
-        for i in range(n):
-            w = i % m
-            self.net.send(com[w], i, s, "phase2_broadcast")
+        live = sorted(alive) if alive is not None else list(range(self.n))
+        mean = self.transports["two_phase"].aggregate(
+            [flats[i] for i in live], party_ids=live,
+            round_index=self.round, committee_dropout=committee_dropout)
         self.round += 1
         return mean, self.net.stats()
 

@@ -30,6 +30,7 @@ are psum'd in a 16/16-bit split-limb representation (exact for up to
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Sequence
 
 import jax
@@ -177,6 +178,18 @@ def _share_dynamic(flat_p, m, k0, k1, fp, hi_base, block_rows, use_ref):
                      block_rows=block_rows, use_ref=use_ref)
 
 
+def leaf_seed_tag(path) -> int:
+    """Deterministic per-leaf seed tweak from the pytree path.
+
+    Must be identical on every host and across process restarts — the
+    masks only cancel if all parties derive the same stream per leaf —
+    so this is ``zlib.crc32`` of the path string, NOT Python ``hash()``
+    (which is salted by ``PYTHONHASHSEED`` for str).
+    """
+    key = "/".join(str(p) for p in path)
+    return zlib.crc32(key.encode("utf-8")) & 0x7FFFFFFF
+
+
 def secure_aggregate_tree(tree, **kw):
     """Pytree wrapper: secure-aggregate **leaf-wise**.
 
@@ -191,7 +204,7 @@ def secure_aggregate_tree(tree, **kw):
     max_chunk = 1 << 30   # stay under XLA's 2^31 single-dim limit
     out = []
     for path, leaf in flat:
-        tag = hash("/".join(str(p) for p in path)) & 0x7FFFFFFF
+        tag = leaf_seed_tag(path)
         kw_leaf = dict(kw)
         kw_leaf["seed"] = (kw.get("seed", 0) ^ tag) & 0x7FFFFFFF
         fl = jnp.ravel(leaf).astype(jnp.float32)

@@ -1,0 +1,93 @@
+"""Test bootstrap: make the suite collectable without ``hypothesis``.
+
+The property-based tests use a small slice of the hypothesis API
+(``given`` / ``settings`` / ``strategies.integers|lists|sampled_from``).
+When the real package is available (see requirements-dev.txt) it is
+used untouched; otherwise a minimal deterministic shim is installed in
+``sys.modules`` *before* test modules import, so collection succeeds
+and the properties still run over seeded random draws (boundary values
+first, then uniform samples).  The shim does no shrinking — it exists
+so `PYTHONPATH=src python -m pytest -q` runs green in minimal
+environments, not to replace hypothesis in CI.
+"""
+
+from __future__ import annotations
+
+
+import random
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401  (real package wins)
+except ImportError:
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw, boundaries=()):
+            self._draw = draw
+            self._boundaries = tuple(boundaries)
+
+        def example(self, rnd, index):
+            if index < len(self._boundaries):
+                return self._boundaries[index]
+            return self._draw(rnd)
+
+    def _integers(min_value=0, max_value=2 ** 63):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value),
+                         boundaries=(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rnd):
+            size = rnd.randint(min_size, max_size)
+            return [elements._draw(rnd) for _ in range(size)]
+        return _Strategy(draw)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rnd: rnd.choice(seq), boundaries=tuple(seq))
+
+    def _booleans():
+        return _Strategy(lambda rnd: rnd.choice([False, True]),
+                         boundaries=(False, True))
+
+    def _given(*strategies_args):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rnd = random.Random(0xC0FFEE)
+                for i in range(n):
+                    drawn = tuple(s.example(rnd, i)
+                                  for s in strategies_args)
+                    fn(*args, *drawn, **kwargs)
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original signature and demand fixtures for
+            # the property arguments
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return decorate
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,303 @@
+"""Transport layer: batched wire accounting, vectorized party engine,
+committee fault tolerance (sub-threshold Shamir), leaf-seed stability."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import costmodel
+from repro.core.aggregation import SecureAggregator
+from repro.core.costmodel import CostParams
+from repro.core.fixed_point import FixedPointConfig
+from repro.fl import (FLSimulation, Network, P2PTransport, PlainTransport,
+                      SPMDTransport, TwoPhaseTransport, make_transport)
+
+
+def _flats(n, s, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, s).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Batched counters == per-message counters == paper closed forms
+# ---------------------------------------------------------------------------
+
+def test_send_batch_equals_send_loop():
+    a, b = Network(), Network()
+    for _ in range(7):
+        a.send(0, 1, 13, "x")
+    b.send_batch(7, 13, "x")
+    assert a.stats("x") == b.stats("x")
+
+
+@pytest.mark.parametrize("n,m,e,s", [(4, 3, 2, 242), (10, 3, 3, 64),
+                                     (16, 5, 1, 100)])
+def test_transport_counters_match_equations(n, m, e, s):
+    p = CostParams(n=n, e=e, s=s, m=m, b=10)
+    flats = _flats(n, s)
+
+    p2p = make_transport("p2p", n, m=m, seed=1)
+    for r in range(e):
+        p2p.aggregate(flats, round_index=r)
+    assert p2p.net.stats("p2p").msg_num == costmodel.p2p_msg_num(p)
+    assert p2p.net.stats("p2p").msg_size == costmodel.p2p_msg_size(p)
+
+    two = make_transport("two_phase", n, m=m, seed=1)
+    two.elect()
+    for r in range(e):
+        two.aggregate(flats, round_index=r)
+    st1 = two.net.stats("phase1")
+    assert st1.msg_num == costmodel.phase1_msg_num(p)
+    assert st1.msg_size == costmodel.phase1_msg_size(p)
+    got_num = sum(two.net.stats(ph).msg_num for ph in
+                  ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    got_size = sum(two.net.stats(ph).msg_size for ph in
+                   ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    assert got_num == costmodel.phase2_msg_num(p)
+    assert got_size == costmodel.phase2_msg_size(p)
+
+
+def test_plain_transport_counters_and_mean():
+    n, s = 6, 31
+    flats = _flats(n, s)
+    tr = make_transport("plain", n)
+    mean = tr.aggregate(flats)
+    assert tr.net.stats("plain").msg_num == n * (n - 1)
+    assert tr.net.stats("plain").msg_size == n * (n - 1) * s
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(flats).mean(0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine == reference math, and dropouts keep party streams
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["additive", "shamir"])
+def test_transport_mean_matches_plain(scheme):
+    n, s = 9, 57
+    flats = _flats(n, s)
+    ref = np.asarray(flats).mean(0)
+    for proto in ("p2p", "two_phase"):
+        tr = make_transport(proto, n, m=3, scheme=scheme, seed=5)
+        mean = tr.aggregate(flats)
+        np.testing.assert_allclose(np.asarray(mean), ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("scheme", ["additive", "shamir"])
+def test_dropout_preserves_party_streams(scheme):
+    """Aggregating survivors {0,2,3} with their original ids must equal
+    the reference aggregation of exactly those parties' updates."""
+    n, s = 5, 40
+    flats = _flats(n, s)
+    live = [0, 2, 3]
+    tr = make_transport("two_phase", n, m=3, scheme=scheme, seed=9)
+    mean = tr.aggregate(flats[jnp.asarray(live)], party_ids=live)
+    agg = SecureAggregator(scheme=scheme, m=3)
+    sums = agg.sum_shares_batch(flats[jnp.asarray(live)], seed=9,
+                                party_ids=live, round_index=0)
+    want = agg.decode_mean(agg.reconstruct_sum(sums), len(live))
+    np.testing.assert_array_equal(np.asarray(mean), np.asarray(want))
+    # and it is a faithful mean of the survivors
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(flats)[live].mean(0), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Sub-threshold Shamir: committee members drop, round still reconstructs
+# ---------------------------------------------------------------------------
+
+def test_shamir_subthreshold_committee_dropout():
+    """degree d < m−1: any d+1 surviving members reconstruct exactly."""
+    n, s, m, d = 8, 50, 4, 1
+    flats = _flats(n, s)
+    ref = np.asarray(flats).mean(0)
+
+    full = make_transport("two_phase", n, m=m, scheme="shamir",
+                          seed=3, shamir_degree=d)
+    full.elect()
+    mean_full = full.aggregate(flats, round_index=0)
+
+    for k in range(m - (d + 1)):
+        tr = make_transport("two_phase", n, m=m, scheme="shamir",
+                            seed=3, shamir_degree=d)
+        tr.elect()
+        dropped = list(tr.committee[:k + 1])
+        mean = tr.aggregate(flats, round_index=0,
+                            committee_dropout=dropped)
+        # sub-threshold reconstruction is *exact*, not approximate
+        np.testing.assert_array_equal(np.asarray(mean),
+                                      np.asarray(mean_full))
+    np.testing.assert_allclose(np.asarray(mean_full), ref, atol=2e-4)
+
+
+def test_shamir_subthreshold_counts_only_live_members():
+    n, s, m, d = 6, 20, 3, 1
+    flats = _flats(n, s)
+    tr = make_transport("two_phase", n, m=m, scheme="shamir",
+                        seed=3, shamir_degree=d)
+    tr.elect()
+    tr.aggregate(flats, committee_dropout=[tr.committee[0]])
+    assert tr.net.stats("phase2_upload").msg_num == n * (m - 1)
+    assert tr.net.stats("phase2_exchange").msg_num == m - 2
+    assert tr.net.stats("phase2_broadcast").msg_num == n
+
+
+def test_too_many_committee_dropouts_raises():
+    n, m, d = 6, 3, 1
+    flats = _flats(n, 16)
+    tr = make_transport("two_phase", n, m=m, scheme="shamir",
+                        seed=3, shamir_degree=d)
+    tr.elect()
+    with pytest.raises(ValueError, match="needs 2 shares"):
+        tr.aggregate(flats, committee_dropout=list(tr.committee[:2]))
+
+
+def test_additive_committee_dropout_raises():
+    n = 5
+    flats = _flats(n, 16)
+    tr = make_transport("two_phase", n, m=3, scheme="additive", seed=3)
+    tr.elect()
+    with pytest.raises(ValueError, match="additive"):
+        tr.aggregate(flats, committee_dropout=[tr.committee[0]])
+
+
+def test_rejected_round_leaves_counters_intact():
+    """A ValueError'd aggregate must not corrupt the Eq. 5-6 counters."""
+    n, s = 5, 16
+    flats = _flats(n, s)
+    tr = make_transport("two_phase", n, m=3, scheme="additive", seed=3)
+    tr.elect()
+    with pytest.raises(ValueError):
+        tr.aggregate(flats, committee_dropout=[tr.committee[0]])
+    tr.aggregate(flats)   # one valid round
+    p = CostParams(n=n, e=1, s=s, m=3, b=10)
+    got = sum(tr.net.stats(ph).msg_num for ph in
+              ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    assert got == costmodel.phase2_msg_num(p)
+
+
+def test_make_shares_batch_matches_loop_at_high_rounds():
+    """round_index >= 256 spills into the high stream word; the batch
+    path must keep deriving the exact per-party streams."""
+    flats = _flats(3, 21)
+    for scheme in ("additive", "shamir"):
+        agg = SecureAggregator(scheme=scheme, m=3)
+        for r in (0, 255, 256, 1000):
+            batch = agg.make_shares_batch(flats, seed=5,
+                                          party_ids=[0, 1, 2],
+                                          round_index=r)
+            loop = jnp.stack([
+                agg.make_shares(flats[i], seed=5, party=i, round_index=r)
+                for i in range(3)])
+            np.testing.assert_array_equal(np.asarray(batch),
+                                          np.asarray(loop))
+
+
+def test_simulation_custom_agg_forwards_scheme_and_degree():
+    """FLSimulation(agg=...) must honour the aggregator's codec config
+    (regression: it used to silently keep the default scheme/degree)."""
+    n, s = 6, 24
+    flats = [jnp.asarray(f) for f in np.asarray(_flats(n, s))]
+    custom = SecureAggregator(scheme="shamir", m=3, shamir_degree=1)
+    sim = FLSimulation(n=n, m=3, agg=custom, seed=3)
+    sim.elect_committee()
+    mean, _ = sim.aggregate_two_phase(
+        flats, committee_dropout=[sim.committee[0]])
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(jnp.stack(flats)).mean(0),
+                               atol=2e-4)
+
+
+def test_default_fp_headroom_enforced_at_scale():
+    tr = make_transport("two_phase", 10_000, seed=1)
+    with pytest.raises(ValueError, match="headroom"):
+        tr.aggregate(jnp.zeros((10_000, 8), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# FLSimulation facade stays equivalent + scales
+# ---------------------------------------------------------------------------
+
+def test_simulation_facade_roundtrips():
+    n, s = 7, 29
+    flats = [jnp.asarray(f) for f in np.asarray(_flats(n, s))]
+    sim = FLSimulation(n=n, m=3, seed=0)
+    sim.elect_committee()
+    assert sim.committee is not None
+    mean, _ = sim.aggregate_two_phase(flats)
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(jnp.stack(flats)).mean(0),
+                               atol=2e-4)
+    mean2, _ = sim.aggregate_p2p(flats, alive=set(range(n)))
+    np.testing.assert_allclose(np.asarray(mean2),
+                               np.asarray(jnp.stack(flats)).mean(0),
+                               atol=2e-4)
+
+
+def test_large_n_round_counters_exact():
+    """The batched engine at n=2000 stays bit-exact vs the closed forms
+    (the 10k acceptance run lives in benchmarks/msg_cost.py)."""
+    n, s, m = 2000, 64, 3
+    fp = FixedPointConfig(frac_bits=10, clip=64.0, algebra="ring")
+    flats = _flats(n, s)
+    tr = make_transport("two_phase", n, m=m, seed=1, fp=fp, chunk=512)
+    tr.elect()
+    mean = tr.aggregate(flats)
+    p = CostParams(n=n, e=1, s=s, m=m, b=10)
+    assert tr.net.stats("phase1").msg_num == costmodel.phase1_msg_num(p)
+    got = sum(tr.net.stats(ph).msg_num for ph in
+              ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
+    assert got == costmodel.phase2_msg_num(p)
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.asarray(flats).mean(0), atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# SPMD adapter mapping
+# ---------------------------------------------------------------------------
+
+def test_spmd_transport_mode_mapping():
+    assert SPMDTransport("two_phase").mode == "psum"
+    assert SPMDTransport("two_phase_scatter").mode == "reduce_scatter"
+    assert SPMDTransport("p2p").mode == "p2p"
+    assert SPMDTransport("plain").mode == "plain"
+    with pytest.raises(ValueError):
+        SPMDTransport("bogus")
+    tr = make_transport("two_phase", 8, backend="spmd", m=3)
+    assert isinstance(tr, SPMDTransport) and tr.n == 8
+
+
+# ---------------------------------------------------------------------------
+# Leaf-seed derivation is process-stable (regression: was Python hash())
+# ---------------------------------------------------------------------------
+
+def test_leaf_seed_tag_is_hash_seed_invariant():
+    from repro.fl.spmd import leaf_seed_tag
+    import zlib
+    from jax.tree_util import GetAttrKey, DictKey
+
+    path = (DictKey("layer0"), GetAttrKey("kernel"))
+    want = zlib.crc32("/".join(str(p) for p in path).encode()) & 0x7FFFFFFF
+    assert leaf_seed_tag(path) == want
+
+    # the same computation must agree across interpreters with different
+    # string-hash salts — exactly what Python hash() violated
+    prog = ("from repro.fl.spmd import leaf_seed_tag;"
+            "from jax.tree_util import GetAttrKey, DictKey;"
+            "print(leaf_seed_tag((DictKey('layer0'),"
+            "GetAttrKey('kernel'))))")
+    outs = set()
+    for hash_seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=hash_seed,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, check=True,
+                             cwd=os.path.dirname(os.path.dirname(
+                                 os.path.abspath(__file__))))
+        outs.add(out.stdout.strip())
+    assert outs == {str(want)}

@@ -1,13 +1,24 @@
-"""Kernel micro-benchmarks: oracle wall time on CPU + HBM-roofline
+"""Kernel micro-benchmarks: backend-dispatch timings + HBM-roofline
 projections for TPU v5e from the kernels' exact byte/flop counts.
 
-CPU microseconds are NOT the TPU performance claim — the derived column
-reports the v5e roofline time (bytes/819GB/s or flops/197T) that the
-fused kernel's traffic model implies, which EXPERIMENTS.md §Perf uses.
+Two measurement families:
+
+* **oracle rows** (1M elements) — jnp-oracle wall time on the current
+  backend plus the derived v5e roofline time (bytes/819GB/s or
+  flops/197T) that the fused kernel's traffic model implies; CPU
+  microseconds are NOT the TPU performance claim (EXPERIMENTS.md §Perf).
+* **dispatch rows** (64K elements) — the same kernel timed through each
+  available dispatch mode (``ref`` / ``interpret`` / ``compiled`` on
+  TPU), recorded into ``BENCH_kernels.json`` so CI tracks the cost of
+  the interpret fallback and a TPU run can diff compiled speedups
+  against the same file.  Interpret mode executes the grid in Python —
+  its wall time is a correctness-path cost, benchmarked at a small size
+  on purpose.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -16,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import philox
 from repro.core.fixed_point import DEFAULT_FIELD, DEFAULT_RING
+from repro.kernels import dispatch
 from repro.kernels.share_gen import share_gen
 from repro.kernels.reconstruct import reconstruct
 from repro.kernels.shamir import shamir_share
@@ -30,6 +42,72 @@ def _time(fn, repeats=3):
     for _ in range(repeats):
         jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / repeats
+
+
+def _available_modes() -> list[str]:
+    cap = dispatch.probe()
+    if cap == dispatch.CAP_TPU:
+        return ["ref", "compiled"]
+    if cap == dispatch.CAP_INTERPRET:
+        return ["ref", "interpret"]
+    return ["ref"]
+
+
+def _mode_kwargs(mode: str) -> dict:
+    if mode == "ref":
+        return {"use_ref": True}
+    return {"interpret": mode == "interpret"}
+
+
+_DISPATCH_ROWS_CACHE: dict[tuple, dict] = {}
+
+
+def dispatch_rows(d: int = 1 << 16, m: int = 3, repeats: int = 2) -> dict:
+    """Per-mode kernel timings at ``d`` elements -> {row_name: seconds}.
+
+    Memoized per (d, m, repeats): ``benchmarks.run`` consumes the same
+    rows twice (CSV section + BENCH_kernels.json) and interpret-mode
+    timings are the slow path — measure once, report twice.
+    """
+    key = (d, m, repeats)
+    if key in _DISPATCH_ROWS_CACHE:
+        return _DISPATCH_ROWS_CACHE[key]
+    x = jnp.asarray(np.random.RandomState(0).randn(d).astype(np.float32))
+    k0, k1 = philox.derive_key(1, 1)
+    rows: dict[str, float] = {}
+    for mode in _available_modes():
+        kw = _mode_kwargs(mode)
+        t = _time(lambda: share_gen(x, m, k0, k1, DEFAULT_RING,
+                                    block_rows=8, **kw)[0],
+                  repeats=repeats)
+        rows[f"share_gen_m{m}_{mode}"] = t
+        shares = share_gen(x, m, k0, k1, DEFAULT_RING, block_rows=8,
+                           **kw)[0]
+        t = _time(lambda: reconstruct(shares, 4, DEFAULT_RING,
+                                      block_rows=8, **kw),
+                  repeats=repeats)
+        rows[f"reconstruct_m{m}_{mode}"] = t
+        t = _time(lambda: shamir_share(x, m, k0, k1, DEFAULT_FIELD,
+                                       block_rows=8, **kw)[0],
+                  repeats=repeats)
+        rows[f"shamir_share_m{m}_{mode}"] = t
+    _DISPATCH_ROWS_CACHE[key] = rows
+    return rows
+
+
+def write_bench_json(path: str = "BENCH_kernels.json", d: int = 1 << 16,
+                     m: int = 3) -> dict:
+    """Record ref/interpret/compiled timings + dispatch provenance."""
+    rows = dispatch_rows(d=d, m=m)
+    bench = {
+        "dispatch": dispatch.capability_summary(),
+        "elements": d,
+        "m": m,
+        "wall_s": {k: round(v, 6) for k, v in rows.items()},
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+    return bench
 
 
 def emit(writer):
@@ -66,3 +144,7 @@ def emit(writer):
         fused = 4 * d * (m + 1)
         writer(f"share_gen_fusion_traffic_ratio_m{m}", None,
                round(naive / fused, 2))
+
+    # per-dispatch-mode timings (small size; also in BENCH_kernels.json)
+    for name, secs in dispatch_rows().items():
+        writer(f"{name}_64K", secs * 1e6, None)

@@ -53,6 +53,12 @@ def main() -> None:
         writer("bench_10k_round_wall_s", None, vr["phase2_wall_s"])
         writer("bench_10k_round_msg_num", None, vr["msg_num"])
 
+    # kernel dispatch-mode timings (ref / interpret / compiled-on-TPU)
+    if only in (None, "kernels_bench"):
+        kb = kernels_bench.write_bench_json("BENCH_kernels.json")
+        writer("bench_kernels_capability", None,
+               kb["dispatch"]["capability"])
+
     # dry-run roofline summary (if the sweep has been run)
     if only in (None, "dryrun_summary"):
         for fn in sorted(glob.glob("experiments/dryrun/*.json")):

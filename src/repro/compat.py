@@ -1,0 +1,229 @@
+"""JAX version-drift shims — every guard lives here, nowhere else.
+
+Policy (DESIGN.md §7): the rest of the codebase is written against the
+*current* JAX API surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams``, ``lax.axis_size``)
+and imports the names from this module.  When the installed JAX predates
+an API, the shim maps it onto the older spelling; when an old JAX cannot
+express a construct at all, the shim either degrades to an equivalent
+lowering (documented per-function below) or raises
+``MeshCapabilityError`` with a reason a test can assert on.
+
+Nothing in this file touches jax device state at import time — the
+dry-run isolation rule (``launch/mesh.py``) depends on that.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+
+__all__ = [
+    "AxisType", "MeshCapabilityError", "PARTIAL_MANUAL_OK", "axis_size",
+    "make_mesh", "manual_axes_for", "psum_scatter_tiled", "set_mesh",
+    "shard_map", "tpu_compiler_params",
+]
+
+
+def _jax_version() -> tuple[int, ...]:
+    try:
+        return tuple(int(p) for p in jax.__version__.split(".")[:3])
+    except ValueError:  # dev builds like "0.4.37.dev20..."
+        parts = []
+        for p in jax.__version__.split(".")[:3]:
+            digits = "".join(c for c in p if c.isdigit())
+            parts.append(int(digits) if digits else 0)
+        return tuple(parts)
+
+
+JAX_VERSION = _jax_version()
+
+#: New-style ``jax.shard_map`` supports *partially* manual meshes
+#: properly (``axis_index`` over a manual axis no longer lowers to a
+#: bare ``PartitionId`` that the GSPMD partitioner rejects, and
+#: ``psum_scatter`` does not trip manual-subgroup sharding checks).  On
+#: older JAX the only reliable mode is **fully manual** shard_map.
+PARTIAL_MANUAL_OK = hasattr(jax, "shard_map")
+
+
+class MeshCapabilityError(RuntimeError):
+    """The installed JAX cannot express the requested mesh/collective.
+
+    Raised (never silently swallowed) so tests can skip with the exact
+    reason asserted — see ``tests/test_spmd_subprocess.py``.
+    """
+
+
+# ---------------------------------------------------------------------------
+# AxisType / mesh construction
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` (added in JAX 0.5.x).
+
+        Old JAX treats every mesh axis as Auto; the enum exists so
+        callers can keep writing ``axis_types=(AxisType.Auto,) * k``
+        unconditionally.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates JAX without ``axis_types=``.
+
+    On old JAX the axis types are dropped (everything is Auto there,
+    which is exactly what this repo requests — the party axes are taken
+    Manual per ``shard_map`` call, never at mesh construction).
+    Raises ``MeshCapabilityError`` when the host cannot provide enough
+    devices for the requested shape.
+    """
+    needed = 1
+    for s in axis_shapes:
+        needed *= int(s)
+    avail = len(devices) if devices is not None else len(jax.devices())
+    if avail < needed:
+        raise MeshCapabilityError(
+            f"mesh {tuple(axis_shapes)} over {tuple(axis_names)} needs "
+            f"{needed} devices but the installed JAX/XLA exposes only "
+            f"{avail}; the installed JAX cannot express the mesh")
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:
+            pass  # old jax.make_mesh has no axis_types kwarg
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` / ``jax.sharding.use_mesh`` / legacy ``with mesh``.
+
+    All three spellings install ``mesh`` as the ambient mesh for jitted
+    collectives; the legacy ``Mesh.__enter__`` path is what JAX ≤ 0.4.x
+    provides.
+    """
+    if hasattr(jax, "set_mesh"):
+        ctx = jax.set_mesh(mesh)
+    elif hasattr(jax.sharding, "use_mesh"):
+        ctx = jax.sharding.use_mesh(mesh)
+    else:
+        ctx = mesh
+    with ctx:
+        yield mesh
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def manual_axes_for(mesh, party_axes):
+    """Which mesh axes a shard_map must take manual.
+
+    New JAX: just the party axes (``model`` stays GSPMD-auto — tensor
+    parallelism inside a party).  Old JAX: *all* axes — partially-manual
+    regions mis-lower ``axis_index``/``psum_scatter`` there, so the
+    model axis is taken manual too and the activation-sharding rules
+    drop their ``model`` entries (each model-rank redundantly computes
+    the full TP math on replicated blocks; numerics are unchanged).
+    """
+    if PARTIAL_MANUAL_OK:
+        return set(party_axes)
+    return set(mesh.axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """Current ``jax.shard_map`` signature on any JAX.
+
+    Old-JAX mapping: ``axis_names`` (the manual axes) becomes the
+    complement ``auto=`` set and ``check_vma`` becomes ``check_rep``.
+    Per ``manual_axes_for``, old JAX additionally promotes the region to
+    fully manual — partially-manual is not expressible there.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+    manual = manual_axes_for(mesh, axis_names or mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - frozenset(manual)
+    return _legacy(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=bool(check_vma) if check_vma is not None
+                   else False, auto=auto)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` with a pre-0.5 fallback.
+
+    Old JAX exposes the size through ``jax.core.axis_frame`` (which
+    returns either the size itself or a frame carrying ``.size``).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
+
+def psum_scatter_tiled(x, axis_name, *, scatter_dimension: int):
+    """Tiled ``psum_scatter`` that is safe on every supported JAX.
+
+    On old JAX the native op trips a manual-subgroup sharding check in
+    the XLA SPMD partitioner (hard process abort, not an exception), so
+    the shim lowers to the mathematically identical ``psum`` + local
+    tile slice.  Bit-exact for the uint32 share stacks this repo
+    scatters (ring adds are order-independent); float users inherit
+    all-reduce reduction order, which psum_scatter's ring order matches
+    on a single host anyway.
+    """
+    if PARTIAL_MANUAL_OK:
+        return jax.lax.psum_scatter(x, axis_name,
+                                    scatter_dimension=scatter_dimension,
+                                    tiled=True)
+    n = axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    full = jax.lax.psum(x, axis_name)
+    per = full.shape[scatter_dimension] // n
+    return jax.lax.dynamic_slice_in_dim(full, idx * per, per,
+                                        axis=scatter_dimension)
+
+
+# ---------------------------------------------------------------------------
+# Pallas
+# ---------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs) -> dict:
+    """``compiler_params=`` kwargs for ``pl.pallas_call`` on any JAX.
+
+    The params class was renamed ``TPUCompilerParams`` →
+    ``CompilerParams``; returns ``{"compiler_params": <instance>}`` with
+    whichever class exists, or ``{}`` if neither accepts the arguments
+    (interpret mode ignores compiler params entirely, so dropping them
+    is always safe there).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is None:
+            continue
+        try:
+            return {"compiler_params": cls(**kwargs)}
+        except TypeError:
+            continue
+    return {}

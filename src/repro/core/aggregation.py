@@ -60,12 +60,19 @@ class SecureAggregator:
         in P2P mode).
       fp: fixed-point codec config (algebra must match the scheme).
       shamir_degree: polynomial degree (default m-1, paper's choice).
+      kernel_backend: per-object override of the kernel dispatch mode
+        for the batch paths (``auto`` | ``compiled`` | ``interpret`` |
+        ``ref``; default ``None`` = dispatch policy, which is compiled
+        on TPU and the jnp oracle elsewhere — see
+        ``kernels.dispatch.decide(hot_path=True)``).  Every mode is
+        bit-identical (``tests/test_kernel_dispatch.py``).
     """
 
     scheme: str = SCHEME_ADDITIVE
     m: int = 3
     fp: FixedPointConfig | None = None
     shamir_degree: int | None = None
+    kernel_backend: str | None = None
 
     def __post_init__(self):
         if self.scheme not in (SCHEME_ADDITIVE, SCHEME_SHAMIR):
@@ -98,7 +105,7 @@ class SecureAggregator:
 
     def make_shares_batch(self, flats, *, seed: int, party_ids,
                           round_index: int = 0):
-        """All parties' share stacks in one vmap: ``[l, D] -> [l, m, D]``.
+        """All parties' share stacks: ``[l, D] -> [l, m, D]``.
 
         Bit-identical to stacking per-party ``make_shares`` calls for
         every ``round_index``: party ids stay below 2**24, so the low
@@ -106,11 +113,22 @@ class SecureAggregator:
         and the high word ``round_index >> 8`` is party-independent —
         both are fed to ``derive_key`` exactly as the Python-int path
         of ``make_shares`` derives them.
+
+        Routed through ``kernels.dispatch``: the jnp-oracle vmap, the
+        interpret-mode Pallas kernel, and the compiled kernel all
+        produce the same bits (the kernels mask with the ``"flat"``
+        Philox counter layout — exactly ``additive``/``shamir`` streams).
         """
+        from repro.kernels import dispatch
         flats = jnp.asarray(flats, dtype=jnp.float32)
         ids = jnp.asarray(np.asarray(party_ids), dtype=jnp.uint32)
         stream_lo = jnp.uint32((round_index << 24) & 0xFFFFFFFF) | ids
         stream_hi = (round_index << 24) >> 32
+
+        dec = dispatch.decide(hot_path=True, forced=self.kernel_backend)
+        if not dec.use_ref:
+            return self._make_shares_batch_kernel(flats, stream_lo,
+                                                  stream_hi, seed, dec)
 
         def _one(flat, lo):
             k0, k1 = philox.derive_key(seed, (lo, stream_hi))
@@ -121,6 +139,28 @@ class SecureAggregator:
                                 degree=self.shamir_degree)
 
         return jax.vmap(_one)(flats, stream_lo)
+
+    def _make_shares_batch_kernel(self, flats, stream_lo, stream_hi,
+                                  seed: int, dec):
+        """Fused-kernel twin of the vmap path (same keys, same bits)."""
+        from repro.kernels.share_gen import share_gen_batch, unpad_flat
+        from repro.kernels.shamir import shamir_share_batch
+        k0s, k1s = jax.vmap(
+            lambda lo: philox.derive_key(seed, (lo, stream_hi)))(stream_lo)
+        keys = jnp.stack([k0s, k1s], axis=1)
+        block_rows = 64 if dec.mode == "compiled" else 8
+        # forced=dec.mode: the outer decision is authoritative — without
+        # it the inner op re-consults the env var, which would invert
+        # the documented per-object-over-env precedence
+        if self.scheme == SCHEME_ADDITIVE:
+            stacks, d = share_gen_batch(
+                flats, self.m, keys, self.fp, block_rows=block_rows,
+                layout="flat", forced=dec.mode)
+        else:
+            stacks, d = shamir_share_batch(
+                flats, self.m, keys, self.fp, degree=self.shamir_degree,
+                block_rows=block_rows, layout="flat", forced=dec.mode)
+        return unpad_flat(stacks, d)
 
     def sum_shares_batch(self, flats, *, seed: int, party_ids,
                          round_index: int = 0, chunk: int = 2048):
@@ -188,6 +228,51 @@ class SecureAggregator:
     def decode_mean(self, code_sum, n: int):
         return self.fp.decode_mean(code_sum, n)
 
+    def reconstruct_mean(self, member_sums, n: int,
+                         points: tuple[int, ...] | None = None):
+        """Fused reconstruct + decode + 1/n: ``[k, D] -> [D]`` floats.
+
+        The transport epilogue (Alg. 1 l.13–20 / Alg. 3 l.20–22),
+        routed through ``kernels.dispatch``: ``kernels/reconstruct``
+        (ring) or ``kernels/shamir`` (field Lagrange) when the kernel
+        path is selected, the exact pre-dispatch oracle sequence
+        (``reconstruct_sum`` + ``decode_mean``) otherwise.  All modes
+        are bit-identical — the kernels decode with the same float
+        sequence as ``decode_mean`` (exact power-of-two unscale, then
+        one division by ``n``).
+        """
+        from repro.kernels import dispatch
+        if points is not None and self.scheme == SCHEME_ADDITIVE:
+            # validated on EVERY dispatch path: the kernel branch would
+            # otherwise silently sum a subset of member rows (unmatched
+            # masks don't cancel) where the oracle raises
+            raise ValueError(
+                "additive reconstruction needs all m shares; "
+                "points= is a Shamir-only argument")
+        member_sums = jnp.asarray(member_sums, dtype=jnp.uint32)
+        dec = dispatch.decide(hot_path=True, forced=self.kernel_backend)
+        if dec.use_ref:
+            return self.decode_mean(
+                self.reconstruct_sum(member_sums, points), n)
+        from repro.kernels.share_gen import pad_to_tiles, unpad_flat
+        block_rows = 64 if dec.mode == "compiled" else 8
+        tiled, d = pad_to_tiles(member_sums, block_rows)
+        # The kernels are called with n=1 (decoded *sum*: the in-kernel
+        # unscale is an exact power-of-two multiply) and the 1/n mean is
+        # applied eagerly here — inside jit, XLA folds the two constant
+        # divisions into one reciprocal multiply, which is 1 ulp off the
+        # eager decode_mean sequence the pre-dispatch oracle path uses.
+        if self.scheme == SCHEME_ADDITIVE:
+            from repro.kernels.reconstruct import reconstruct as rec_kernel
+            out = rec_kernel(tiled, 1, self.fp, block_rows=block_rows,
+                             forced=dec.mode)
+        else:
+            from repro.kernels.shamir import shamir_reconstruct
+            out = shamir_reconstruct(tiled, 1, self.fp, points=points,
+                                     block_rows=block_rows,
+                                     forced=dec.mode)
+        return unpad_flat(out, d) / float(n)
+
     # -- one-shot reference path (no transport; used by tests) -----------
 
     def aggregate_reference(self, flats, *, seed: int, round_index: int = 0):
@@ -197,8 +282,7 @@ class SecureAggregator:
         member_sums = self.sum_shares_batch(
             jnp.stack([jnp.asarray(f) for f in flats]), seed=seed,
             party_ids=np.arange(n), round_index=round_index)
-        total = self.reconstruct_sum(member_sums)
-        return self.decode_mean(total, n)
+        return self.reconstruct_mean(member_sums, n)
 
 
 def secure_mean_pytrees(trees, agg: SecureAggregator, *, seed: int,

@@ -69,21 +69,34 @@ def philox_4x32(counters, key0, key1):
     return jnp.stack(y, axis=-1)
 
 
-def tiled_words(rows: int, key0, key1, counter_hi=0, row_base=0):
+def tiled_words(rows: int, key0, key1, counter_hi=0, row_base=0,
+                layout: str = "tiled"):
     """Lane-tiled uniform words ``[rows, 128]`` — the kernel layout.
 
     Counter convention (shared with the Pallas kernels): for output
-    position ``(r, l)`` the Philox counter is
-    ``x0 = (row_base + r) * 32 + l // 4``, ``x1 = counter_hi``,
-    ``x2 = x3 = 0`` and the word used is lane ``l % 4`` of the block.
-    One Philox invocation therefore fills four adjacent lanes.
+    position ``(r, l)`` the Philox counter word ``x0`` is
+    ``(row_base + r) * 32 + l // 4`` and the word used is lane ``l % 4``
+    of the block — identical to the flat ``random_bits`` block/word
+    mapping for index ``i = 128·r + l``.  ``layout`` places
+    ``counter_hi``:
+
+    * ``"tiled"`` — ``x1 = counter_hi`` (the historical kernel stream);
+    * ``"flat"``  — ``x2 = counter_hi``, which makes the output equal to
+      ``random_bits(128·rows, ..., counter_hi).reshape(rows, 128)``
+      bit-for-bit — the stream ``core.additive``/``core.shamir`` mask
+      with, so the fused kernels can be bit-identical to those oracles.
     """
+    if layout not in ("tiled", "flat"):
+        raise ValueError(f"unknown counter layout {layout!r}")
     r = jnp.arange(rows, dtype=jnp.uint32)[:, None]
     lb = jnp.arange(32, dtype=jnp.uint32)[None, :]
     x0 = (r + jnp.asarray(row_base, jnp.uint32)) * jnp.uint32(32) + lb
     hi = jnp.full_like(x0, jnp.asarray(counter_hi, jnp.uint32))
     zero = jnp.zeros_like(x0)
-    y0, y1, y2, y3 = philox_4x32_tuple(x0, hi, zero, zero, key0, key1)
+    if layout == "tiled":
+        y0, y1, y2, y3 = philox_4x32_tuple(x0, hi, zero, zero, key0, key1)
+    else:
+        y0, y1, y2, y3 = philox_4x32_tuple(x0, zero, hi, zero, key0, key1)
     return jnp.stack([y0, y1, y2, y3], axis=-1).reshape(rows, 128)
 
 

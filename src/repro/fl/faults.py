@@ -12,11 +12,25 @@ applied per round:
   it rejoins the next round automatically.
 * **elastic membership** — join/leave between rounds; the driver
   re-runs Phase I election whenever membership changes.
+
+Per-round randomness is derived from ``(seed, round_index)`` through a
+``SeedSequence`` so each round draws an *independent* crash/straggler
+pattern — seeding a fresh RNG with the bare seed would replay the
+identical fault pattern every round, which systematically biases the
+paper's dropout experiments (the same parties die every time).
+
+Quorum floor: a round never proceeds without enough live committee
+members to reconstruct — ``degree + 1`` for Shamir, all ``m`` for the
+additive scheme.  Members below the threshold are resurrected (fastest
+first): in a real deployment the committee blocks until its quorum
+re-appears or re-elects; silently reconstructing from fewer points
+would return garbage.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -28,21 +42,73 @@ class RoundOutcome:
     straggled: set
 
 
+def round_rng(seed: int, round_index: int) -> np.random.RandomState:
+    """Independent, reproducible per-round RNG from (seed, round)."""
+    state = np.random.SeedSequence((int(seed) & 0xFFFFFFFF,
+                                    int(round_index) & 0xFFFFFFFF))
+    return np.random.RandomState(state.generate_state(1)[0])
+
+
 def apply_faults(members: set, latency_s: dict[int, float],
                  deadline_s: float | None, *, seed: int = 0,
-                 crash_prob: float = 0.0) -> RoundOutcome:
-    rng = np.random.RandomState(seed)
-    dropped = {i for i in members if rng.rand() < crash_prob}
+                 round_index: int = 0, crash_prob: float = 0.0,
+                 committee: Sequence[int] | None = None,
+                 reconstruct_threshold: int | None = None) -> RoundOutcome:
+    """One round of crash/straggler faults over ``members``.
+
+    Args:
+      committee: the Phase-I committee (original party ids), if any.
+      reconstruct_threshold: minimum live committee members the round
+        needs — ``shamir_degree + 1`` (or ``m`` for additive sharing).
+        Committee members beyond repair (not in ``members`` at all) are
+        a configuration error: the driver must re-elect first.
+    """
+    rng = round_rng(seed, round_index)
+    draws = {i: rng.rand() for i in sorted(members)}
+    dropped = {i for i in members if draws[i] < crash_prob}
     straggled = set()
     if deadline_s is not None:
         straggled = {i for i in members - dropped
                      if latency_s.get(i, 0.0) > deadline_s}
     alive = set(members) - dropped - straggled
+
+    if committee is not None and reconstruct_threshold is not None:
+        alive, dropped, straggled = _enforce_committee_quorum(
+            alive, dropped, straggled, members, latency_s,
+            committee, reconstruct_threshold)
+
     if not alive:
         # quorum floor: never lose the round entirely; keep fastest party
         fastest = min(members, key=lambda i: latency_s.get(i, 0.0))
         alive = {fastest}
+        dropped.discard(fastest)
+        straggled.discard(fastest)
     return RoundOutcome(alive=alive, dropped=dropped, straggled=straggled)
+
+
+def _enforce_committee_quorum(alive, dropped, straggled, members,
+                              latency_s, committee: Iterable[int],
+                              threshold: int):
+    """Resurrect faulted committee members until reconstruction works."""
+    com_members = [w for w in committee if w in members]
+    if len(com_members) < threshold:
+        raise ValueError(
+            f"committee {tuple(committee)} has only {len(com_members)} "
+            f"members inside the live membership but reconstruction "
+            f"needs {threshold}; re-elect before applying faults")
+    live_com = [w for w in com_members if w in alive]
+    if len(live_com) >= threshold:
+        return alive, dropped, straggled
+    candidates = sorted((w for w in com_members if w not in alive),
+                        key=lambda i: latency_s.get(i, 0.0))
+    for w in candidates:
+        if len(live_com) >= threshold:
+            break
+        alive.add(w)
+        dropped.discard(w)
+        straggled.discard(w)
+        live_com.append(w)
+    return alive, dropped, straggled
 
 
 def quorum_met(alive: set, n: int, quorum_frac: float = 0.5) -> bool:

@@ -71,8 +71,31 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
                 if cfg.protocol == "two_phase":
                     sim.elect_committee()  # elastic re-election (Phase I)
 
-        outcome: RoundOutcome = apply_faults(
-            members, latency_s or {}, cfg.deadline_s, seed=cfg.seed + epoch)
+        committee = sim.committee if cfg.protocol == "two_phase" else None
+        # reconstruction quorum: all m shares for additive, degree+1
+        # for Shamir (the paper's d = m-1 default degenerates to m)
+        if cfg.scheme == "additive":
+            threshold = cfg.committee
+        else:
+            degree = sim.transports["two_phase"].shamir_degree
+            if degree is None:
+                degree = cfg.committee - 1
+            threshold = degree + 1
+        try:
+            outcome: RoundOutcome = apply_faults(
+                members, latency_s or {}, cfg.deadline_s, seed=cfg.seed,
+                round_index=epoch,
+                committee=committee,
+                reconstruct_threshold=threshold if committee else None)
+        except ValueError:
+            # Alg. 2 elects from all n parties, so an elastic shrink can
+            # leave the committee under-represented in the current
+            # membership; the committee role is share-index metadata in
+            # this sim (member sums are computed regardless), so the
+            # round proceeds without the committee-quorum floor
+            outcome = apply_faults(
+                members, latency_s or {}, cfg.deadline_s, seed=cfg.seed,
+                round_index=epoch)
         outcomes.append(outcome)
 
         live = sorted(outcome.alive)

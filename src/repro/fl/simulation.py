@@ -41,7 +41,7 @@ class FLSimulation:
                  latency_s: dict[int, float] | None = None,
                  fp: FixedPointConfig | None = None,
                  shamir_degree: int | None = None,
-                 chunk: int = 2048):
+                 chunk: int = 2048, kernel_backend: str | None = None):
         if agg is not None:
             # a custom aggregator donates its codec configuration; the
             # committee size still comes from m (it differs per protocol)
@@ -49,6 +49,8 @@ class FLSimulation:
             fp = fp if fp is not None else agg.fp
             if shamir_degree is None:
                 shamir_degree = agg.shamir_degree
+            if kernel_backend is None:
+                kernel_backend = agg.kernel_backend
         self.n = n
         self.m = m
         self.b = b
@@ -58,7 +60,8 @@ class FLSimulation:
         self.net = Network(latency_s)
         self.round = 0
         kw = dict(scheme=scheme, seed=seed, net=self.net, fp=fp,
-                  shamir_degree=shamir_degree, chunk=chunk)
+                  shamir_degree=shamir_degree, chunk=chunk,
+                  kernel_backend=kernel_backend)
         self.transports: dict[str, Transport] = {
             "plain": PlainTransport(n, m=m, b=b, **kw),
             "p2p": P2PTransport(n, m=m, b=b, **kw),

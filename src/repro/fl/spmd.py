@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import philox
 from repro.core.field import MERSENNE_P, mersenne_reduce, mulhilo32
 from repro.core.fixed_point import FixedPointConfig, DEFAULT_FIELD, DEFAULT_RING
@@ -52,14 +53,14 @@ def party_index(party_axes: Sequence[str]):
     """Linear party id from the manual mesh axes."""
     idx = jnp.int32(0)
     for ax in party_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 
 def party_count(party_axes: Sequence[str]) -> int:
     n = 1
     for ax in party_axes:
-        n *= jax.lax.axis_size(ax)
+        n *= compat.axis_size(ax)
     return n
 
 
@@ -139,8 +140,8 @@ def secure_aggregate(flat, *, scheme: str = "additive", m: int = 3,
             # scatter rows over the (last) party axis, sum en route
             scat = shares
             for ax in party_axes:
-                scat = jax.lax.psum_scatter(scat, ax, scatter_dimension=1,
-                                            tiled=True)
+                scat = compat.psum_scatter_tiled(scat, ax,
+                                                 scatter_dimension=1)
             rec_shard = reconstruct(scat, n, fp, block_rows=block_rows,
                                     use_ref=use_ref)
             rec = rec_shard

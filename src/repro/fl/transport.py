@@ -127,7 +127,8 @@ class _SimTransport(Transport):
     def __init__(self, n: int, *, m: int = 3, scheme: str = "additive",
                  seed: int = 0, b: int = 10, net: Network | None = None,
                  fp: FixedPointConfig | None = None,
-                 shamir_degree: int | None = None, chunk: int = 2048):
+                 shamir_degree: int | None = None, chunk: int = 2048,
+                 kernel_backend: str | None = None):
         self.n = n
         self.m = m
         self.b = b
@@ -136,6 +137,7 @@ class _SimTransport(Transport):
         self.fp = fp
         self.shamir_degree = shamir_degree
         self.chunk = chunk
+        self.kernel_backend = kernel_backend
         self.net = net if net is not None else Network()
 
     @staticmethod
@@ -182,13 +184,14 @@ class P2PTransport(_SimTransport):
         ids = self._ids(party_ids, l)
         self.net.send_batch(l * (l - 1), s, "p2p")   # shares V(i, j)
         self.net.send_batch(l * (l - 1), s, "p2p")   # partial sums S(i)
-        agg = SecureAggregator(scheme=self.scheme, m=l, fp=self.fp)
+        agg = SecureAggregator(scheme=self.scheme, m=l, fp=self.fp,
+                               shamir_degree=self.shamir_degree,
+                               kernel_backend=self.kernel_backend)
         agg.fp.validate_for_parties(l)
         member_sums = agg.sum_shares_batch(
             flats, seed=self.seed, party_ids=ids,
             round_index=round_index, chunk=self.chunk)
-        total = agg.reconstruct_sum(member_sums)
-        return agg.decode_mean(total, l)
+        return agg.reconstruct_mean(member_sums, l)
 
 
 class TwoPhaseTransport(_SimTransport):
@@ -213,7 +216,8 @@ class TwoPhaseTransport(_SimTransport):
         self.committee: tuple[int, ...] | None = None
         self.agg = SecureAggregator(scheme=self.scheme, m=self.m,
                                     fp=self.fp,
-                                    shamir_degree=self.shamir_degree)
+                                    shamir_degree=self.shamir_degree,
+                                    kernel_backend=self.kernel_backend)
 
     # -- Phase I ----------------------------------------------------------
 
@@ -271,12 +275,10 @@ class TwoPhaseTransport(_SimTransport):
             flats, seed=self.seed, party_ids=ids,
             round_index=round_index, chunk=self.chunk)       # [m, D]
         if m_live == self.m:
-            total = self.agg.reconstruct_sum(member_sums)
-        else:
-            points = tuple(w + 1 for w in live_pos)
-            total = self.agg.reconstruct_sum(
-                member_sums[jnp.asarray(live_pos)], points=points)
-        return self.agg.decode_mean(total, l)
+            return self.agg.reconstruct_mean(member_sums, l)
+        points = tuple(w + 1 for w in live_pos)
+        return self.agg.reconstruct_mean(
+            member_sums[jnp.asarray(live_pos)], l, points=points)
 
 
 class SPMDTransport(Transport):

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -111,7 +113,7 @@ def decode_attention_pallas(q, k, v, *, kv_len: int | None = None,
             pltpu.VMEM((group, LANES), jnp.float32),
             pltpu.VMEM((group, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        **tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q4, k, v)

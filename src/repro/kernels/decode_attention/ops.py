@@ -1,40 +1,48 @@
-"""Jit'd wrapper for decode attention: partials or fully-normalized."""
+"""Jit'd wrapper for decode attention: partials or fully-normalized.
+
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7).
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from .kernel import decode_attention_pallas
 from .ref import decode_attention_ref, combine_partials
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=(
     "kv_len", "sm_scale", "block_k", "use_ref", "interpret"))
+def _decode_attention_partial_jit(q, k, v, *, kv_len: int | None,
+                                  sm_scale: float | None, block_k: int,
+                                  use_ref: bool, interpret: bool):
+    if use_ref:
+        return decode_attention_ref(q, k, v, kv_len=kv_len,
+                                    sm_scale=sm_scale)
+    return decode_attention_pallas(q, k, v, kv_len=kv_len,
+                                   sm_scale=sm_scale, block_k=block_k,
+                                   interpret=interpret)
+
+
 def decode_attention_partial(q, k, v, *, kv_len: int | None = None,
                              sm_scale: float | None = None,
                              block_k: int = 512, use_ref: bool = False,
                              interpret: bool | None = None):
     """Returns (acc, m, l) for cross-shard LSE combination."""
-    s, d = k.shape[2], k.shape[3]
+    s = k.shape[2]
     group = q.shape[1] // k.shape[1]
-    if use_ref or s % 128 != 0 or group % 8 != 0:
-        return decode_attention_ref(q, k, v, kv_len=kv_len,
-                                    sm_scale=sm_scale)
-    ip = (not _on_tpu()) if interpret is None else interpret
-    return decode_attention_pallas(q, k, v, kv_len=kv_len,
-                                   sm_scale=sm_scale, block_k=block_k,
-                                   interpret=ip)
+    if s % 128 != 0 or group % 8 != 0:
+        use_ref = True
+    d = dispatch.decide(use_ref, interpret)
+    return _decode_attention_partial_jit(q, k, v, kv_len=kv_len,
+                                         sm_scale=sm_scale,
+                                         block_k=block_k, use_ref=d.use_ref,
+                                         interpret=d.interpret)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "kv_len", "sm_scale", "block_k", "use_ref", "interpret"))
 def decode_attention(q, k, v, *, kv_len: int | None = None,
                      sm_scale: float | None = None, block_k: int = 512,
                      use_ref: bool = False, interpret: bool | None = None):

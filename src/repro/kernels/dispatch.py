@@ -1,0 +1,140 @@
+"""Capability-probed kernel dispatch — one policy for all kernel families.
+
+Every kernel family's ``ops.py`` routes its backend decision through
+``decide()`` instead of a hand-rolled ``jax.default_backend() == "tpu"``
+check.  The decision ladder (DESIGN.md §7):
+
+1. an explicit ``use_ref=True`` from the caller always wins (tests
+   force the oracle to differential-test against),
+2. ``REPRO_KERNEL_BACKEND`` env var (``auto`` | ``compiled`` |
+   ``interpret`` | ``ref``) — the forced-oracle / forced-interpret
+   escape hatch, read per call so tests can flip it,
+3. an explicit ``interpret=`` from the caller,
+4. the capability probe: ``tpu-pallas`` → compiled, else a cached
+   one-element interpret-mode ``pallas_call`` decides between
+   ``cpu-interpret`` (kernels run everywhere, just slower) and
+   ``ref-only`` (pallas itself is broken → jnp oracle).
+
+Two default policies share the ladder: kernel *ops* default to
+interpret off-TPU (cheap at kernel-test shapes, and it exercises the
+real kernel code path), while the *protocol hot path*
+(``SecureAggregator`` batch calls at up to 10k parties) defaults to the
+oracle off-TPU — interpret mode executes the grid in Python and would
+turn a 15 s simulation round into hours.  ``hot_path=True`` selects the
+second policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+MODE_COMPILED = "compiled"
+MODE_INTERPRET = "interpret"
+MODE_REF = "ref"
+_MODES = (MODE_COMPILED, MODE_INTERPRET, MODE_REF)
+
+CAP_TPU = "tpu-pallas"
+CAP_INTERPRET = "cpu-interpret"
+CAP_REF_ONLY = "ref-only"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDecision:
+    """Resolved backend for one kernel call."""
+
+    mode: str             # compiled | interpret | ref
+    capability: str       # what the probe reported
+    forced_by: str | None  # "use_ref"|"forced"|"env"|"interpret_arg"|None
+
+    @property
+    def use_ref(self) -> bool:
+        return self.mode == MODE_REF
+
+    @property
+    def interpret(self) -> bool:
+        return self.mode == MODE_INTERPRET
+
+
+@functools.lru_cache(maxsize=None)
+def _interpret_works() -> bool:
+    """One-element pallas_call in interpret mode — cached capability."""
+    try:
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def k(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1
+
+        out = pl.pallas_call(
+            k, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            interpret=True)(jnp.zeros((8, 128), jnp.float32))
+        return bool(out[0, 0] == 1.0)
+    except Exception:
+        return False
+
+
+def probe() -> str:
+    """Capability string for this process' default backend."""
+    if jax.default_backend() == "tpu":
+        return CAP_TPU
+    return CAP_INTERPRET if _interpret_works() else CAP_REF_ONLY
+
+
+def _env_mode() -> str | None:
+    raw = os.environ.get(ENV_VAR, "").strip().lower()
+    if raw in ("", "auto"):
+        return None
+    if raw not in _MODES:
+        raise ValueError(
+            f"{ENV_VAR}={raw!r}: expected auto|{'|'.join(_MODES)}")
+    return raw
+
+
+def decide(use_ref: bool | None = None, interpret: bool | None = None,
+           *, hot_path: bool = False,
+           forced: str | None = None) -> KernelDecision:
+    """Resolve (use_ref, interpret) caller flags into a backend mode.
+
+    ``forced``: a per-object override (e.g. ``SecureAggregator``'s
+    ``kernel_backend`` field) that outranks the env var.
+    ``hot_path``: off-TPU auto resolution prefers the jnp oracle
+    instead of interpret mode (see module docstring).
+    """
+    cap = probe()
+    if use_ref:
+        return KernelDecision(MODE_REF, cap, "use_ref")
+    if forced is not None and forced not in _MODES and forced != "auto":
+        raise ValueError(
+            f"kernel_backend={forced!r}: expected auto|{'|'.join(_MODES)}")
+    if forced == "auto":
+        forced = None  # explicit auto defers to the env escape hatch
+    if forced is not None:
+        return KernelDecision(forced, cap, "forced")
+    env = _env_mode()
+    if env is not None:
+        return KernelDecision(env, cap, "env")
+    if interpret is not None:
+        return KernelDecision(
+            MODE_INTERPRET if interpret else MODE_COMPILED, cap,
+            "interpret_arg")
+    if cap == CAP_TPU:
+        return KernelDecision(MODE_COMPILED, cap, None)
+    if cap == CAP_REF_ONLY or hot_path:
+        return KernelDecision(MODE_REF, cap, None)
+    return KernelDecision(MODE_INTERPRET, cap, None)
+
+
+def capability_summary() -> dict:
+    """For CI logs / BENCH json provenance."""
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "capability": probe(),
+        "env_override": os.environ.get(ENV_VAR) or None,
+    }

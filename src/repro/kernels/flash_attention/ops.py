@@ -1,8 +1,9 @@
 """Jit'd wrapper: attention entry point used by the model zoo.
 
-Dispatches to the Pallas flash kernel (interpret mode off-TPU, compiled
-on TPU) or to the dense oracle for tiny shapes where blockwise brings
-nothing (e.g. smoke tests with seq < 128).
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7):
+compiled Pallas on TPU, interpret mode elsewhere, jnp oracle when
+forced or when the shape defeats the TPU tiling (e.g. smoke tests with
+seq < 128).
 """
 
 from __future__ import annotations
@@ -11,28 +12,36 @@ import functools
 
 import jax
 
+from repro.kernels import dispatch
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "sm_scale", "block_q", "block_k", "use_ref",
     "interpret"))
+def _flash_attention_jit(q, k, v, *, causal: bool, window: int,
+                         sm_scale: float | None, block_q: int,
+                         block_k: int, use_ref: bool, interpret: bool):
+    if use_ref:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             sm_scale=sm_scale).astype(q.dtype)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  sm_scale=sm_scale, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     sm_scale: float | None = None, block_q: int = 128,
                     block_k: int = 128, use_ref: bool = False,
                     interpret: bool | None = None):
     """q: [B,Hq,Sq,D], k/v: [B,Hkv,Skv,D] -> [B,Hq,Sq,D]."""
     sq, skv = q.shape[2], k.shape[2]
-    if use_ref or sq % 8 != 0 or skv % 128 != 0:
+    if sq % 8 != 0 or skv % 128 != 0:
         # Shapes the TPU tiling can't cover without padding: dense path.
-        return attention_ref(q, k, v, causal=causal, window=window,
-                             sm_scale=sm_scale).astype(q.dtype)
-    ip = (not _on_tpu()) if interpret is None else interpret
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  sm_scale=sm_scale, block_q=block_q,
-                                  block_k=block_k, interpret=ip)
+        use_ref = True
+    d = dispatch.decide(use_ref, interpret)
+    return _flash_attention_jit(q, k, v, causal=causal, window=window,
+                                sm_scale=sm_scale, block_q=block_q,
+                                block_k=block_k, use_ref=d.use_ref,
+                                interpret=d.interpret)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _lru_kernel(a_ref, b_ref, y_ref, h_scr, *, block_t: int):
     tb = pl.program_id(2)
@@ -58,7 +60,7 @@ def lru_scan_pallas(a, b, *, block_t: int = 128, block_d: int = 128,
                                lambda b_, d, t: (b_, t, d)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
         scratch_shapes=[pltpu.VMEM((8, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        **tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

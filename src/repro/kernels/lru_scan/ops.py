@@ -1,4 +1,7 @@
-"""Jit'd wrapper for the fused RG-LRU scan."""
+"""Jit'd wrapper for the fused RG-LRU scan.
+
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7).
+"""
 
 from __future__ import annotations
 
@@ -6,21 +9,26 @@ import functools
 
 import jax
 
+from repro.kernels import dispatch
 from .kernel import lru_scan_pallas
 from .ref import lru_scan_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("block_t", "block_d",
                                              "use_ref", "interpret"))
+def _lru_scan_jit(a, b, *, block_t: int, block_d: int, use_ref: bool,
+                  interpret: bool):
+    if use_ref:
+        return lru_scan_ref(a, b)
+    return lru_scan_pallas(a, b, block_t=block_t, block_d=block_d,
+                           interpret=interpret)
+
+
 def lru_scan(a, b, *, block_t: int = 128, block_d: int = 128,
              use_ref: bool = False, interpret: bool | None = None):
     s, w = a.shape[1], a.shape[2]
-    if use_ref or s % block_t != 0 or w % 128 != 0:
-        return lru_scan_ref(a, b)
-    ip = (not _on_tpu()) if interpret is None else interpret
-    return lru_scan_pallas(a, b, block_t=block_t, block_d=block_d,
-                           interpret=ip)
+    if s % block_t != 0 or w % 128 != 0:
+        use_ref = True
+    d = dispatch.decide(use_ref, interpret)
+    return _lru_scan_jit(a, b, block_t=block_t, block_d=block_d,
+                         use_ref=d.use_ref, interpret=d.interpret)

@@ -17,11 +17,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _reconstruct_kernel(x_ref, o_ref, *, m: int, inv_scale: float):
+def _reconstruct_kernel(x_ref, o_ref, *, m: int, inv_scale: float,
+                        n: int):
     acc = x_ref[0, :, :]
     for j in range(1, m):
         acc = acc + x_ref[j, :, :]
-    o_ref[...] = acc.astype(jnp.int32).astype(jnp.float32) * inv_scale
+    # decode sequence mirrors FixedPointConfig.decode_mean exactly:
+    # exact power-of-two unscale first, then ONE float division by n —
+    # so the kernel is bit-identical to the aggregator's oracle path
+    # for every n, not just powers of two.
+    signed = acc.astype(jnp.int32).astype(jnp.float32) * inv_scale
+    o_ref[...] = signed / jnp.float32(n)
 
 
 def reconstruct_pallas(shares, n: int, cfg, block_rows: int = 64,
@@ -30,7 +36,7 @@ def reconstruct_pallas(shares, n: int, cfg, block_rows: int = 64,
     m, rows, lanes = shares.shape
     assert lanes == 128 and rows % block_rows == 0, shares.shape
     kernel = functools.partial(_reconstruct_kernel, m=m,
-                               inv_scale=1.0 / (cfg.scale * n))
+                               inv_scale=1.0 / cfg.scale, n=n)
     return pl.pallas_call(
         kernel,
         grid=(rows // block_rows,),

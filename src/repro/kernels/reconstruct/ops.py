@@ -1,4 +1,7 @@
-"""Jit'd wrapper for the fused reconstruct kernel."""
+"""Jit'd wrapper for the fused reconstruct kernel.
+
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7).
+"""
 
 from __future__ import annotations
 
@@ -6,21 +9,26 @@ import functools
 
 import jax
 
+from repro.kernels import dispatch
 from .kernel import reconstruct_pallas
 from .ref import reconstruct_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("n", "cfg", "block_rows",
                                              "use_ref", "interpret"))
-def reconstruct(shares, n: int, cfg, block_rows: int = 64,
-                use_ref: bool = False, interpret: bool | None = None):
-    """uint32 [m, R, 128] -> float32 [R, 128] decoded mean over n parties."""
+def _reconstruct_jit(shares, n: int, cfg, block_rows: int, use_ref: bool,
+                     interpret: bool):
     if use_ref:
         return reconstruct_ref(shares, n, cfg)
-    ip = (not _on_tpu()) if interpret is None else interpret
     return reconstruct_pallas(shares, n, cfg, block_rows=block_rows,
-                              interpret=ip)
+                              interpret=interpret)
+
+
+def reconstruct(shares, n: int, cfg, block_rows: int = 64,
+                use_ref: bool = False, interpret: bool | None = None,
+                hot_path: bool = False, forced: str | None = None):
+    """uint32 [m, R, 128] -> float32 [R, 128] decoded mean over n parties."""
+    dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
+                          forced=forced)
+    return _reconstruct_jit(shares, n, cfg, block_rows, dec.use_ref,
+                            dec.interpret)

@@ -21,4 +21,6 @@ def reconstruct_ref(shares, n: int, cfg: FixedPointConfig):
     assert cfg.algebra == "ring"
     total = jnp.sum(shares.astype(jnp.uint32), axis=0, dtype=jnp.uint32)
     signed = total.astype(jnp.int32)
-    return signed.astype(jnp.float32) / (cfg.scale * n)
+    # same float sequence as FixedPointConfig.decode + decode_mean:
+    # exact /scale (power of two) first, then one division by n.
+    return signed.astype(jnp.float32) / cfg.scale / n

@@ -1,7 +1,10 @@
-from .ops import shamir_share, shamir_reconstruct
-from .ref import shamir_share_ref, shamir_reconstruct_ref
-from .kernel import shamir_share_pallas, shamir_reconstruct_pallas
+from .ops import (shamir_share, shamir_share_batch, shamir_reconstruct)
+from .ref import (shamir_share_ref, shamir_share_batch_ref,
+                  shamir_reconstruct_ref)
+from .kernel import (shamir_share_pallas, shamir_share_batch_pallas,
+                     shamir_reconstruct_pallas)
 
-__all__ = ["shamir_share", "shamir_reconstruct", "shamir_share_ref",
+__all__ = ["shamir_share", "shamir_share_batch", "shamir_reconstruct",
+           "shamir_share_ref", "shamir_share_batch_ref",
            "shamir_reconstruct_ref", "shamir_share_pallas",
-           "shamir_reconstruct_pallas"]
+           "shamir_share_batch_pallas", "shamir_reconstruct_pallas"]

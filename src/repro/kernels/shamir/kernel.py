@@ -35,17 +35,11 @@ def _encode_field_block(x, scale: float, clip: float):
                      q.astype(jnp.uint32))
 
 
-def _shamir_share_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
-                         block_rows: int, scale: float, clip: float,
-                         hi_base: int):
-    key0 = key_ref[0]
-    key1 = key_ref[1]
-    row_base = (pl.program_id(0) * block_rows).astype(jnp.uint32)
-
-    v = _encode_field_block(x_ref[...], scale, clip)
+def _horner_shares_block(v, rows: int, row_base, key0, key1, *, m: int,
+                         d: int, hi_base: int, layout: str, store):
     coeffs = [
-        to_field(_tiled_mask_block(block_rows, row_base, key0, key1,
-                                   jnp.uint32(hi_base + j + 1)))
+        to_field(_tiled_mask_block(rows, row_base, key0, key1,
+                                   jnp.uint32(hi_base + j + 1), layout))
         for j in range(d)
     ]
     for w in range(m):
@@ -53,12 +47,27 @@ def _shamir_share_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
         acc = jnp.zeros_like(v)
         for a in reversed(coeffs):
             acc = fadd(fmul(acc, xp), a)
-        out_ref[w, :, :] = fadd(fmul(acc, xp), v)
+        store(w, fadd(fmul(acc, xp), v))
+
+
+def _shamir_share_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
+                         block_rows: int, scale: float, clip: float,
+                         hi_base: int, layout: str):
+    key0 = key_ref[0]
+    key1 = key_ref[1]
+    row_base = (pl.program_id(0) * block_rows).astype(jnp.uint32)
+    v = _encode_field_block(x_ref[...], scale, clip)
+
+    def store(w, val):
+        out_ref[w, :, :] = val
+
+    _horner_shares_block(v, block_rows, row_base, key0, key1, m=m, d=d,
+                         hi_base=hi_base, layout=layout, store=store)
 
 
 def shamir_share_pallas(x, m: int, key0, key1, cfg, degree: int | None = None,
                         hi_base: int = 0, block_rows: int = 64,
-                        interpret: bool = False):
+                        interpret: bool = False, layout: str = "tiled"):
     """float32 [R,128] -> uint32 [m, R, 128] Shamir shares (fused)."""
     assert x.ndim == 2 and x.shape[1] == 128
     rows = x.shape[0]
@@ -68,7 +77,8 @@ def shamir_share_pallas(x, m: int, key0, key1, cfg, degree: int | None = None,
                      jnp.asarray(key1, jnp.uint32)])
     kernel = functools.partial(_shamir_share_kernel, m=m, d=d,
                                block_rows=block_rows, scale=cfg.scale,
-                               clip=cfg.clip, hi_base=hi_base)
+                               clip=cfg.clip, hi_base=hi_base,
+                               layout=layout)
     return pl.pallas_call(
         kernel,
         grid=(rows // block_rows,),
@@ -82,14 +92,62 @@ def shamir_share_pallas(x, m: int, key0, key1, cfg, degree: int | None = None,
     )(key, x)
 
 
-def _lagrange_kernel(w_ref, s_ref, o_ref, *, k: int, inv_scale: float):
+def _shamir_share_batch_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
+                               block_rows: int, scale: float, clip: float,
+                               hi_base: int, layout: str):
+    key0 = key_ref[0, 0]
+    key1 = key_ref[0, 1]
+    row_base = (pl.program_id(1) * block_rows).astype(jnp.uint32)
+    v = _encode_field_block(x_ref[0], scale, clip)
+
+    def store(w, val):
+        out_ref[0, w, :, :] = val
+
+    _horner_shares_block(v, block_rows, row_base, key0, key1, m=m, d=d,
+                         hi_base=hi_base, layout=layout, store=store)
+
+
+def shamir_share_batch_pallas(x, m: int, keys, cfg,
+                              degree: int | None = None, hi_base: int = 0,
+                              block_rows: int = 64, interpret: bool = False,
+                              layout: str = "flat"):
+    """float32 [l,R,128] + uint32 [l,2] keys -> uint32 [l, m, R, 128]."""
+    assert x.ndim == 3 and x.shape[2] == 128, x.shape
+    l, rows, _ = x.shape
+    assert rows % block_rows == 0
+    assert keys.shape == (l, 2), keys.shape
+    d = (m - 1) if degree is None else degree
+    kernel = functools.partial(_shamir_share_batch_kernel, m=m, d=d,
+                               block_rows=block_rows, scale=cfg.scale,
+                               clip=cfg.clip, hi_base=hi_base,
+                               layout=layout)
+    return pl.pallas_call(
+        kernel,
+        grid=(l, rows // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda p, g: (p, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_rows, 128), lambda p, g: (p, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_rows, 128),
+                               lambda p, g: (p, 0, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray(keys, jnp.uint32), x)
+
+
+def _lagrange_kernel(w_ref, s_ref, o_ref, *, k: int, inv_scale: float,
+                     n: int):
     acc = fmul(s_ref[0, :, :], w_ref[0])
     for i in range(1, k):
         acc = fadd(acc, fmul(s_ref[i, :, :], w_ref[i]))
     half = jnp.uint32(MERSENNE_P_INT // 2)
     is_neg = acc > half
     mag = jnp.where(is_neg, MERSENNE_P - acc, acc).astype(jnp.float32)
-    o_ref[...] = jnp.where(is_neg, -mag, mag) * inv_scale
+    # decode sequence mirrors FixedPointConfig.decode_mean exactly
+    # (exact /scale first, then one float division by n) so the kernel
+    # is bit-identical to the aggregator oracle path for every n.
+    o_ref[...] = jnp.where(is_neg, -mag, mag) * inv_scale / jnp.float32(n)
 
 
 def shamir_reconstruct_pallas(member_sums, weights, n: int, cfg,
@@ -98,7 +156,7 @@ def shamir_reconstruct_pallas(member_sums, weights, n: int, cfg,
     k, rows, lanes = member_sums.shape
     assert lanes == 128 and rows % block_rows == 0
     kernel = functools.partial(_lagrange_kernel, k=k,
-                               inv_scale=1.0 / (cfg.scale * n))
+                               inv_scale=1.0 / cfg.scale, n=n)
     return pl.pallas_call(
         kernel,
         grid=(rows // block_rows,),

@@ -1,4 +1,7 @@
-"""Jit'd wrappers for the Shamir Pallas kernels."""
+"""Jit'd wrappers for the Shamir Pallas kernels.
+
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7).
+"""
 
 from __future__ import annotations
 
@@ -8,45 +11,94 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.shamir import lagrange_weights_at_zero
+from repro.kernels import dispatch
 from repro.kernels.share_gen.ops import pad_to_tiles
-from .kernel import shamir_share_pallas, shamir_reconstruct_pallas
-from .ref import shamir_share_ref, shamir_reconstruct_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .kernel import (shamir_share_pallas, shamir_share_batch_pallas,
+                     shamir_reconstruct_pallas)
+from .ref import (shamir_share_ref, shamir_share_batch_ref,
+                  shamir_reconstruct_ref)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("m", "cfg", "degree", "hi_base",
-                                    "block_rows", "use_ref", "interpret"))
-def shamir_share(flat, m: int, key0, key1, cfg, degree: int | None = None,
-                 hi_base: int = 0, block_rows: int = 64,
-                 use_ref: bool = False, interpret: bool | None = None):
-    """flat float32 [D] -> (uint32 [m, R, 128] shares, D)."""
+                                    "block_rows", "use_ref", "interpret",
+                                    "layout"))
+def _shamir_share_jit(flat, m: int, key0, key1, cfg, degree, hi_base,
+                      block_rows, use_ref, interpret, layout):
     x2d, d = pad_to_tiles(flat, block_rows)
     if use_ref:
         return shamir_share_ref(x2d, m, key0, key1, cfg, degree=degree,
-                                hi_base=hi_base), d
-    ip = (not _on_tpu()) if interpret is None else interpret
+                                hi_base=hi_base, layout=layout), d
     return shamir_share_pallas(x2d, m, key0, key1, cfg, degree=degree,
                                hi_base=hi_base, block_rows=block_rows,
-                               interpret=ip), d
+                               interpret=interpret, layout=layout), d
+
+
+def shamir_share(flat, m: int, key0, key1, cfg, degree: int | None = None,
+                 hi_base: int = 0, block_rows: int = 64,
+                 use_ref: bool = False, interpret: bool | None = None,
+                 layout: str = "tiled"):
+    """flat float32 [D] -> (uint32 [m, R, 128] shares, D)."""
+    dec = dispatch.decide(use_ref, interpret)
+    return _shamir_share_jit(flat, m, key0, key1, cfg, degree, hi_base,
+                             block_rows, dec.use_ref, dec.interpret, layout)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "cfg", "degree", "hi_base",
+                                    "block_rows", "use_ref", "interpret",
+                                    "layout"))
+def _shamir_share_batch_jit(flats, m: int, keys, cfg, degree, hi_base,
+                            block_rows, use_ref, interpret, layout):
+    x3d, d = pad_to_tiles(flats, block_rows)
+    if use_ref:
+        return shamir_share_batch_ref(x3d, m, keys, cfg, degree=degree,
+                                      hi_base=hi_base, layout=layout), d
+    return shamir_share_batch_pallas(x3d, m, keys, cfg, degree=degree,
+                                     hi_base=hi_base, block_rows=block_rows,
+                                     interpret=interpret, layout=layout), d
+
+
+def shamir_share_batch(flats, m: int, keys, cfg, degree: int | None = None,
+                       hi_base: int = 0, block_rows: int = 8,
+                       use_ref: bool = False, interpret: bool | None = None,
+                       layout: str = "flat", hot_path: bool = True,
+                       forced: str | None = None):
+    """float32 [l, D] + uint32 [l, 2] keys -> ([l, m, R, 128] shares, D).
+
+    ``layout="flat"`` makes slice ``p`` bit-identical to
+    ``core.shamir.share(cfg.encode(flats[p]), m, *keys[p], degree)``
+    (modulo tile padding).
+    """
+    dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
+                          forced=forced)
+    return _shamir_share_batch_jit(flats, m, jnp.asarray(keys, jnp.uint32),
+                                   cfg, degree, hi_base, block_rows,
+                                   dec.use_ref, dec.interpret, layout)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "cfg", "points", "block_rows",
                                     "use_ref", "interpret"))
-def shamir_reconstruct(member_sums, n: int, cfg,
-                       points: tuple[int, ...] | None = None,
-                       block_rows: int = 64, use_ref: bool = False,
-                       interpret: bool | None = None):
-    """uint32 [k, R, 128] field sums -> float32 [R, 128] decoded mean."""
+def _shamir_reconstruct_jit(member_sums, n: int, cfg, points, block_rows,
+                            use_ref, interpret):
     if use_ref:
         return shamir_reconstruct_ref(member_sums, n, cfg, points=points)
     k = member_sums.shape[0]
     pts = points or tuple(range(1, k + 1))
     weights = jnp.asarray(lagrange_weights_at_zero(pts), dtype=jnp.uint32)
-    ip = (not _on_tpu()) if interpret is None else interpret
     return shamir_reconstruct_pallas(member_sums, weights, n, cfg,
-                                     block_rows=block_rows, interpret=ip)
+                                     block_rows=block_rows,
+                                     interpret=interpret)
+
+
+def shamir_reconstruct(member_sums, n: int, cfg,
+                       points: tuple[int, ...] | None = None,
+                       block_rows: int = 64, use_ref: bool = False,
+                       interpret: bool | None = None,
+                       hot_path: bool = False, forced: str | None = None):
+    """uint32 [k, R, 128] field sums -> float32 [R, 128] decoded mean."""
+    dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
+                          forced=forced)
+    return _shamir_reconstruct_jit(member_sums, n, cfg, points, block_rows,
+                                   dec.use_ref, dec.interpret)

@@ -14,6 +14,7 @@ Lagrange-at-zero weights ``w_k`` for the canonical points.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,12 +35,14 @@ def decode_field_mean(w, n: int, cfg: FixedPointConfig):
     half = jnp.uint32(MERSENNE_P_INT // 2)
     is_neg = w > half
     mag = jnp.where(is_neg, MERSENNE_P - w, w).astype(jnp.float32)
-    return jnp.where(is_neg, -mag, mag) / (cfg.scale * n)
+    # same float sequence as FixedPointConfig.decode + decode_mean:
+    # exact /scale (power of two) first, then one division by n.
+    return jnp.where(is_neg, -mag, mag) / cfg.scale / n
 
 
 def shamir_share_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
                      degree: int | None = None, hi_base: int = 0,
-                     row_base: int = 0):
+                     row_base: int = 0, layout: str = "tiled"):
     """float32 [R,128] -> uint32 [m, R, 128] Shamir shares."""
     assert x.ndim == 2 and x.shape[1] == 128
     assert cfg.algebra == "field"
@@ -49,7 +52,7 @@ def shamir_share_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
     coeffs = [
         to_field(philox.tiled_words(rows, key0, key1,
                                     counter_hi=hi_base + j + 1,
-                                    row_base=row_base))
+                                    row_base=row_base, layout=layout))
         for j in range(d)
     ]
     shares = []
@@ -61,6 +64,18 @@ def shamir_share_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
         acc = fadd(fmul(acc, xp), v)
         shares.append(acc)
     return jnp.stack(shares, axis=0)
+
+
+def shamir_share_batch_ref(x, m: int, keys, cfg: FixedPointConfig,
+                           degree: int | None = None, hi_base: int = 0,
+                           layout: str = "flat"):
+    """Oracle twin of ``shamir_share_batch_pallas``: vmap over parties."""
+    assert x.ndim == 3 and x.shape[2] == 128, x.shape
+    return jax.vmap(
+        lambda xb, kb: shamir_share_ref(xb, m, kb[0], kb[1], cfg,
+                                        degree=degree, hi_base=hi_base,
+                                        layout=layout)
+    )(x, jnp.asarray(keys, jnp.uint32))
 
 
 def shamir_reconstruct_ref(member_sums, n: int, cfg: FixedPointConfig,

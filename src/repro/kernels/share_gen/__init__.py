@@ -1,6 +1,7 @@
-from .ops import share_gen, pad_to_tiles, unpad_flat
-from .ref import share_gen_ref
-from .kernel import share_gen_pallas
+from .ops import share_gen, share_gen_batch, pad_to_tiles, unpad_flat
+from .ref import share_gen_ref, share_gen_batch_ref
+from .kernel import share_gen_pallas, share_gen_batch_pallas
 
-__all__ = ["share_gen", "pad_to_tiles", "unpad_flat", "share_gen_ref",
-           "share_gen_pallas"]
+__all__ = ["share_gen", "share_gen_batch", "pad_to_tiles", "unpad_flat",
+           "share_gen_ref", "share_gen_batch_ref", "share_gen_pallas",
+           "share_gen_batch_pallas"]

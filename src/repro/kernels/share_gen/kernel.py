@@ -12,7 +12,14 @@ roofline: ``4·D`` bytes read, ``4·m·D`` written, nothing else.
 Block layout: the codeword stream is viewed as ``[R, 128]`` lane tiles;
 the grid walks row blocks of ``block_rows`` (sublane-aligned, default 8
 per VMEM tile for uint32).  The Philox counter for element ``(r, l)`` is
-``(32·r_global + l//4, share_hi, 0, 0)`` — see ``core.philox.tiled_words``.
+``(32·r_global + l//4, share_hi, 0, 0)`` — see ``core.philox.tiled_words``
+(``layout="flat"`` moves ``share_hi`` to the third counter word, the
+``core.additive`` oracle stream, so the protocol hot path can route
+through this kernel bit-identically).
+
+``share_gen_batch_pallas`` adds a party grid dimension with per-party
+keys in SMEM — all parties' share stacks in one launch, the kernel twin
+of ``SecureAggregator.make_shares_batch``.
 """
 
 from __future__ import annotations
@@ -28,43 +35,60 @@ from repro.core.philox import philox_4x32_tuple
 from repro.core.fixed_point import FixedPointConfig
 
 
-def _tiled_mask_block(rows: int, row_base, key0, key1, counter_hi):
+def _tiled_mask_block(rows: int, row_base, key0, key1, counter_hi,
+                      layout: str = "tiled"):
     """In-kernel lane-tiled Philox mask ``[rows, 128]`` (traced code)."""
     r = jax.lax.broadcasted_iota(jnp.uint32, (rows, 32), 0)
     lb = jax.lax.broadcasted_iota(jnp.uint32, (rows, 32), 1)
     x0 = (r + row_base) * jnp.uint32(32) + lb
     hi = jnp.full((rows, 32), counter_hi, dtype=jnp.uint32)
     zero = jnp.zeros((rows, 32), dtype=jnp.uint32)
-    y0, y1, y2, y3 = philox_4x32_tuple(x0, hi, zero, zero, key0, key1)
+    if layout == "tiled":
+        y0, y1, y2, y3 = philox_4x32_tuple(x0, hi, zero, zero, key0, key1)
+    elif layout == "flat":
+        y0, y1, y2, y3 = philox_4x32_tuple(x0, zero, hi, zero, key0, key1)
+    else:
+        raise ValueError(f"unknown counter layout {layout!r}")
     return jnp.stack([y0, y1, y2, y3], axis=-1).reshape(rows, 128)
 
 
+def _encode_ring_block(x, scale: float, clip: float):
+    xq = jnp.clip(x.astype(jnp.float32), -clip, clip)
+    return jnp.round(xq * scale).astype(jnp.int32).astype(jnp.uint32)
+
+
+def _share_split_block(u, rows: int, row_base, key0, key1, *, m: int,
+                       hi_base: int, layout: str, store):
+    """Emit the m-share split of encoded block ``u`` via ``store(j, v)``."""
+    if m == 1:
+        store(0, u)
+        return
+    last = u
+    for j in range(m - 1):
+        mask = _tiled_mask_block(rows, row_base, key0, key1,
+                                 jnp.uint32(hi_base + j + 1), layout)
+        store(j, mask)
+        last = last - mask
+    store(m - 1, last)
+
+
 def _share_gen_kernel(key_ref, x_ref, out_ref, *, m: int, block_rows: int,
-                      scale: float, clip: float, hi_base: int):
+                      scale: float, clip: float, hi_base: int, layout: str):
     key0 = key_ref[0]
     key1 = key_ref[1]
     row_base = (pl.program_id(0) * block_rows).astype(jnp.uint32)
+    u = _encode_ring_block(x_ref[...], scale, clip)
 
-    x = x_ref[...]
-    xq = jnp.clip(x.astype(jnp.float32), -clip, clip)
-    u = jnp.round(xq * scale).astype(jnp.int32).astype(jnp.uint32)
+    def store(j, v):
+        out_ref[j, :, :] = v
 
-    if m == 1:
-        out_ref[0, :, :] = u
-        return
-
-    last = u
-    for j in range(m - 1):
-        mask = _tiled_mask_block(block_rows, row_base, key0, key1,
-                                 jnp.uint32(hi_base + j + 1))
-        out_ref[j, :, :] = mask
-        last = last - mask
-    out_ref[m - 1, :, :] = last
+    _share_split_block(u, block_rows, row_base, key0, key1, m=m,
+                       hi_base=hi_base, layout=layout, store=store)
 
 
 def share_gen_pallas(x, m: int, key0, key1, cfg: FixedPointConfig,
                      hi_base: int = 0, block_rows: int = 64,
-                     interpret: bool = False):
+                     interpret: bool = False, layout: str = "tiled"):
     """Fused share generation.
 
     Args:
@@ -82,7 +106,7 @@ def share_gen_pallas(x, m: int, key0, key1, cfg: FixedPointConfig,
 
     kernel = functools.partial(
         _share_gen_kernel, m=m, block_rows=block_rows,
-        scale=cfg.scale, clip=cfg.clip, hi_base=hi_base)
+        scale=cfg.scale, clip=cfg.clip, hi_base=hi_base, layout=layout)
 
     return pl.pallas_call(
         kernel,
@@ -95,3 +119,55 @@ def share_gen_pallas(x, m: int, key0, key1, cfg: FixedPointConfig,
         out_shape=jax.ShapeDtypeStruct((m, rows, 128), jnp.uint32),
         interpret=interpret,
     )(key, x)
+
+
+def _share_gen_batch_kernel(key_ref, x_ref, out_ref, *, m: int,
+                            block_rows: int, scale: float, clip: float,
+                            hi_base: int, layout: str):
+    key0 = key_ref[0, 0]
+    key1 = key_ref[0, 1]
+    row_base = (pl.program_id(1) * block_rows).astype(jnp.uint32)
+    u = _encode_ring_block(x_ref[0], scale, clip)
+
+    def store(j, v):
+        out_ref[0, j, :, :] = v
+
+    _share_split_block(u, block_rows, row_base, key0, key1, m=m,
+                       hi_base=hi_base, layout=layout, store=store)
+
+
+def share_gen_batch_pallas(x, m: int, keys, cfg: FixedPointConfig,
+                           hi_base: int = 0, block_rows: int = 64,
+                           interpret: bool = False, layout: str = "flat"):
+    """All parties' share stacks in one launch.
+
+    Args:
+      x: float32 ``[l, R, 128]`` — one row-tiled update per party.
+      keys: uint32 ``[l, 2]`` — per-party (key0, key1).
+
+    Returns:
+      uint32 ``[l, m, R, 128]``; slice ``p`` equals
+      ``share_gen_pallas(x[p], m, *keys[p], ...)`` bit-for-bit.
+    """
+    assert x.ndim == 3 and x.shape[2] == 128, x.shape
+    l, rows, _ = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert keys.shape == (l, 2), keys.shape
+
+    kernel = functools.partial(
+        _share_gen_batch_kernel, m=m, block_rows=block_rows,
+        scale=cfg.scale, clip=cfg.clip, hi_base=hi_base, layout=layout)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(l, rows // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda p, g: (p, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_rows, 128), lambda p, g: (p, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_rows, 128),
+                               lambda p, g: (p, 0, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m, rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray(keys, jnp.uint32), x)

@@ -1,8 +1,9 @@
-"""Public jit'd wrapper for the fused share-generation kernel.
+"""Public wrappers for the fused share-generation kernel.
 
-Handles arbitrary flat lengths (pad to lane/block multiples), picks
-interpret mode automatically off-TPU, and exposes a pytree-flat API the
-SPMD secure-aggregation layer calls directly.
+Handles arbitrary flat lengths (pad to lane/block multiples), routes
+the backend decision through ``kernels.dispatch`` (DESIGN.md §7), and
+exposes both the per-party API the SPMD secure-aggregation layer calls
+and the party-batched API the ``SecureAggregator`` hot path calls.
 """
 
 from __future__ import annotations
@@ -14,44 +15,87 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fixed_point import FixedPointConfig
-from .kernel import share_gen_pallas
-from .ref import share_gen_ref
+from repro.kernels import dispatch
+from .kernel import share_gen_pallas, share_gen_batch_pallas
+from .ref import share_gen_ref, share_gen_batch_ref
 
 LANES = 128
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def pad_to_tiles(flat, block_rows: int):
-    """float32 [D] -> ([R,128], D) with R % block_rows == 0."""
-    d = flat.shape[0]
+    """float32 [..., D] -> ([..., R, 128], D) with R % block_rows == 0."""
+    d = flat.shape[-1]
     tile = LANES * block_rows
     padded = -(-d // tile) * tile
-    flat = jnp.pad(flat, (0, padded - d))
-    return flat.reshape(-1, LANES), d
+    pad_width = [(0, 0)] * (flat.ndim - 1) + [(0, padded - d)]
+    flat = jnp.pad(flat, pad_width)
+    return flat.reshape(*flat.shape[:-1], -1, LANES), d
 
 
 @functools.partial(jax.jit,
                    static_argnames=("m", "cfg", "hi_base", "block_rows",
-                                    "use_ref", "interpret"))
+                                    "use_ref", "interpret", "layout"))
+def _share_gen_jit(flat, m: int, key0, key1, cfg: FixedPointConfig,
+                   hi_base: int, block_rows: int, use_ref: bool,
+                   interpret: bool, layout: str):
+    x2d, d = pad_to_tiles(flat, block_rows)
+    if use_ref:
+        shares = share_gen_ref(x2d, m, key0, key1, cfg, hi_base=hi_base,
+                               layout=layout)
+    else:
+        shares = share_gen_pallas(x2d, m, key0, key1, cfg, hi_base=hi_base,
+                                  block_rows=block_rows, interpret=interpret,
+                                  layout=layout)
+    return shares, d
+
+
 def share_gen(flat, m: int, key0, key1, cfg: FixedPointConfig,
               hi_base: int = 0, block_rows: int = 64,
-              use_ref: bool = False, interpret: bool | None = None):
+              use_ref: bool = False, interpret: bool | None = None,
+              layout: str = "tiled"):
     """Encode + split a flat float32 vector into ``[m, R, 128]`` shares.
 
     Returns (shares, orig_len).  Padding encodes zeros, which are valid
     secrets — reconstruction of the pad region yields 0.
     """
-    x2d, d = pad_to_tiles(flat, block_rows)
+    dec = dispatch.decide(use_ref, interpret)
+    return _share_gen_jit(flat, m, key0, key1, cfg, hi_base, block_rows,
+                          dec.use_ref, dec.interpret, layout)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "cfg", "hi_base", "block_rows",
+                                    "use_ref", "interpret", "layout"))
+def _share_gen_batch_jit(flats, m: int, keys, cfg: FixedPointConfig,
+                         hi_base: int, block_rows: int, use_ref: bool,
+                         interpret: bool, layout: str):
+    x3d, d = pad_to_tiles(flats, block_rows)
     if use_ref:
-        shares = share_gen_ref(x2d, m, key0, key1, cfg, hi_base=hi_base)
+        shares = share_gen_batch_ref(x3d, m, keys, cfg, hi_base=hi_base,
+                                     layout=layout)
     else:
-        ip = (not _on_tpu()) if interpret is None else interpret
-        shares = share_gen_pallas(x2d, m, key0, key1, cfg, hi_base=hi_base,
-                                  block_rows=block_rows, interpret=ip)
+        shares = share_gen_batch_pallas(x3d, m, keys, cfg, hi_base=hi_base,
+                                        block_rows=block_rows,
+                                        interpret=interpret, layout=layout)
     return shares, d
+
+
+def share_gen_batch(flats, m: int, keys, cfg: FixedPointConfig,
+                    hi_base: int = 0, block_rows: int = 8,
+                    use_ref: bool = False, interpret: bool | None = None,
+                    layout: str = "flat", hot_path: bool = True,
+                    forced: str | None = None):
+    """All parties' stacks: float32 [l, D] + keys [l, 2] -> [l, m, R, 128].
+
+    The default ``layout="flat"`` makes slice ``p`` bit-identical to
+    ``core.additive.share(cfg.encode(flats[p]), m, *keys[p])`` (modulo
+    tile padding) — asserted by ``tests/test_kernel_dispatch.py``.
+    """
+    dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
+                          forced=forced)
+    return _share_gen_batch_jit(flats, m, jnp.asarray(keys, jnp.uint32),
+                                cfg, hi_base, block_rows, dec.use_ref,
+                                dec.interpret, layout)
 
 
 def unpad_flat(tiled, d: int):

@@ -13,6 +13,7 @@ Invariant: ``S.sum(0) == u`` exactly (ring addition).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import philox
@@ -20,13 +21,16 @@ from repro.core.fixed_point import FixedPointConfig
 
 
 def share_gen_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
-                  hi_base: int = 0, row_base: int = 0):
+                  hi_base: int = 0, row_base: int = 0,
+                  layout: str = "tiled"):
     """Oracle share generation.
 
     Args:
       x: float32 ``[R, 128]``.
       m: share count (static).
       cfg: ring-algebra fixed point config.
+      layout: counter_hi placement (``philox.tiled_words``) —
+        ``"flat"`` reproduces the ``core.additive.share`` mask stream.
 
     Returns:
       uint32 ``[m, R, 128]``.
@@ -40,10 +44,21 @@ def share_gen_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
         return u[None]
     masks = [
         philox.tiled_words(rows, key0, key1,
-                           counter_hi=hi_base + j + 1, row_base=row_base)
+                           counter_hi=hi_base + j + 1, row_base=row_base,
+                           layout=layout)
         for j in range(m - 1)
     ]
     last = u
     for mk in masks:
         last = last - mk
     return jnp.stack(masks + [last], axis=0)
+
+
+def share_gen_batch_ref(x, m: int, keys, cfg: FixedPointConfig,
+                        hi_base: int = 0, layout: str = "flat"):
+    """Oracle twin of ``share_gen_batch_pallas``: vmap over parties."""
+    assert x.ndim == 3 and x.shape[2] == 128, x.shape
+    return jax.vmap(
+        lambda xb, kb: share_gen_ref(xb, m, kb[0], kb[1], cfg,
+                                     hi_base=hi_base, layout=layout)
+    )(x, jnp.asarray(keys, jnp.uint32))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
                 block_t: int, block_d: int, st: int):
@@ -78,7 +80,7 @@ def ssm_scan_pallas(x, dt, bc, cc, a, *, block_t: int = 128,
                                lambda b, d, t: (b, t, d)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
         scratch_shapes=[pltpu.VMEM((st, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        **tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, bc, cc, a)

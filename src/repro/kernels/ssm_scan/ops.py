@@ -1,4 +1,7 @@
-"""Jit'd wrapper for the fused selective scan."""
+"""Jit'd wrapper for the fused selective scan.
+
+Backend selection goes through ``kernels.dispatch`` (DESIGN.md §7).
+"""
 
 from __future__ import annotations
 
@@ -6,21 +9,27 @@ import functools
 
 import jax
 
+from repro.kernels import dispatch
 from .kernel import ssm_scan_pallas
 from .ref import ssm_scan_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("block_t", "block_d",
                                              "use_ref", "interpret"))
+def _ssm_scan_jit(x, dt, bc, cc, a, *, block_t: int, block_d: int,
+                  use_ref: bool, interpret: bool):
+    if use_ref:
+        return ssm_scan_ref(x, dt, bc, cc, a)
+    return ssm_scan_pallas(x, dt, bc, cc, a, block_t=block_t,
+                           block_d=block_d, interpret=interpret)
+
+
 def ssm_scan(x, dt, bc, cc, a, *, block_t: int = 128, block_d: int = 128,
              use_ref: bool = False, interpret: bool | None = None):
     s, di = x.shape[1], x.shape[2]
-    if use_ref or s % block_t != 0 or di % 128 != 0:
-        return ssm_scan_ref(x, dt, bc, cc, a)
-    ip = (not _on_tpu()) if interpret is None else interpret
-    return ssm_scan_pallas(x, dt, bc, cc, a, block_t=block_t,
-                           block_d=block_d, interpret=ip)
+    if s % block_t != 0 or di % 128 != 0:
+        use_ref = True
+    d = dispatch.decide(use_ref, interpret)
+    return _ssm_scan_jit(x, dt, bc, cc, a, block_t=block_t,
+                         block_d=block_d, use_ref=d.use_ref,
+                         interpret=d.interpret)

@@ -36,6 +36,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
     from repro.configs import (SHAPES, get_config, input_specs, skip_reason,
                                decode_kv_len)
     from repro.launch.hlo_analysis import analyze_hlo
@@ -63,7 +64,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     cell = SHAPES[shape]
     specs = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if cell.kind == "train":
             gd = overrides.get("gather_dtype")
             wrap, abs_p, abs_o = make_train_step(

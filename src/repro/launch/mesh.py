@@ -7,8 +7,7 @@ must set ``XLA_FLAGS`` *before* the first jax initialization.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,14 +20,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(n_parties: int = 4, tp: int = 2):
     """Small mesh over forced host devices (tests/examples)."""
-    return jax.make_mesh((n_parties, tp), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n_parties, tp), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def party_axes_of(mesh) -> tuple[str, ...]:

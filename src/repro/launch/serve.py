@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.mesh import party_count_of
 from repro.launch.steps import make_serve_step, place
@@ -52,7 +53,7 @@ def main():
     rng = np.random.RandomState(args.seed)
     prompt = rng.randint(0, cfg.vocab, size=(b, args.prompt_len))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # prefill via repeated decode (exercises the ring buffer too)
         tok = jnp.asarray(prompt[:, :1], jnp.int32)
         for t in range(args.prompt_len):

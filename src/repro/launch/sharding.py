@@ -40,15 +40,6 @@ def activation_rules(cfg: ArchConfig, mesh,
     rules = dict(DEFAULT_RULES)
     party = party_axes_of(mesh)
     rules["batch"] = party if len(party) > 1 else party[0]
-    if manual_axes:
-        def strip(e):
-            if e is None:
-                return None
-            if isinstance(e, tuple):
-                kept = tuple(a for a in e if a not in manual_axes)
-                return kept or None
-            return None if e in manual_axes else e
-        rules = {k: strip(v) for k, v in rules.items()}
     tp = mesh.shape["model"]
     if cfg.n_heads % tp != 0:
         rules["heads"] = None          # fall back to unsharded heads
@@ -64,6 +55,18 @@ def activation_rules(cfg: ArchConfig, mesh,
             rules["expert_ff"] = "model"
     if cfg.vocab % tp != 0:
         rules["vocab"] = None
+    if manual_axes:
+        # applied LAST so the arch-specific assignments above cannot
+        # reintroduce a manual axis (constraints may not mention them —
+        # the data is already locally split inside the shard_map)
+        def strip(e):
+            if e is None:
+                return None
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in manual_axes)
+                return kept or None
+            return None if e in manual_axes else e
+        rules = {k: strip(v) for k, v in rules.items()}
     return rules
 
 

@@ -22,6 +22,7 @@ Two parameter layouts (DESIGN.md §2.2):
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Any, Sequence
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import philox
 from repro.core.fixed_point import DEFAULT_RING
 from repro.fl.spmd import secure_aggregate, secure_aggregate_tree
@@ -66,7 +68,7 @@ def secure_reduce_scatter_dim(g, dim: int, axes: Sequence[str], *,
     """
     n = 1
     for ax in axes:
-        n *= jax.lax.axis_size(ax)
+        n *= compat.axis_size(ax)
     g2 = jnp.moveaxis(g, dim, 0)
     flat = g2.reshape(-1).astype(jnp.float32)
     if tp_axis is not None:
@@ -86,7 +88,7 @@ def secure_reduce_scatter_dim(g, dim: int, axes: Sequence[str], *,
     k0, k1 = philox.derive_key(seed, 0xF5D9 ^ tag)
     pid = jnp.uint32(0)
     for ax in axes:
-        pid = pid * jnp.uint32(jax.lax.axis_size(ax)) + \
+        pid = pid * jnp.uint32(compat.axis_size(ax)) + \
             jax.lax.axis_index(ax).astype(jnp.uint32)
     k0 = k0 ^ (pid * jnp.uint32(0x9E3779B9)) ^ \
         (jnp.asarray(gidx, jnp.uint32) * jnp.uint32(0x85EBCA6B))
@@ -97,8 +99,7 @@ def secure_reduce_scatter_dim(g, dim: int, axes: Sequence[str], *,
                               use_ref=use_ref)
         scat = shares
         for ax in axes:
-            scat = jax.lax.psum_scatter(scat, ax, scatter_dimension=1,
-                                        tiled=True)
+            scat = compat.psum_scatter_tiled(scat, ax, scatter_dimension=1)
         rec = reconstruct(scat, n, fp, block_rows=block_rows,
                           use_ref=use_ref).reshape(-1)
     else:
@@ -183,7 +184,8 @@ def make_fsdp_transforms(cfg: ArchConfig, mesh, abstract_params, *,
             if dim is None:
                 out.append(leaf)
             else:
-                tag = hash("/".join(str(p) for p in path)) & 0x7FFFFFFF
+                tag = zlib.crc32("/".join(str(p) for p in path)
+                                 .encode("utf-8")) & 0x7FFFFFFF
                 src = leaf
                 if gather_dtype is not None and \
                         leaf.dtype == jnp.float32:
@@ -232,7 +234,8 @@ def make_train_step(cfg: ArchConfig, mesh, *,
     opt = opt or AdamWConfig()
     axes = party_axes_of(mesh)
     n_party = party_count_of(mesh)
-    rules = activation_rules(cfg, mesh, manual_axes=set(axes))
+    manual = compat.manual_axes_for(mesh, axes)
+    rules = activation_rules(cfg, mesh, manual_axes=manual)
     if fsdp is None:
         fsdp = needs_fsdp(cfg, mesh)
     if fsdp and cfg.enc_dec:
@@ -313,11 +316,11 @@ def make_train_step(cfg: ArchConfig, mesh, *,
 
     def wrap(batch_specs):
         b_pspec = batch_pspecs(batch_specs, mesh)
-        smapped = jax.shard_map(
+        smapped = compat.shard_map(
             step_fn, mesh=mesh,
             in_specs=(pp, opt_pp, P(), b_pspec),
             out_specs=(pp, opt_pp, P()),
-            axis_names=set(axes), check_vma=False)
+            axis_names=manual, check_vma=False)
         ps = param_shardings(abstract_params, cfg, mesh, fsdp=fsdp)
         in_shard = (ps, {"m": ps, "v": ps}, NamedSharding(mesh, P()),
                     batch_shardings(batch_specs, mesh))

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import lm_batch
@@ -30,8 +31,8 @@ from repro.optim import AdamWConfig, adamw_init
 def make_mesh_for_host(tp: int):
     n = jax.device_count()
     tp = min(tp, n)
-    return jax.make_mesh((n // tp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n // tp, tp), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
 
 
 def main():
@@ -91,7 +92,7 @@ def main():
         start += 1
         print(f"resumed from step {start - 1}")
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         t0 = time.perf_counter()
         for i in range(start, args.steps):
             toks, labels = lm_batch(cfg.vocab, b, s, seed=args.seed,

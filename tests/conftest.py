@@ -18,6 +18,16 @@ import random
 import sys
 import types
 
+
+def pytest_configure(config):
+    # kernel differential tests carry the "kernels" marker so CI can run
+    # them as a dedicated interpret-mode job (-m kernels); see
+    # .github/workflows/ci.yml and DESIGN.md §7
+    config.addinivalue_line(
+        "markers",
+        "kernels: Pallas-kernel differential tests (CPU interpret / TPU "
+        "compiled); any skip must carry an asserted 'capability:' reason")
+
 try:
     import hypothesis  # noqa: F401  (real package wins)
 except ImportError:

@@ -1,0 +1,85 @@
+"""Fault-model semantics: per-round RNG derivation + committee quorum."""
+
+import numpy as np
+import pytest
+
+from repro.fl.faults import apply_faults, quorum_met, round_rng
+
+
+MEMBERS = set(range(40))
+
+
+def _pattern(seed, round_index, crash_prob=0.4):
+    out = apply_faults(MEMBERS, {}, None, seed=seed,
+                       round_index=round_index, crash_prob=crash_prob)
+    return frozenset(out.dropped)
+
+
+def test_same_seed_round_reproducible():
+    assert _pattern(7, 3) == _pattern(7, 3)
+
+
+def test_rounds_draw_independent_patterns():
+    """The pre-fix bug: RandomState(seed) replayed the identical
+    crash pattern every round.  (seed, round) derivation must not."""
+    patterns = {_pattern(7, r) for r in range(6)}
+    assert len(patterns) > 1
+
+
+def test_seeds_draw_independent_patterns():
+    assert _pattern(1, 0) != _pattern(2, 0) or \
+        _pattern(1, 1) != _pattern(2, 1)
+
+
+def test_round_rng_is_stable_across_processes():
+    # SeedSequence((a, b)) is deterministic across platforms/processes
+    assert round_rng(5, 9).randint(0, 2**31) == \
+        round_rng(5, 9).randint(0, 2**31)
+
+
+def test_straggler_rejoins_semantics_unchanged():
+    lat = {0: 9.0, 1: 0.1, 2: 0.2}
+    out = apply_faults({0, 1, 2}, lat, deadline_s=1.0, seed=0)
+    assert out.straggled == {0} and out.alive == {1, 2}
+
+
+def test_committee_quorum_resurrects_fastest_members():
+    members = set(range(8))
+    committee = (0, 1, 2)
+    lat = {0: 5.0, 1: 3.0, 2: 0.1, 3: 0.2, 4: 0.2}
+    # deadline 1.0 straggles committee members 0 and 1 -> only member 2
+    # alive, but Shamir degree 1 needs 2 points: resurrect the FASTEST
+    # faulted member (1, at 3.0s) and leave 0 straggled
+    out = apply_faults(members, lat, deadline_s=1.0, seed=0,
+                       committee=committee, reconstruct_threshold=2)
+    live_com = set(committee) & out.alive
+    assert len(live_com) >= 2
+    assert 1 in out.alive and 0 not in out.alive
+
+
+def test_committee_quorum_never_below_threshold_with_crashes():
+    members = set(range(12))
+    committee = (3, 4, 5)
+    for r in range(20):
+        out = apply_faults(members, {}, None, seed=11, round_index=r,
+                           crash_prob=0.95, committee=committee,
+                           reconstruct_threshold=3)
+        assert set(committee) <= out.alive  # additive: all m needed
+
+
+def test_committee_outside_membership_raises():
+    with pytest.raises(ValueError, match="re-elect"):
+        apply_faults({0, 1, 2}, {}, None, committee=(0, 5, 6),
+                     reconstruct_threshold=2)
+
+
+def test_empty_round_keeps_fastest_and_consistent_sets():
+    lat = {0: 1.0, 1: 2.0}
+    out = apply_faults({0, 1}, lat, deadline_s=0.5, seed=0)
+    assert out.alive == {0}
+    assert 0 not in out.straggled and 0 not in out.dropped
+
+
+def test_quorum_met():
+    assert quorum_met({1, 2, 3}, 5)
+    assert not quorum_met({1}, 5)

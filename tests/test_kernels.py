@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.kernels
+
 from repro.core import philox
 from repro.core.fixed_point import DEFAULT_FIELD, DEFAULT_RING
 from repro.kernels.share_gen import share_gen, share_gen_ref

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.lru_scan import lru_scan_pallas, lru_scan_ref
+
+pytestmark = pytest.mark.kernels
 from repro.models.scan_utils import chunked_linear_scan
 
 

@@ -13,7 +13,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.data import fault_detection_party, train_test_split
+from repro.data import fault_detection_party
 from repro.fl import FedAvgConfig, run_fedavg
 from repro.models import simple_nn
 

@@ -1,0 +1,46 @@
+"""Machine-speed calibration for cross-host bench comparison.
+
+CI compares freshly measured wall-times against baselines committed
+from a different machine.  A raw 1.5× threshold would trip on any
+runner that is simply slower, so every BENCH json records
+``calib_wall_s`` — the wall time of one fixed, deterministic workload
+(Philox mask generation + ring reduction, the same arithmetic the hot
+paths are made of) — and ``benchmarks.bench_compare`` rescales the
+committed wall-times by the calibration ratio before applying the
+regression threshold.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def calib_wall_s(elems: int = 1 << 20, iters: int = 8,
+                 best_of: int = 3) -> float:
+    """Wall seconds of the fixed calibration workload on this machine.
+
+    Min-of-``best_of`` repetitions: the calibration sets the allowance
+    scale for every comparison, so its own jitter must be far below the
+    regression threshold.
+    """
+    from repro.core import philox
+
+    k0, k1 = philox.derive_key(1, 1)
+
+    def work(i):
+        bits = philox.random_bits(elems, k0, k1, counter_hi=i)
+        return jnp.sum(bits, dtype=jnp.uint32)
+
+    work(0).block_until_ready()  # compile / warm
+    best = float("inf")
+    for _ in range(best_of):
+        t0 = time.perf_counter()
+        acc = jnp.uint32(0)
+        for i in range(1, iters + 1):
+            acc = acc + work(i)
+        jax.block_until_ready(acc)
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -19,7 +19,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.costmodel import CostParams
-from repro.core import costmodel
 from repro.fl.simulation import FLSimulation
 
 ENVS = {

@@ -98,8 +98,10 @@ def dispatch_rows(d: int = 1 << 16, m: int = 3, repeats: int = 2) -> dict:
 def write_bench_json(path: str = "BENCH_kernels.json", d: int = 1 << 16,
                      m: int = 3) -> dict:
     """Record ref/interpret/compiled timings + dispatch provenance."""
+    from benchmarks.calib import calib_wall_s
     rows = dispatch_rows(d=d, m=m)
     bench = {
+        "calib_wall_s": round(calib_wall_s(), 4),
         "dispatch": dispatch.capability_summary(),
         "elements": d,
         "m": m,

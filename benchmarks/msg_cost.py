@@ -19,6 +19,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import costmodel
+from repro.core.compression import CompressionConfig
 from repro.core.costmodel import CostParams
 from repro.core.fixed_point import FixedPointConfig
 from repro.fl import make_transport
@@ -70,6 +71,44 @@ def phase_split(n_values=(4, 8, 16, 32, 64, 128), e=15, s=SIMPLE_S):
             "phase2_size": costmodel.phase2_msg_size(p),
         })
     return out
+
+
+def compression_sweep(ratios=(0.01, 0.1), n_values=(16, 64, 256), e=15,
+                      s=SIMPLE_S, m=3, b=10, verify_up_to=64):
+    """Top-k × two-phase combined reduction (sparsified Eqs. 2/4/6).
+
+    For each (ratio, n) the sparsified closed forms are evaluated and,
+    up to ``verify_up_to`` parties, cross-checked against the counting
+    simulation running with ``CompressionConfig`` actually enabled —
+    the combined compression × two-phase claim is *measured*, not just
+    derived.
+    """
+    rows = []
+    for ratio in ratios:
+        for n in n_values:
+            p = CostParams(n=n, e=e, s=s, m=m, b=b)
+            row = costmodel.summary_topk(p, ratio)
+            row["twophase_msg_size_dense"] = costmodel.twophase_msg_size(p)
+            if n <= verify_up_to:
+                rng = np.random.RandomState(0)
+                flats = [jnp.asarray(rng.randn(s).astype(np.float32))
+                         for _ in range(n)]
+                sim = FLSimulation(
+                    n=n, m=m, seed=1,
+                    compression=CompressionConfig(enabled=True,
+                                                  top_k_ratio=ratio))
+                sim.elect_committee()
+                for _ in range(e):
+                    sim.aggregate_two_phase(flats)
+                got = (sim.net.stats("phase1").msg_size
+                       + sim.phase2_stats().msg_size)
+                assert got == row["twophase_msg_size_topk"], \
+                    (ratio, n, got, row)
+                row["verified"] = True
+            else:
+                row["verified"] = False
+            rows.append(row)
+    return rows
 
 
 def vectorized_round(n: int = 10_000, s: int = 10_000, m: int = 3,
@@ -130,10 +169,19 @@ def write_bench_json(path: str = "BENCH_msgcost.json",
             "twophase_msg_size": costmodel.twophase_msg_size(p),
             "reduction_factor": round(costmodel.reduction_factor(p), 2),
         })
+    from benchmarks.calib import calib_wall_s
     out = {
         "generated_by": "benchmarks/msg_cost.py",
+        "calib_wall_s": round(calib_wall_s(), 4),
         "params": {"e": e, "s": s, "m": 3, "b": 10},
         "sweep": sweep_rows,
+        # top-k × two-phase combined reduction (sparsified Eqs. 2/4/6,
+        # sim-verified at small n)
+        "compression": [
+            {k: (round(v, 2) if isinstance(v, float) else v)
+             for k, v in row.items()}
+            for row in compression_sweep()
+        ],
     }
     if include_round:
         out["vectorized_two_phase_round"] = vectorized_round()
@@ -155,3 +203,9 @@ def emit(writer):
     for row in phase_split():
         writer(f"fig9_phase1_size_n{row['n']}", None, row["phase1_size"])
         writer(f"fig9_phase2_size_n{row['n']}", None, row["phase2_size"])
+    for row in compression_sweep():
+        tag = f"r{row['top_k_ratio']}_n{row['n']}"
+        writer(f"msg_size_2phase_topk_{tag}", None,
+               row["twophase_msg_size_topk"])
+        writer(f"combined_reduction_{tag}", None,
+               round(row["combined_reduction_factor"], 2))

@@ -13,7 +13,6 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.aggregation import SecureAggregator
 from repro.fl.simulation import FLSimulation
 
 SIZES = {"simple": 242, "complex": 7380}

@@ -8,6 +8,7 @@ derived/analytic rows).  Sections:
   protocols      — Figs. 15-16 (Additive vs Shamir; Simple vs Complex)
   accuracy       — Table II (local / centralized / federated)
   kernels_bench  — kernel traffic models + oracle timings
+  stream_bench   — streaming chunked aggregation (CI-sized rows)
   dryrun_summary — roofline terms per (arch × shape × mesh), if present
 """
 
@@ -15,7 +16,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 import sys
 import traceback
 
@@ -27,13 +27,15 @@ def main() -> None:
     def writer(name, us_per_call, derived):
         rows.append((name, us_per_call, derived))
 
-    from . import accuracy, exec_time, kernels_bench, msg_cost, protocols
+    from . import (accuracy, exec_time, kernels_bench, msg_cost, protocols,
+                   stream_bench)
     sections = {
         "msg_cost": msg_cost.emit,
         "exec_time": exec_time.emit,
         "protocols": protocols.emit,
         "accuracy": accuracy.emit,
         "kernels_bench": kernels_bench.emit,
+        "stream_bench": stream_bench.emit,
     }
     for name, fn in sections.items():
         if only and name != only:

@@ -1,0 +1,231 @@
+"""Streaming-aggregation benchmark: peak memory + wall time vs chunk size.
+
+Measures ``SecureAggregator.aggregate_stream`` (DESIGN.md §8) against
+the whole-vector path (= one chunk spanning ``d``) over a party-lazy
+source, and records both into ``BENCH_stream.json``:
+
+* **wall time** — measured in a child process per (path, config);
+* **peak memory** — each child records ``ru_maxrss`` right before and
+  right after the aggregation (same process, so mmap-residency noise
+  between processes cannot pollute the delta): the reported MBs are
+  the aggregation working set above the import/runtime high-water
+  mark — 0 means the working set hid under the runtime footprint
+  (possible at the CI-sized rows, never at the full rows);
+* **analytic share-stack bytes** — ``party_chunk · m · chunk · 4`` vs
+  ``min(n, party_chunk) · m · d · 4``, the exact live-buffer model the
+  streaming pipeline bounds.
+
+Honesty flags: configs where the full party count is too slow for a
+CPU runner measure ``parties_measured < n`` parties and scale the wall
+time linearly (``"extrapolated": true`` — per-party work is embarrass-
+ingly parallel so the scaling is exact up to accumulation overhead);
+peak memory needs no extrapolation because the party-chunked engine's
+working set is independent of ``n`` beyond ``party_chunk``.
+
+Row sets:
+
+* ``quick`` rows (small ``d``) — cheap enough for the CI
+  ``bench-regression`` job (compared against the committed baseline by
+  ``benchmarks.bench_compare``);
+* ``full`` rows — the paper-scale claims (d up to 20M elements,
+  n up to 1024), regenerated locally / on main.
+
+CLI::
+
+    python -m benchmarks.stream_bench [--quick] [--out BENCH_stream.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+M_SHARES = 3
+
+QUICK_CONFIGS = [
+    # d, n, chunk_elems, parties_measured
+    (1 << 17, 16, 1 << 14, 16),
+    (1 << 17, 64, 1 << 14, 64),
+]
+
+FULL_CONFIGS = [
+    (1 << 20, 64, 1 << 17, 64),
+    (20 * (1 << 20), 64, 1 << 20, 8),
+    (20 * (1 << 20), 1024, 1 << 20, 8),
+]
+
+
+def _source_factory(d: int):
+    """Deterministic lazy per-party update blocks (no l×d materialization)."""
+    import numpy as np
+
+    def source(p_lo, p_hi, e_lo, e_hi):
+        out = np.empty((p_hi - p_lo, e_hi - e_lo), np.float32)
+        for row, p in enumerate(range(p_lo, p_hi)):
+            rng = np.random.RandomState((p * 1000003 + e_lo) % (2 ** 31))
+            out[row] = rng.standard_normal(e_hi - e_lo).astype(np.float32) \
+                * 0.05
+        return out
+
+    return source
+
+
+def _child_run(spec: dict) -> None:
+    """One measurement in a fresh process; prints a JSON result line.
+
+    ``spec["mode"]``: ``stream`` or ``whole`` (= one chunk spanning d).
+    ``mem_mb`` is the in-process ``ru_maxrss`` growth across the
+    aggregation: the working set above the import/runtime high-water
+    mark.
+    """
+    import jax
+    import numpy as np
+    from repro.core.aggregation import SecureAggregator
+
+    d, n = spec["d"], spec["n"]
+    parties = spec["parties_measured"]
+    chunk_elems = spec["chunk_elems"] if spec["mode"] == "stream" else d
+    source = _source_factory(d)
+    agg = SecureAggregator(m=M_SHARES)
+    ids = np.arange(parties)
+    # touch one source block so lazy-generation setup cost is in the base
+    source(0, min(parties, 8), 0, min(d, 1 << 14))
+
+    rss0_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    t0 = time.perf_counter()
+    out = agg.aggregate_stream(
+        source, seed=1, party_ids=ids, round_index=1, d=d,
+        chunk_elems=chunk_elems, party_chunk=parties, n=n)
+    jax.block_until_ready(out)
+    wall_s = time.perf_counter() - t0
+    assert np.isfinite(np.asarray(out[:128])).all()
+    rss1_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    print(json.dumps({"wall_s": wall_s,
+                      "mem_mb": max(0, rss1_kb - rss0_kb) / 1024.0}))
+
+
+def _measure(spec: dict) -> dict:
+    """Spawn a child for one (mode, config) measurement."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.stream_bench", "--child",
+         json.dumps(spec)],
+        capture_output=True, text=True, cwd=root, env=env, check=False)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"stream_bench child failed for {spec}:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _row(d: int, n: int, chunk_elems: int, parties_measured: int,
+         quick: bool, repeats: int) -> dict:
+    res = {}
+    for mode in ("stream", "whole"):
+        spec = {"mode": mode, "d": d, "n": n, "chunk_elems": chunk_elems,
+                "parties_measured": parties_measured}
+        runs = [_measure(spec) for _ in range(repeats)]
+        res[mode] = {
+            "wall_s": min(r["wall_s"] for r in runs),
+            "mem_mb": min(r["mem_mb"] for r in runs),
+        }
+    # live share-stack model at the MEASURED configuration (party
+    # chunk = parties_measured), apples-to-apples with the mem_mb
+    # readings; the *_at_n fields model the pre-PR engine's default
+    # party chunk of min(n, 2048) parties.  The reduction ratio is
+    # d/chunk_elems either way — it is party-chunk independent.
+    whole_bytes = parties_measured * M_SHARES * d * 4
+    stream_bytes = parties_measured * M_SHARES * chunk_elems * 4
+    scale = n / parties_measured
+    row = {
+        "d": d, "n": n, "m": M_SHARES, "chunk_elems": chunk_elems,
+        "parties_measured": parties_measured,
+        "extrapolated": parties_measured < n,
+        "quick": quick,
+        "stream_wall_s": round(res["stream"]["wall_s"], 3),
+        "whole_wall_s": round(res["whole"]["wall_s"], 3),
+        "stream_wall_s_at_n": round(res["stream"]["wall_s"] * scale, 3),
+        "whole_wall_s_at_n": round(res["whole"]["wall_s"] * scale, 3),
+        "wall_overhead_stream_vs_whole": round(
+            res["stream"]["wall_s"] / max(res["whole"]["wall_s"], 1e-9), 3),
+        "stream_mem_mb": round(res["stream"]["mem_mb"], 1),
+        "whole_mem_mb": round(res["whole"]["mem_mb"], 1),
+        # ratio only meaningful once both working sets clear the
+        # runtime noise floor (always true at the full-sized rows)
+        "peak_mem_reduction_measured": (
+            round(res["whole"]["mem_mb"] / res["stream"]["mem_mb"], 2)
+            if res["stream"]["mem_mb"] >= 16.0 else None),
+        "peak_share_bytes_stream": stream_bytes,
+        "peak_share_bytes_whole": whole_bytes,
+        "peak_share_bytes_stream_at_n": min(n, 2048) * M_SHARES
+        * chunk_elems * 4,
+        "peak_share_bytes_whole_at_n": min(n, 2048) * M_SHARES * d * 4,
+        "peak_mem_reduction_analytic": round(whole_bytes / stream_bytes, 2),
+    }
+    return row
+
+
+def write_bench_json(path: str | None = "BENCH_stream.json",
+                     quick: bool = False, repeats: int = 1) -> dict:
+    """Measure the row set; ``path=None`` measures without writing
+    (the ``benchmarks.run`` CSV section must not clobber the committed
+    full-row baseline with a quick-only file)."""
+    from benchmarks.calib import calib_wall_s
+
+    configs = [(c, True) for c in QUICK_CONFIGS]
+    if not quick:
+        configs += [(c, False) for c in FULL_CONFIGS]
+    rows = [_row(d, n, ce, pm, is_quick, repeats)
+            for (d, n, ce, pm), is_quick in configs]
+    out = {
+        "generated_by": "benchmarks/stream_bench.py",
+        "m": M_SHARES,
+        "calib_wall_s": round(calib_wall_s(), 4),
+        "rows": rows,
+    }
+    if path is not None:
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+    return out
+
+
+def emit(writer):
+    """CSV section for ``benchmarks.run`` (quick rows, measure-only)."""
+    bench = write_bench_json(path=None, quick=True)
+    for row in bench["rows"]:
+        tag = f"d{row['d']}_n{row['n']}_c{row['chunk_elems']}"
+        writer(f"stream_wall_s_{tag}", None, row["stream_wall_s"])
+        writer(f"stream_overhead_{tag}", None,
+               row["wall_overhead_stream_vs_whole"])
+        writer(f"stream_mem_reduction_{tag}", None,
+               row["peak_mem_reduction_analytic"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="only the CI-sized rows")
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_stream.json")
+    ap.add_argument("--child", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child is not None:
+        _child_run(json.loads(args.child))
+        return
+    out = write_bench_json(args.out, quick=args.quick,
+                           repeats=args.repeats)
+    for row in out["rows"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

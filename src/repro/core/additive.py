@@ -28,7 +28,11 @@ def share(v, m: int, key0, key1, counter_base: int = 0):
       m: number of shares (committee size, or n for P2P).
       key0, key1: Philox key for this (round, party) — callers derive it
         with ``philox.derive_key(seed, stream)``.
-      counter_base: offset into the counter stream (for chunked calls).
+      counter_base: offset into the counter stream in 4-word blocks (for
+        chunked calls): sharing elements ``[off, off+L)`` of a logical
+        vector with ``counter_base=off//4`` (``off % 4 == 0``) yields
+        exactly the slice ``share(full)[..., off:off+L]`` bit-for-bit —
+        the streaming-aggregation invariant (DESIGN.md §8).
 
     Returns:
       uint32 array ``[m, *v.shape]``; ``out.sum(0)`` wraps back to ``v``.
@@ -39,7 +43,8 @@ def share(v, m: int, key0, key1, counter_base: int = 0):
     if m == 1:
         return v[None]
     masks = [
-        philox.random_bits_like(v, key0, key1, counter_hi=j + 1)
+        philox.random_bits_like(v, key0, key1, counter_hi=j + 1,
+                                counter_base=counter_base)
         for j in range(m - 1)
     ]
     last = v

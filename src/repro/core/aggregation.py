@@ -17,7 +17,6 @@ The aggregator itself is transport-agnostic; the message/wire behaviour
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +27,27 @@ from .fixed_point import FixedPointConfig, DEFAULT_FIELD, DEFAULT_RING
 
 SCHEME_ADDITIVE = "additive"
 SCHEME_SHAMIR = "shamir"
+
+#: Default element-chunk size for the streaming aggregation path — ~1M
+#: elements keeps the live share stack at
+#: ``party_chunk · m · chunk_elems · 4`` bytes regardless of model size.
+DEFAULT_CHUNK_ELEMS = 1 << 20
+
+#: Chunk boundaries must align to the Philox counter tiling shared by
+#: the oracle (4-word counter blocks) and the Pallas kernels (128-lane
+#: rows): 128 covers both, so ``elem_base // 4`` and ``elem_base // 128``
+#: are exact for every chunk.
+CHUNK_ALIGN = 128
+
+
+def _check_chunk_elems(chunk_elems: int) -> int:
+    chunk_elems = int(chunk_elems)
+    if chunk_elems < CHUNK_ALIGN or chunk_elems % CHUNK_ALIGN != 0:
+        raise ValueError(
+            f"chunk_elems={chunk_elems} must be a positive multiple of "
+            f"{CHUNK_ALIGN} (Philox counter-row alignment; see "
+            "DESIGN.md §8)")
+    return chunk_elems
 
 
 def flatten_pytree(tree):
@@ -104,7 +124,7 @@ class SecureAggregator:
                             degree=self.shamir_degree)
 
     def make_shares_batch(self, flats, *, seed: int, party_ids,
-                          round_index: int = 0):
+                          round_index: int = 0, elem_base: int = 0):
         """All parties' share stacks: ``[l, D] -> [l, m, D]``.
 
         Bit-identical to stacking per-party ``make_shares`` calls for
@@ -113,6 +133,14 @@ class SecureAggregator:
         and the high word ``round_index >> 8`` is party-independent —
         both are fed to ``derive_key`` exactly as the Python-int path
         of ``make_shares`` derives them.
+
+        ``elem_base``: element offset of this chunk inside the logical
+        whole-vector codeword (multiple of ``CHUNK_ALIGN``).  Chunk
+        ``c`` then consumes exactly the Philox counter range it would
+        occupy inside the full vector — the streaming invariant — so
+        ``make_shares_batch(full)[..., off:off+L]`` equals
+        ``make_shares_batch(full[:, off:off+L], elem_base=off)``
+        bit-for-bit on every dispatch path.
 
         Routed through ``kernels.dispatch``: the jnp-oracle vmap, the
         interpret-mode Pallas kernel, and the compiled kernel all
@@ -124,24 +152,32 @@ class SecureAggregator:
         ids = jnp.asarray(np.asarray(party_ids), dtype=jnp.uint32)
         stream_lo = jnp.uint32((round_index << 24) & 0xFFFFFFFF) | ids
         stream_hi = (round_index << 24) >> 32
+        elem_base = int(elem_base)
+        if elem_base % CHUNK_ALIGN != 0 or elem_base < 0:
+            raise ValueError(
+                f"elem_base={elem_base} must be a non-negative multiple "
+                f"of {CHUNK_ALIGN} (counter-row alignment)")
 
         dec = dispatch.decide(hot_path=True, forced=self.kernel_backend)
         if not dec.use_ref:
             return self._make_shares_batch_kernel(flats, stream_lo,
-                                                  stream_hi, seed, dec)
+                                                  stream_hi, seed, dec,
+                                                  elem_base)
 
         def _one(flat, lo):
             k0, k1 = philox.derive_key(seed, (lo, stream_hi))
             code = self.encode(flat)
             if self.scheme == SCHEME_ADDITIVE:
-                return additive.share(code, self.m, k0, k1)
+                return additive.share(code, self.m, k0, k1,
+                                      counter_base=elem_base // 4)
             return shamir.share(code, self.m, k0, k1,
-                                degree=self.shamir_degree)
+                                degree=self.shamir_degree,
+                                counter_base=elem_base // 4)
 
         return jax.vmap(_one)(flats, stream_lo)
 
     def _make_shares_batch_kernel(self, flats, stream_lo, stream_hi,
-                                  seed: int, dec):
+                                  seed: int, dec, elem_base: int = 0):
         """Fused-kernel twin of the vmap path (same keys, same bits)."""
         from repro.kernels.share_gen import share_gen_batch, unpad_flat
         from repro.kernels.shamir import shamir_share_batch
@@ -149,21 +185,28 @@ class SecureAggregator:
             lambda lo: philox.derive_key(seed, (lo, stream_hi)))(stream_lo)
         keys = jnp.stack([k0s, k1s], axis=1)
         block_rows = 64 if dec.mode == "compiled" else 8
+        # row_base is a static kernel parameter, so each distinct chunk
+        # offset compiles once — a deliberate tradeoff: the offsets form
+        # a small fixed set (d / chunk_elems values) that recurs every
+        # round, so the jit cache amortizes the compiles across training
+        row_base = elem_base // 128
         # forced=dec.mode: the outer decision is authoritative — without
         # it the inner op re-consults the env var, which would invert
         # the documented per-object-over-env precedence
         if self.scheme == SCHEME_ADDITIVE:
             stacks, d = share_gen_batch(
                 flats, self.m, keys, self.fp, block_rows=block_rows,
-                layout="flat", forced=dec.mode)
+                layout="flat", forced=dec.mode, row_base=row_base)
         else:
             stacks, d = shamir_share_batch(
                 flats, self.m, keys, self.fp, degree=self.shamir_degree,
-                block_rows=block_rows, layout="flat", forced=dec.mode)
+                block_rows=block_rows, layout="flat", forced=dec.mode,
+                row_base=row_base)
         return unpad_flat(stacks, d)
 
     def sum_shares_batch(self, flats, *, seed: int, party_ids,
-                         round_index: int = 0, chunk: int = 2048):
+                         round_index: int = 0, chunk: int = 2048,
+                         elem_base: int = 0):
         """Streaming share-stack sum: ``[l, D] -> [m, D]`` member sums.
 
         Generates shares in party chunks of ``chunk`` and accumulates the
@@ -171,18 +214,38 @@ class SecureAggregator:
         instead of ``O(l·m·D)`` — this is what makes l = 10,000-party
         rounds feasible.  The modular sums are order-independent, so the
         result is bit-identical to ``reduce_party_shares`` over the full
-        ``make_shares_batch`` stack.
+        ``make_shares_batch`` stack.  ``elem_base`` forwards the
+        element-chunk offset (see ``make_shares_batch``).
+
+        ``flats`` may also be a callable ``(p_lo, p_hi) -> [p, D]``
+        block producer — ``aggregate_stream`` uses this so the party
+        loop (and its modular accumulator) lives exactly once, here.
         """
-        flats = jnp.asarray(flats, dtype=jnp.float32)
         ids = np.asarray(party_ids)
-        l = flats.shape[0]
-        if ids.shape[0] != l:
-            raise ValueError(f"{l} updates but {ids.shape[0]} party ids")
+        l = int(ids.shape[0])
+        if callable(flats):
+            get = flats
+        else:
+            flats = jnp.asarray(flats, dtype=jnp.float32)
+            if flats.shape[0] != l:
+                raise ValueError(
+                    f"{flats.shape[0]} updates but {l} party ids")
+
+            def get(lo, hi):
+                return flats[lo:hi]
+
         acc = None
         for off in range(0, l, chunk):
+            hi = min(off + chunk, l)
+            block = jnp.asarray(get(off, hi), dtype=jnp.float32)
+            if block.ndim != 2 or block.shape[0] != hi - off:
+                raise ValueError(
+                    f"party block source returned {block.shape}, "
+                    f"expected ({hi - off}, D)")
             stacks = self.make_shares_batch(
-                flats[off:off + chunk], seed=seed,
-                party_ids=ids[off:off + chunk], round_index=round_index)
+                block, seed=seed,
+                party_ids=ids[off:hi], round_index=round_index,
+                elem_base=elem_base)
             part = self.reduce_party_shares(stacks)
             if acc is None:
                 acc = part
@@ -192,6 +255,88 @@ class SecureAggregator:
                 from .field import fadd
                 acc = fadd(acc, part)
         return acc
+
+    # -- streaming chunked pipeline (share -> sum -> reconstruct) ---------
+
+    def aggregate_stream(self, flats, *, seed: int, party_ids,
+                         round_index: int = 0,
+                         chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                         party_chunk: int = 2048, d: int | None = None,
+                         member_rows=None,
+                         points: tuple[int, ...] | None = None,
+                         n: int | None = None):
+        """Streaming chunked secure aggregation: ``[l, D] -> [D]`` mean.
+
+        Splits the flattened codeword into element chunks of
+        ``chunk_elems`` and streams each chunk through
+        ``sum_shares_batch -> reconstruct_mean`` (which itself streams
+        share generation in party chunks),
+        so peak live memory is ``O(party_chunk · m · chunk_elems)``
+        instead of ``O(party_chunk · m · D)``.  Bit-identical to the
+        whole-vector path by construction: chunk ``c`` consumes exactly
+        the per-party Philox counter range it would inside the full
+        vector (``elem_base`` plumbing), modular share sums are
+        order-independent, and decode is element-wise — pinned by the
+        hypothesis differential test in ``tests/test_streaming.py``.
+
+        Args:
+          flats: ``[l, D]`` array of per-party flat updates, OR a
+            callable ``source(p_lo, p_hi, e_lo, e_hi) -> [p, e]`` block
+            producer (lazy sources let ``l·D`` exceed RAM; requires
+            ``d`` and an explicit ``party_ids``).
+          party_ids: original ids of the ``l`` live parties.
+          chunk_elems: element-chunk size (positive multiple of 128).
+          party_chunk: party-chunk size of the inner share-sum stream.
+          d: codeword length (required for callable ``flats``).
+          member_rows: optional index array selecting the live committee
+            member rows of each chunk's ``[m, chunk]`` sums before
+            reconstruction (Shamir sub-threshold dropout path).
+          points: Shamir evaluation points matching ``member_rows``.
+          n: divisor of the reconstructed mean (default ``l``).
+
+        Returns:
+          float32 ``[D]`` — the FedAvg mean of the ``l`` updates.
+        """
+        chunk_elems = _check_chunk_elems(chunk_elems)
+        ids = np.asarray(party_ids)
+        l = int(ids.shape[0])
+        if callable(flats):
+            if d is None:
+                raise ValueError("callable flats requires d=")
+            source = flats
+        else:
+            flats = jnp.asarray(flats, dtype=jnp.float32)
+            if flats.shape[0] != l:
+                raise ValueError(
+                    f"{flats.shape[0]} updates but {l} party ids")
+            if d is None:
+                d = int(flats.shape[1])
+
+            def source(p_lo, p_hi, e_lo, e_hi):
+                return flats[p_lo:p_hi, e_lo:e_hi]
+
+        n = l if n is None else int(n)
+        out = []
+        for e_lo in range(0, d, chunk_elems):
+            e_hi = min(e_lo + chunk_elems, d)
+
+            def col_block(p_lo, p_hi, e_lo=e_lo, e_hi=e_hi):
+                block = jnp.asarray(source(p_lo, p_hi, e_lo, e_hi),
+                                    dtype=jnp.float32)
+                if block.shape != (p_hi - p_lo, e_hi - e_lo):
+                    raise ValueError(
+                        f"source returned {block.shape}, expected "
+                        f"{(p_hi - p_lo, e_hi - e_lo)}")
+                return block
+
+            acc = self.sum_shares_batch(
+                col_block, seed=seed, party_ids=ids,
+                round_index=round_index, chunk=party_chunk,
+                elem_base=e_lo)
+            if member_rows is not None:
+                acc = acc[jnp.asarray(member_rows)]
+            out.append(self.reconstruct_mean(acc, n, points=points))
+        return out[0] if len(out) == 1 else jnp.concatenate(out)
 
     # -- committee / reconstruction side ---------------------------------
 

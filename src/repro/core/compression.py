@@ -32,6 +32,11 @@ class CompressionConfig:
     top_k_ratio: float = 0.01     # fraction of coordinates kept
     error_feedback: bool = True
 
+    def __post_init__(self):
+        if not 0.0 < self.top_k_ratio <= 1.0:
+            raise ValueError(
+                f"top_k_ratio={self.top_k_ratio} must be in (0, 1]")
+
 
 def init_error_state(flat):
     return jnp.zeros_like(flat)
@@ -59,6 +64,31 @@ def compress_topk(flat, cfg: CompressionConfig, error_state):
 
 def decompress_topk(values, idx, d: int):
     return jnp.zeros((d,), values.dtype).at[idx].add(values)
+
+
+def compress_topk_batch(flats, cfg: CompressionConfig, error_states):
+    """Vectorized per-party sparsification for the transport hot path.
+
+    Args:
+      flats: float32 ``[l, D]`` — one flat update per live party.
+      error_states: float32 ``[l, D]`` — each party's persistent error
+        accumulator (rows gathered by the caller per live party id).
+
+    Returns:
+      ``(dense, new_error_states)`` where ``dense`` is the ``[l, D]``
+      densified top-k updates (``decompress_topk(compress_topk(...))``
+      per party — the "dense-in-the-chunk codeword" that the chunked
+      secure-aggregation stream shares; the sparse (values, idx) pair is
+      what travels the wire, sized by ``compressed_size``).
+    """
+    d = flats.shape[1]
+
+    def _one(flat, err):
+        values, idx, new_err = compress_topk(flat, cfg, err)
+        return decompress_topk(values, idx, d), new_err
+
+    return jax.vmap(_one)(jnp.asarray(flats, jnp.float32),
+                          jnp.asarray(error_states, jnp.float32))
 
 
 def compressed_size(d: int, cfg: CompressionConfig) -> int:

@@ -16,7 +16,6 @@ rounds inside a Pallas kernel and is tested for bit-equality against it.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -118,10 +117,17 @@ def random_bits(n: int, key0, key1, counter_hi=0, counter_base=0):
     return words.reshape(-1)[:n]
 
 
-def random_bits_like(x, key0, key1, counter_hi=0):
-    """Uniform uint32 words with the shape of ``x``."""
+def random_bits_like(x, key0, key1, counter_hi=0, counter_base=0):
+    """Uniform uint32 words with the shape of ``x``.
+
+    ``counter_base`` offsets into the counter stream in *blocks* of four
+    words, exactly as ``random_bits`` — chunked callers that process
+    elements ``[off, off+L)`` of a logical vector pass
+    ``counter_base=off//4`` (with ``off % 4 == 0``) to draw the same
+    words the whole-vector call would have drawn at those positions.
+    """
     flat = random_bits(int(np.prod(x.shape)) if x.shape else 1, key0, key1,
-                       counter_hi=counter_hi)
+                       counter_hi=counter_hi, counter_base=counter_base)
     return flat.reshape(x.shape)
 
 

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import philox
-from .field import (MERSENNE_P_INT, fadd, finv, fmul, fsub, fsum, to_field)
+from .field import (MERSENNE_P_INT, fadd, fmul, fsum, to_field)
 
 
 def _eval_points(m: int):
@@ -36,7 +36,8 @@ def _eval_points(m: int):
     return [np.uint32(w + 1) for w in range(m)]
 
 
-def share(v, m: int, key0, key1, degree: int | None = None):
+def share(v, m: int, key0, key1, degree: int | None = None,
+          counter_base: int = 0):
     """Split field-codeword vector ``v`` into ``m`` Shamir shares.
 
     Args:
@@ -44,6 +45,10 @@ def share(v, m: int, key0, key1, degree: int | None = None):
       m: number of shares / evaluation points.
       degree: polynomial degree ``d`` (default ``m - 1``, the paper's
         choice); reconstruction needs any ``d+1`` shares.
+      counter_base: coefficient-stream offset in 4-word blocks — chunked
+        callers sharing elements ``[off, off+L)`` pass ``off//4``
+        (``off % 4 == 0``) so the chunk draws the same coefficient
+        words as the whole-vector call (DESIGN.md §8).
 
     Returns:
       uint32 ``[m, *v.shape]`` of shares, entries in ``[0, p)``.
@@ -53,7 +58,8 @@ def share(v, m: int, key0, key1, degree: int | None = None):
         raise ValueError(f"degree {d} must satisfy 0 <= d < m={m}")
     v = jnp.asarray(v, dtype=jnp.uint32)
     coeffs = [
-        to_field(philox.random_bits_like(v, key0, key1, counter_hi=j + 1))
+        to_field(philox.random_bits_like(v, key0, key1, counter_hi=j + 1,
+                                         counter_base=counter_base))
         for j in range(d)
     ]  # a_1 .. a_d
     shares = []

@@ -15,6 +15,7 @@ import time
 from typing import Callable
 
 from repro.core.aggregation import flatten_pytree
+from repro.core.compression import CompressionConfig
 from .faults import RoundOutcome, apply_faults
 from .simulation import FLSimulation
 
@@ -30,6 +31,31 @@ class FedAvgConfig:
     vote_batch: int = 10
     seed: int = 0
     deadline_s: float | None = None
+    #: top-k sparsification ratio (None/0 = off — the paper-faithful
+    #: dense baseline); per-party error-feedback residuals persist in
+    #: the transport across rounds (DESIGN.md §8)
+    compress_topk: float | None = None
+    error_feedback: bool = True
+    #: element-chunk size of the streaming aggregation pipeline
+    #: (None = whole-vector; bit-identical either way)
+    chunk_elems: int | None = None
+    #: extra aggregation kwargs forwarded verbatim to ``FLSimulation``
+    #: (e.g. fp=, shamir_degree=, kernel_backend=); unknown keys raise
+    #: there with a did-you-mean hint instead of being dropped
+    agg_kwargs: dict | None = None
+
+    def __post_init__(self):
+        if self.compress_topk is not None and \
+                not 0.0 <= self.compress_topk <= 1.0:
+            raise ValueError(
+                f"compress_topk={self.compress_topk} must be in [0, 1]")
+
+    def compression(self) -> CompressionConfig | None:
+        if not self.compress_topk:
+            return None
+        return CompressionConfig(enabled=True,
+                                 top_k_ratio=self.compress_topk,
+                                 error_feedback=self.error_feedback)
 
 
 @dataclasses.dataclass
@@ -54,7 +80,10 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
     """
     sim = FLSimulation(cfg.n_parties, m=cfg.committee, scheme=cfg.scheme,
                        seed=cfg.seed, b=cfg.vote_batch,
-                       latency_s=latency_s)
+                       latency_s=latency_s,
+                       chunk_elems=cfg.chunk_elems,
+                       compression=cfg.compression(),
+                       **(cfg.agg_kwargs or {}))
     params = init_params
     _, unflatten = flatten_pytree(params)
     if cfg.protocol == "two_phase":

@@ -22,7 +22,10 @@ by the Shamir scheme (sub-threshold reconstruction) via
 
 from __future__ import annotations
 
+import difflib
+
 from repro.core.aggregation import SecureAggregator
+from repro.core.compression import CompressionConfig
 from repro.core.costmodel import CostParams
 from repro.core.fixed_point import FixedPointConfig
 
@@ -41,7 +44,27 @@ class FLSimulation:
                  latency_s: dict[int, float] | None = None,
                  fp: FixedPointConfig | None = None,
                  shamir_degree: int | None = None,
-                 chunk: int = 2048, kernel_backend: str | None = None):
+                 chunk: int = 2048, kernel_backend: str | None = None,
+                 chunk_elems: int | None = None,
+                 compression: CompressionConfig | None = None,
+                 **unknown):
+        if unknown:
+            # catch typos (chunk_elms, compresion, ...) loudly instead
+            # of silently dropping an aggregation knob; derive the
+            # known set from the signature so it cannot drift
+            import inspect
+            known = tuple(
+                p for p in inspect.signature(
+                    FLSimulation.__init__).parameters
+                if p not in ("self", "unknown"))
+            hints = []
+            for k in sorted(unknown):
+                close = difflib.get_close_matches(k, known, n=1)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise TypeError(
+                f"FLSimulation got unknown aggregation kwargs: "
+                f"{', '.join(hints)}; known kwargs are {known}")
         if agg is not None:
             # a custom aggregator donates its codec configuration; the
             # committee size still comes from m (it differs per protocol)
@@ -61,7 +84,8 @@ class FLSimulation:
         self.round = 0
         kw = dict(scheme=scheme, seed=seed, net=self.net, fp=fp,
                   shamir_degree=shamir_degree, chunk=chunk,
-                  kernel_backend=kernel_backend)
+                  kernel_backend=kernel_backend, chunk_elems=chunk_elems,
+                  compression=compression)
         self.transports: dict[str, Transport] = {
             "plain": PlainTransport(n, m=m, b=b, **kw),
             "p2p": P2PTransport(n, m=m, b=b, **kw),

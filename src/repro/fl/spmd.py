@@ -29,20 +29,17 @@ are psum'd in a 16/16-bit split-limb representation (exact for up to
 
 from __future__ import annotations
 
-import functools
 import zlib
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.core import philox
-from repro.core.field import MERSENNE_P, mersenne_reduce, mulhilo32
+from repro.core.field import mersenne_reduce, mulhilo32
 from repro.core.fixed_point import FixedPointConfig, DEFAULT_FIELD, DEFAULT_RING
-from repro.kernels.share_gen.ops import share_gen, unpad_flat
-from repro.kernels.share_gen.ref import share_gen_ref
+from repro.kernels.share_gen.ops import share_gen
 from repro.kernels.reconstruct.ops import reconstruct
 from repro.kernels.shamir.ops import shamir_share, shamir_reconstruct
 
@@ -200,9 +197,19 @@ def secure_aggregate_tree(tree, **kw):
         gradient leaves; per-leaf aggregation preserves their TP
         sharding so share-gen/reduce compute stays distributed.
     Counter streams are separated per leaf via a path-derived key tweak.
+
+    ``chunk_elems=``: optional element-chunk cap below the 2^31 default
+    — bounds the live ``[m, chunk]`` share stack per aggregation call
+    the same way the simulation backend's streaming pipeline does
+    (DESIGN.md §8); streams are separated per chunk via the same seed
+    tweak the oversize path always used (NOT the bit-identical
+    counter-offset scheme — inside shard_map the kernel hi_base is
+    already party-keyed, so stream separation is what matters here).
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    max_chunk = 1 << 30   # stay under XLA's 2^31 single-dim limit
+    chunk_elems = kw.pop("chunk_elems", None)
+    # default: stay under XLA's 2^31 single-dim limit
+    max_chunk = int(chunk_elems) if chunk_elems else (1 << 30)
     out = []
     for path, leaf in flat:
         tag = leaf_seed_tag(path)

@@ -39,8 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import committee as committee_mod
-from repro.core.aggregation import SecureAggregator
+from repro.core.aggregation import (DEFAULT_CHUNK_ELEMS, SecureAggregator,
+                                    _check_chunk_elems)
+from repro.core.compression import (CompressionConfig, compress_topk_batch,
+                                    compressed_size)
 from repro.core.fixed_point import FixedPointConfig
+
+__all__ = [
+    "DEFAULT_CHUNK_ELEMS", "Network", "P2PTransport", "PhaseStats",
+    "PlainTransport", "SPMDTransport", "Transport", "TwoPhaseTransport",
+    "make_transport",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -122,13 +131,27 @@ class Transport(abc.ABC):
 
 
 class _SimTransport(Transport):
-    """Shared state for the counting (simulation) transports."""
+    """Shared state for the counting (simulation) transports.
+
+    ``chunk_elems``: element-chunk size of the streaming aggregation
+    pipeline (``SecureAggregator.aggregate_stream``); ``None`` keeps the
+    whole-vector path (bit-identical either way — DESIGN.md §8).
+
+    ``compression``: opt-in top-k sparsification with per-party
+    *persistent* error-feedback state (``self._err_state``, keyed by
+    original party id so residuals survive dropped rounds).  The sparse
+    (values, idx) pair sizes the upload wire messages
+    (``compressed_size``); the share math runs on the densified update
+    so modular aggregation needs no cross-party index alignment.
+    """
 
     def __init__(self, n: int, *, m: int = 3, scheme: str = "additive",
                  seed: int = 0, b: int = 10, net: Network | None = None,
                  fp: FixedPointConfig | None = None,
                  shamir_degree: int | None = None, chunk: int = 2048,
-                 kernel_backend: str | None = None):
+                 kernel_backend: str | None = None,
+                 chunk_elems: int | None = None,
+                 compression: CompressionConfig | None = None):
         self.n = n
         self.m = m
         self.b = b
@@ -138,6 +161,10 @@ class _SimTransport(Transport):
         self.shamir_degree = shamir_degree
         self.chunk = chunk
         self.kernel_backend = kernel_backend
+        self.chunk_elems = (None if chunk_elems is None
+                            else _check_chunk_elems(chunk_elems))
+        self.compression = compression
+        self._err_state: dict[int, np.ndarray] = {}
         self.net = net if net is not None else Network()
 
     @staticmethod
@@ -155,6 +182,56 @@ class _SimTransport(Transport):
             raise ValueError(f"{l} updates but {len(ids)} party ids")
         return ids
 
+    # -- compression (top-k + error feedback) -----------------------------
+
+    def _compress(self, flats, ids):
+        """Sparsify per-party updates; returns (dense flats, wire size).
+
+        The wire size is what one *upload* message costs in elements
+        (``2k``: k values + k index words); partial-sum exchanges and
+        broadcasts stay at the dense size ``s`` because sums of
+        differently-supported sparse vectors live on the union support
+        (see ``costmodel.phase2_msg_size_topk``).
+
+        Mutates ``self._err_state`` (each live party's top-k values are
+        now considered sent) — callers MUST run every raise-able round
+        validation first, or a rejected round would corrupt residuals
+        the same way it must not corrupt the wire counters.
+        """
+        flats = self._as_batch(flats)
+        s = int(flats.shape[1])
+        if self.compression is None or not self.compression.enabled:
+            return flats, s
+        # residuals are kept as host numpy rows: one vectorized gather /
+        # scatter per round instead of l per-row device dispatches (the
+        # party engine is sized for 10k-party rounds)
+        zeros = np.zeros((s,), np.float32)
+        err = np.stack([self._err_state.get(i, zeros) for i in ids])
+        dense, new_err = compress_topk_batch(flats, self.compression, err)
+        new_err = np.asarray(new_err)
+        for row, i in enumerate(ids):
+            self._err_state[i] = new_err[row]
+        return dense, compressed_size(s, self.compression)
+
+    # -- share -> sum -> reconstruct (whole-vector or streaming) ----------
+
+    def _secure_mean(self, agg: SecureAggregator, flats, ids, round_index,
+                     member_rows=None, points=None):
+        """Run the party-side share math through ``agg``; l-party mean."""
+        l = int(flats.shape[0])
+        if self.chunk_elems is not None:
+            return agg.aggregate_stream(
+                flats, seed=self.seed, party_ids=ids,
+                round_index=round_index, chunk_elems=self.chunk_elems,
+                party_chunk=self.chunk, member_rows=member_rows,
+                points=points)
+        member_sums = agg.sum_shares_batch(
+            flats, seed=self.seed, party_ids=ids,
+            round_index=round_index, chunk=self.chunk)
+        if member_rows is not None:
+            member_sums = member_sums[jnp.asarray(member_rows)]
+        return agg.reconstruct_mean(member_sums, l, points=points)
+
 
 class PlainTransport(_SimTransport):
     """Un-encrypted FedAvg exchange (the paper's "withoutMPC" curve)."""
@@ -163,9 +240,12 @@ class PlainTransport(_SimTransport):
 
     def aggregate(self, flats, party_ids=None, *, round_index: int = 0):
         flats = self._as_batch(flats)
-        l, s = int(flats.shape[0]), int(flats.shape[1])
-        # every live party sends its raw update to every other live party
-        self.net.send_batch(l * (l - 1), s, "plain")
+        l = int(flats.shape[0])
+        ids = self._ids(party_ids, l)
+        flats, wire_s = self._compress(flats, ids)
+        # every live party sends its (possibly sparsified) update to
+        # every other live party
+        self.net.send_batch(l * (l - 1), wire_s, "plain")
         return jnp.mean(flats, axis=0)
 
 
@@ -182,16 +262,17 @@ class P2PTransport(_SimTransport):
         flats = self._as_batch(flats)
         l, s = int(flats.shape[0]), int(flats.shape[1])
         ids = self._ids(party_ids, l)
-        self.net.send_batch(l * (l - 1), s, "p2p")   # shares V(i, j)
-        self.net.send_batch(l * (l - 1), s, "p2p")   # partial sums S(i)
         agg = SecureAggregator(scheme=self.scheme, m=l, fp=self.fp,
                                shamir_degree=self.shamir_degree,
                                kernel_backend=self.kernel_backend)
+        # all raise-able validation BEFORE _compress: a rejected round
+        # must not corrupt the error-feedback residuals (or counters)
         agg.fp.validate_for_parties(l)
-        member_sums = agg.sum_shares_batch(
-            flats, seed=self.seed, party_ids=ids,
-            round_index=round_index, chunk=self.chunk)
-        return agg.reconstruct_mean(member_sums, l)
+        flats, wire_s = self._compress(flats, ids)
+        self.net.send_batch(l * (l - 1), wire_s, "p2p")  # shares V(i, j)
+        # partial sums S(i) live on the union support -> dense size s
+        self.net.send_batch(l * (l - 1), s, "p2p")
+        return self._secure_mean(agg, flats, ids, round_index)
 
 
 class TwoPhaseTransport(_SimTransport):
@@ -249,8 +330,9 @@ class TwoPhaseTransport(_SimTransport):
                     if member not in dropped]
         m_live = len(live_pos)
 
-        # validate BEFORE touching the counters: a rejected round must
-        # not corrupt the Eqs. 5-6 cross-check state of the Network
+        # validate BEFORE touching the counters OR the error-feedback
+        # residuals: a rejected round must corrupt neither the Eqs. 5-6
+        # cross-check state of the Network nor the per-party top-k state
         if m_live < self.m:
             if self.scheme != "shamir":
                 raise ValueError(
@@ -264,21 +346,22 @@ class TwoPhaseTransport(_SimTransport):
                     f"only {m_live} committee members alive but Shamir "
                     f"degree {degree} needs {degree + 1} shares")
 
-        # 1) every live party uploads one share to each live member
-        self.net.send_batch(l * m_live, s, "phase2_upload")
-        # 2) members chain-exchange partial sums (m−1, Eq. 5 middle term)
+        flats, wire_s = self._compress(flats, ids)
+        # 1) every live party uploads one (possibly sparsified) share to
+        #    each live member — the only leg top-k shrinks (Eq. 6 topk)
+        self.net.send_batch(l * m_live, wire_s, "phase2_upload")
+        # 2) members chain-exchange partial sums (m−1, Eq. 5 middle
+        #    term); sums over differently-supported sparse updates live
+        #    on the union support -> dense size s
         self.net.send_batch(m_live - 1, s, "phase2_exchange")
-        # 3) committee broadcasts G to every party (n messages)
+        # 3) committee broadcasts the dense aggregate G to every party
         self.net.send_batch(self.n, s, "phase2_broadcast")
 
-        member_sums = self.agg.sum_shares_batch(
-            flats, seed=self.seed, party_ids=ids,
-            round_index=round_index, chunk=self.chunk)       # [m, D]
         if m_live == self.m:
-            return self.agg.reconstruct_mean(member_sums, l)
+            return self._secure_mean(self.agg, flats, ids, round_index)
         points = tuple(w + 1 for w in live_pos)
-        return self.agg.reconstruct_mean(
-            member_sums[jnp.asarray(live_pos)], l, points=points)
+        return self._secure_mean(self.agg, flats, ids, round_index,
+                                 member_rows=live_pos, points=points)
 
 
 class SPMDTransport(Transport):

@@ -94,10 +94,11 @@ def shamir_share_pallas(x, m: int, key0, key1, cfg, degree: int | None = None,
 
 def _shamir_share_batch_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
                                block_rows: int, scale: float, clip: float,
-                               hi_base: int, layout: str):
+                               hi_base: int, layout: str, row_base: int):
     key0 = key_ref[0, 0]
     key1 = key_ref[0, 1]
-    row_base = (pl.program_id(1) * block_rows).astype(jnp.uint32)
+    row_base = (pl.program_id(1) * block_rows
+                + jnp.uint32(row_base)).astype(jnp.uint32)
     v = _encode_field_block(x_ref[0], scale, clip)
 
     def store(w, val):
@@ -110,8 +111,12 @@ def _shamir_share_batch_kernel(key_ref, x_ref, out_ref, *, m: int, d: int,
 def shamir_share_batch_pallas(x, m: int, keys, cfg,
                               degree: int | None = None, hi_base: int = 0,
                               block_rows: int = 64, interpret: bool = False,
-                              layout: str = "flat"):
-    """float32 [l,R,128] + uint32 [l,2] keys -> uint32 [l, m, R, 128]."""
+                              layout: str = "flat", row_base: int = 0):
+    """float32 [l,R,128] + uint32 [l,2] keys -> uint32 [l, m, R, 128].
+
+    ``row_base``: global counter-row offset for element-chunked callers
+    (``elem_off // 128``) — see ``share_gen_batch_pallas``.
+    """
     assert x.ndim == 3 and x.shape[2] == 128, x.shape
     l, rows, _ = x.shape
     assert rows % block_rows == 0
@@ -120,7 +125,7 @@ def shamir_share_batch_pallas(x, m: int, keys, cfg,
     kernel = functools.partial(_shamir_share_batch_kernel, m=m, d=d,
                                block_rows=block_rows, scale=cfg.scale,
                                clip=cfg.clip, hi_base=hi_base,
-                               layout=layout)
+                               layout=layout, row_base=row_base)
     return pl.pallas_call(
         kernel,
         grid=(l, rows // block_rows),

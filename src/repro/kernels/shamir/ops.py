@@ -47,34 +47,40 @@ def shamir_share(flat, m: int, key0, key1, cfg, degree: int | None = None,
 @functools.partial(jax.jit,
                    static_argnames=("m", "cfg", "degree", "hi_base",
                                     "block_rows", "use_ref", "interpret",
-                                    "layout"))
+                                    "layout", "row_base"))
 def _shamir_share_batch_jit(flats, m: int, keys, cfg, degree, hi_base,
-                            block_rows, use_ref, interpret, layout):
+                            block_rows, use_ref, interpret, layout,
+                            row_base):
     x3d, d = pad_to_tiles(flats, block_rows)
     if use_ref:
         return shamir_share_batch_ref(x3d, m, keys, cfg, degree=degree,
-                                      hi_base=hi_base, layout=layout), d
+                                      hi_base=hi_base, layout=layout,
+                                      row_base=row_base), d
     return shamir_share_batch_pallas(x3d, m, keys, cfg, degree=degree,
                                      hi_base=hi_base, block_rows=block_rows,
-                                     interpret=interpret, layout=layout), d
+                                     interpret=interpret, layout=layout,
+                                     row_base=row_base), d
 
 
 def shamir_share_batch(flats, m: int, keys, cfg, degree: int | None = None,
                        hi_base: int = 0, block_rows: int = 8,
                        use_ref: bool = False, interpret: bool | None = None,
                        layout: str = "flat", hot_path: bool = True,
-                       forced: str | None = None):
+                       forced: str | None = None, row_base: int = 0):
     """float32 [l, D] + uint32 [l, 2] keys -> ([l, m, R, 128] shares, D).
 
     ``layout="flat"`` makes slice ``p`` bit-identical to
     ``core.shamir.share(cfg.encode(flats[p]), m, *keys[p], degree)``
-    (modulo tile padding).
+    (modulo tile padding).  ``row_base``: global counter-row offset for
+    element-chunked callers (``elem_off // 128``) — the streaming
+    invariant of DESIGN.md §8.
     """
     dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
                           forced=forced)
     return _shamir_share_batch_jit(flats, m, jnp.asarray(keys, jnp.uint32),
                                    cfg, degree, hi_base, block_rows,
-                                   dec.use_ref, dec.interpret, layout)
+                                   dec.use_ref, dec.interpret, layout,
+                                   row_base)
 
 
 @functools.partial(jax.jit,

@@ -68,13 +68,13 @@ def shamir_share_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
 
 def shamir_share_batch_ref(x, m: int, keys, cfg: FixedPointConfig,
                            degree: int | None = None, hi_base: int = 0,
-                           layout: str = "flat"):
+                           layout: str = "flat", row_base: int = 0):
     """Oracle twin of ``shamir_share_batch_pallas``: vmap over parties."""
     assert x.ndim == 3 and x.shape[2] == 128, x.shape
     return jax.vmap(
         lambda xb, kb: shamir_share_ref(xb, m, kb[0], kb[1], cfg,
                                         degree=degree, hi_base=hi_base,
-                                        layout=layout)
+                                        row_base=row_base, layout=layout)
     )(x, jnp.asarray(keys, jnp.uint32))
 
 

@@ -123,10 +123,11 @@ def share_gen_pallas(x, m: int, key0, key1, cfg: FixedPointConfig,
 
 def _share_gen_batch_kernel(key_ref, x_ref, out_ref, *, m: int,
                             block_rows: int, scale: float, clip: float,
-                            hi_base: int, layout: str):
+                            hi_base: int, layout: str, row_base: int):
     key0 = key_ref[0, 0]
     key1 = key_ref[0, 1]
-    row_base = (pl.program_id(1) * block_rows).astype(jnp.uint32)
+    row_base = (pl.program_id(1) * block_rows
+                + jnp.uint32(row_base)).astype(jnp.uint32)
     u = _encode_ring_block(x_ref[0], scale, clip)
 
     def store(j, v):
@@ -138,12 +139,16 @@ def _share_gen_batch_kernel(key_ref, x_ref, out_ref, *, m: int,
 
 def share_gen_batch_pallas(x, m: int, keys, cfg: FixedPointConfig,
                            hi_base: int = 0, block_rows: int = 64,
-                           interpret: bool = False, layout: str = "flat"):
+                           interpret: bool = False, layout: str = "flat",
+                           row_base: int = 0):
     """All parties' share stacks in one launch.
 
     Args:
       x: float32 ``[l, R, 128]`` — one row-tiled update per party.
       keys: uint32 ``[l, 2]`` — per-party (key0, key1).
+      row_base: global row offset added to every party's Philox counter
+        rows — an element-chunked caller passes ``elem_off // 128`` so
+        chunk masks equal the corresponding whole-vector mask slice.
 
     Returns:
       uint32 ``[l, m, R, 128]``; slice ``p`` equals
@@ -156,7 +161,8 @@ def share_gen_batch_pallas(x, m: int, keys, cfg: FixedPointConfig,
 
     kernel = functools.partial(
         _share_gen_batch_kernel, m=m, block_rows=block_rows,
-        scale=cfg.scale, clip=cfg.clip, hi_base=hi_base, layout=layout)
+        scale=cfg.scale, clip=cfg.clip, hi_base=hi_base, layout=layout,
+        row_base=row_base)
 
     return pl.pallas_call(
         kernel,

@@ -12,7 +12,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.fixed_point import FixedPointConfig
 from repro.kernels import dispatch
@@ -65,18 +64,20 @@ def share_gen(flat, m: int, key0, key1, cfg: FixedPointConfig,
 
 @functools.partial(jax.jit,
                    static_argnames=("m", "cfg", "hi_base", "block_rows",
-                                    "use_ref", "interpret", "layout"))
+                                    "use_ref", "interpret", "layout",
+                                    "row_base"))
 def _share_gen_batch_jit(flats, m: int, keys, cfg: FixedPointConfig,
                          hi_base: int, block_rows: int, use_ref: bool,
-                         interpret: bool, layout: str):
+                         interpret: bool, layout: str, row_base: int):
     x3d, d = pad_to_tiles(flats, block_rows)
     if use_ref:
         shares = share_gen_batch_ref(x3d, m, keys, cfg, hi_base=hi_base,
-                                     layout=layout)
+                                     layout=layout, row_base=row_base)
     else:
         shares = share_gen_batch_pallas(x3d, m, keys, cfg, hi_base=hi_base,
                                         block_rows=block_rows,
-                                        interpret=interpret, layout=layout)
+                                        interpret=interpret, layout=layout,
+                                        row_base=row_base)
     return shares, d
 
 
@@ -84,18 +85,22 @@ def share_gen_batch(flats, m: int, keys, cfg: FixedPointConfig,
                     hi_base: int = 0, block_rows: int = 8,
                     use_ref: bool = False, interpret: bool | None = None,
                     layout: str = "flat", hot_path: bool = True,
-                    forced: str | None = None):
+                    forced: str | None = None, row_base: int = 0):
     """All parties' stacks: float32 [l, D] + keys [l, 2] -> [l, m, R, 128].
 
     The default ``layout="flat"`` makes slice ``p`` bit-identical to
     ``core.additive.share(cfg.encode(flats[p]), m, *keys[p])`` (modulo
     tile padding) — asserted by ``tests/test_kernel_dispatch.py``.
+
+    ``row_base``: global counter-row offset (``elem_off // 128``) for
+    element-chunked callers — chunk masks then equal the whole-vector
+    mask slice bit-for-bit (the streaming invariant, DESIGN.md §8).
     """
     dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
                           forced=forced)
     return _share_gen_batch_jit(flats, m, jnp.asarray(keys, jnp.uint32),
                                 cfg, hi_base, block_rows, dec.use_ref,
-                                dec.interpret, layout)
+                                dec.interpret, layout, row_base)
 
 
 def unpad_flat(tiled, d: int):

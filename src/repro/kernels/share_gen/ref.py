@@ -55,10 +55,12 @@ def share_gen_ref(x, m: int, key0, key1, cfg: FixedPointConfig,
 
 
 def share_gen_batch_ref(x, m: int, keys, cfg: FixedPointConfig,
-                        hi_base: int = 0, layout: str = "flat"):
+                        hi_base: int = 0, layout: str = "flat",
+                        row_base: int = 0):
     """Oracle twin of ``share_gen_batch_pallas``: vmap over parties."""
     assert x.ndim == 3 and x.shape[2] == 128, x.shape
     return jax.vmap(
         lambda xb, kb: share_gen_ref(xb, m, kb[0], kb[1], cfg,
-                                     hi_base=hi_base, layout=layout)
+                                     hi_base=hi_base, row_base=row_base,
+                                     layout=layout)
     )(x, jnp.asarray(keys, jnp.uint32))

@@ -40,11 +40,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     from repro.configs import (SHAPES, get_config, input_specs, skip_reason,
                                decode_kv_len)
     from repro.launch.hlo_analysis import analyze_hlo
-    from repro.launch.mesh import make_production_mesh, party_count_of
+    from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import Roofline, model_flops
     from repro.launch.steps import (make_prefill, make_serve_step,
                                     make_train_step)
-    from repro.optim import adamw_init
 
     overrides = overrides or {}
     cfg = get_config(arch)

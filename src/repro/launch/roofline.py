@@ -29,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -106,7 +105,6 @@ def _while_trip_counts(text: str) -> dict[str, int]:
     cur_comp = None
     comp_consts: dict[str, list[int]] = {}
     for line in text.splitlines():
-        mc = re.match(r"%?([\w\.\-]+)\s+\([^)]*\)\s*->", line.strip())
         if line.strip().startswith("%") and "{" in line and "(" in line \
                 and "->" in line:
             name = line.strip().split()[0].lstrip("%")

@@ -15,8 +15,7 @@ import numpy as np
 
 from repro import compat
 from repro.configs import get_config
-from repro.launch.mesh import party_count_of
-from repro.launch.steps import make_serve_step, place
+from repro.launch.steps import make_serve_step
 from repro.launch.train import make_mesh_for_host
 from repro.models.registry import get_api
 

@@ -23,15 +23,16 @@ from __future__ import annotations
 
 import functools
 import zlib
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import philox
+from repro.core.compression import (CompressionConfig, compress_topk,
+                                    decompress_topk)
 from repro.core.fixed_point import DEFAULT_RING
 from repro.fl.spmd import secure_aggregate, secure_aggregate_tree
 from repro.kernels.reconstruct.ops import reconstruct
@@ -206,6 +207,46 @@ def make_fsdp_transforms(cfg: ArchConfig, mesh, abstract_params, *,
 
 
 # ---------------------------------------------------------------------------
+# top-k gradient compression (per-party error feedback in the opt state)
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params, n_party: int):
+    """Zero-initialized per-party error-feedback residuals.
+
+    One float32 row per party per leaf (leading dim ``n_party``,
+    sharded over the party axes inside the step) — each party's unsent
+    top-k mass accumulates in its own row across steps.
+    """
+    return jax.tree.map(
+        lambda l: jnp.zeros((n_party,) + l.shape, jnp.float32), params)
+
+
+def _compress_tree_topk(grads, ef, ratio: float):
+    """Leaf-wise top-k + error feedback on a party-local gradient tree.
+
+    ``ef`` leaves carry the party-local ``[1, *leaf]`` residual row
+    (shard_map manual over the party axes).  Returns the densified
+    sparse tree (what the secure aggregation shares) and the updated
+    residuals; per-leaf top-k approximates global top-k while keeping
+    the leaf-wise aggregation layout (TP shardings) intact.
+    """
+    ccfg = CompressionConfig(enabled=True, top_k_ratio=ratio,
+                             error_feedback=True)
+
+    def one(g, e):
+        flat = g.reshape(-1).astype(jnp.float32)
+        vals, idx, new_e = compress_topk(flat, ccfg, e.reshape(-1))
+        dense = decompress_topk(vals, idx, flat.shape[0])
+        return dense.reshape(g.shape).astype(g.dtype), new_e.reshape(e.shape)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs]))
+
+
+# ---------------------------------------------------------------------------
 # train_step factory
 # ---------------------------------------------------------------------------
 
@@ -218,7 +259,9 @@ def make_train_step(cfg: ArchConfig, mesh, *,
                     attn_impl: str = "auto",
                     local_steps: int = 1, inner_lr: float = 0.02,
                     gather_dtype=None, tp_axis: str | None = None,
-                    donate: bool = True):
+                    donate: bool = True,
+                    compress_topk: float | None = None,
+                    chunk_elems: int | None = None):
     """Returns (jitted step, abstract_state, shardings dict).
 
     step(params, opt_state, step_idx, batch) -> (params, opt_state, loss)
@@ -229,6 +272,15 @@ def make_train_step(cfg: ArchConfig, mesh, *,
     ``(params − params_local)/inner_lr`` is securely averaged and fed
     to the server AdamW (FedOpt, Reddi et al. 2021) — cutting
     aggregation traffic by t× at identical tokens/step.
+
+    ``compress_topk``: optional top-k sparsification ratio applied to
+    the per-party gradient/pseudo-gradient *before* secure aggregation
+    (replicated layout only); the unsent mass persists per party in
+    ``opt_state["ef"]`` (error feedback, DESIGN.md §8) — initialize it
+    with ``init_error_feedback`` and it rides through checkpoints.
+    ``chunk_elems``: element-chunk cap for the per-leaf secure
+    aggregation (bounds the live ``[m, chunk]`` share stack; see
+    ``fl.spmd.secure_aggregate_tree``).
     """
     api = get_api(cfg)
     opt = opt or AdamWConfig()
@@ -242,6 +294,13 @@ def make_train_step(cfg: ArchConfig, mesh, *,
         raise NotImplementedError("MPC-FSDP not wired for enc-dec archs")
     if fsdp and local_steps > 1:
         raise NotImplementedError("local_steps requires replicated params")
+    if fsdp and compress_topk:
+        raise NotImplementedError(
+            "compress_topk requires replicated params (FSDP aggregates "
+            "inside backward, before compression could apply)")
+    if compress_topk is not None and not 0.0 <= compress_topk <= 1.0:
+        raise ValueError(
+            f"compress_topk={compress_topk} must be in [0, 1]")
 
     abstract_params = jax.eval_shape(
         lambda: api.init(jax.random.PRNGKey(0), cfg))
@@ -267,13 +326,19 @@ def make_train_step(cfg: ArchConfig, mesh, *,
         mode = "p2p" if protocol == "p2p" else agg_mode
         return secure_aggregate_tree(
             tree, scheme=scheme, m=m, party_axes=axes, seed=seed,
-            round_index=step_idx, mode=mode, tp_axis=tp_axis)
+            round_index=step_idx, mode=mode, tp_axis=tp_axis,
+            chunk_elems=chunk_elems)
 
     def step_fn(params, opt_state, step_idx, batch):
+        ef = opt_state.get("ef") if compress_topk else None
+        opt_state = {k: v for k, v in opt_state.items() if k != "ef"}
         with sharding_rules(rules):
             if local_steps <= 1:
                 loss, grads = jax.value_and_grad(local_loss)(params, batch)
                 if not fsdp:
+                    if compress_topk:
+                        grads, ef = _compress_tree_topk(grads, ef,
+                                                        compress_topk)
                     grads = _aggregate(grads, step_idx)
                 # fsdp: grads were securely aggregated inside backward
             else:
@@ -299,21 +364,26 @@ def make_train_step(cfg: ArchConfig, mesh, *,
                     lambda a, b: (a.astype(jnp.float32)
                                   - b.astype(jnp.float32)) / inner_lr,
                     params, p_loc)
+                if compress_topk:
+                    pseudo, ef = _compress_tree_topk(pseudo, ef,
+                                                     compress_topk)
                 grads = _aggregate(pseudo, step_idx)
                 loss = loss_sum / t
             loss = _psum_axes(loss, axes) / n_party
             params, opt_state = adamw_update(grads, opt_state, params,
                                              step_idx, opt)
+        if ef is not None:
+            opt_state = {**opt_state, "ef": ef}
         return params, opt_state, loss
 
     # --- shard_map wiring -------------------------------------------------
     pp = param_pspecs(abstract_params, cfg, mesh, fsdp=fsdp,
                       party_only=True)
     opt_pp = {"m": pp, "v": pp}
-    cell_name = "train"
-    from repro.configs import input_specs as make_input_specs  # noqa
-    bp = None  # resolved by caller per batch dict
-
+    if compress_topk:
+        # per-party residual rows: leading dim sharded over party axes
+        ef_spec = P(tuple(axes))
+        opt_pp["ef"] = jax.tree.map(lambda _: ef_spec, abstract_params)
     def wrap(batch_specs):
         b_pspec = batch_pspecs(batch_specs, mesh)
         smapped = compat.shard_map(
@@ -322,17 +392,25 @@ def make_train_step(cfg: ArchConfig, mesh, *,
             out_specs=(pp, opt_pp, P()),
             axis_names=manual, check_vma=False)
         ps = param_shardings(abstract_params, cfg, mesh, fsdp=fsdp)
-        in_shard = (ps, {"m": ps, "v": ps}, NamedSharding(mesh, P()),
+        opt_shard = {"m": ps, "v": ps}
+        if compress_topk:
+            efs = NamedSharding(mesh, P(tuple(axes)))
+            opt_shard["ef"] = jax.tree.map(lambda _: efs, abstract_params)
+        in_shard = (ps, opt_shard, NamedSharding(mesh, P()),
                     batch_shardings(batch_specs, mesh))
         out_shard = (in_shard[0], in_shard[1], NamedSharding(mesh, P()))
         step = jax.jit(smapped, in_shardings=in_shard,
                        out_shardings=out_shard,
                        donate_argnums=(0, 1) if donate else ())
-        shardings = {"params": ps, "opt": {"m": ps, "v": ps},
+        shardings = {"params": ps, "opt": opt_shard,
                      "batch": in_shard[3]}
         return step, shardings
 
     abstract_opt = jax.eval_shape(lambda: adamw_init(abstract_params))
+    if compress_topk:
+        abstract_opt = dict(abstract_opt)
+        abstract_opt["ef"] = jax.eval_shape(
+            lambda: init_error_feedback(abstract_params, n_party))
     return wrap, abstract_params, abstract_opt
 
 

@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.checkpoint import Checkpointer
@@ -50,6 +49,13 @@ def main():
     ap.add_argument("--agg-mode", default="psum",
                     choices=["psum", "reduce_scatter"])
     ap.add_argument("--committee", type=int, default=3)
+    ap.add_argument("--compress-topk", type=float, default=0.0,
+                    help="top-k gradient sparsification ratio before "
+                         "secure aggregation (0 = off, dense baseline); "
+                         "error-feedback residuals ride in the opt state")
+    ap.add_argument("--chunk-elems", type=int, default=0,
+                    help="element-chunk cap for the per-leaf secure "
+                         "aggregation share stack (0 = whole leaf)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -76,12 +82,19 @@ def main():
     wrap, _, _ = make_train_step(
         cfg, mesh, protocol=args.protocol, scheme=args.scheme,
         m=args.committee, agg_mode=args.agg_mode, seed=args.seed,
-        opt=AdamWConfig(lr=args.lr))
+        opt=AdamWConfig(lr=args.lr),
+        compress_topk=args.compress_topk or None,
+        chunk_elems=args.chunk_elems or None)
     step_fn, shardings = wrap(batch_specs)
 
     params = place(api.init(jax.random.PRNGKey(args.seed), cfg),
                    shardings["params"])
-    opt_state = place(adamw_init(params), shardings["opt"])
+    opt_state = adamw_init(params)
+    if args.compress_topk:
+        from repro.launch.steps import init_error_feedback
+        opt_state = dict(opt_state)
+        opt_state["ef"] = init_error_feedback(params, n_party)
+    opt_state = place(opt_state, shardings["opt"])
     start = 0
 
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None

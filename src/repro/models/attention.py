@@ -17,14 +17,13 @@ an optional sequence-sharded variant the serving layer combines via
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention, attention_ref
-from .common import ArchConfig, shard
+from .common import ArchConfig
 
 NEG_INF = -1e30
 

@@ -17,12 +17,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .attention import attention
 from .common import ArchConfig, dtype_of, shard
 from .layers import (apply_norm, chunked_softmax_xent, embed, embedding_init,
-                     layernorm, layernorm_init, mlp_apply, mlp_init,
+                     mlp_apply, mlp_init,
                      norm_init, sinusoidal_positions)
 from .transformer import attn_init, attn_apply, _decode_attn_block
 
@@ -173,7 +172,6 @@ def decode_step(params, cache, batch, cfg: ArchConfig):
     """batch: tokens [B,1], index scalar.  Returns (logits, cache)."""
     cd = dtype_of(cfg, "compute_dtype")
     index = batch["index"].astype(jnp.int32)
-    b = batch["tokens"].shape[0]
     x = embed(params["embed"], batch["tokens"][:, 0], cd)
     x = x + params["dec_pos"][index].astype(cd)[None]
 

@@ -21,7 +21,6 @@ so 500k-context decode on SSM/hybrid architectures is memory-flat.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

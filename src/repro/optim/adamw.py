@@ -8,7 +8,6 @@ fp32 moments regardless of param dtype (mixed-precision master math).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

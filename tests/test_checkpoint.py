@@ -1,6 +1,5 @@
 """Checkpoint/restart fault-tolerance contract."""
 
-import json
 import os
 
 import numpy as np

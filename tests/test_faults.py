@@ -1,6 +1,5 @@
 """Fault-model semantics: per-round RNG derivation + committee quorum."""
 
-import numpy as np
 import pytest
 
 from repro.fl.faults import apply_faults, quorum_met, round_rng

@@ -11,7 +11,6 @@ from repro.data import dirichlet_partition, fault_detection_party, \
     train_test_split
 from repro.fl import FedAvgConfig, run_fedavg
 from repro.models import simple_nn
-from repro.optim import SGDConfig, sgd_init, sgd_update
 
 
 def _party_data(n_parties, n=400, seed=0):

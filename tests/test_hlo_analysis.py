@@ -1,9 +1,7 @@
 """Roofline measurement infrastructure: trip-count-aware HLO analysis."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo
 

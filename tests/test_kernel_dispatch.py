@@ -17,7 +17,6 @@ Any skip in this module must carry a ``capability:`` reason — the CI
 kernels job fails on any other skip.
 """
 
-import os
 
 import numpy as np
 import jax
@@ -30,7 +29,7 @@ from repro.core.aggregation import SecureAggregator
 from repro.core.fixed_point import DEFAULT_FIELD, DEFAULT_RING
 from repro.kernels import dispatch
 from repro.kernels.share_gen import (share_gen, share_gen_batch,
-                                     pad_to_tiles, unpad_flat)
+                                     unpad_flat)
 from repro.kernels.reconstruct import reconstruct
 from repro.kernels.shamir import shamir_share, shamir_share_batch
 

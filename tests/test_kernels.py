@@ -1,7 +1,6 @@
 """Pallas kernel sweeps: shapes × params, interpret=True vs ref.py oracles."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -112,7 +112,6 @@ def test_sliding_window_cache_ring_buffer():
 
 def test_moe_capacity_drop_and_weights():
     from repro.models import moe
-    from repro.models.common import ArchConfig
     cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
     p = moe.moe_init(KEY, cfg, jnp.float32)
     x = jax.random.normal(KEY, (2, 16, cfg.d_model))

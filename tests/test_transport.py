@@ -13,8 +13,7 @@ from repro.core import costmodel
 from repro.core.aggregation import SecureAggregator
 from repro.core.costmodel import CostParams
 from repro.core.fixed_point import FixedPointConfig
-from repro.fl import (FLSimulation, Network, P2PTransport, PlainTransport,
-                      SPMDTransport, TwoPhaseTransport, make_transport)
+from repro.fl import (FLSimulation, Network, SPMDTransport, make_transport)
 
 
 def _flats(n, s, seed=0):

@@ -8,6 +8,12 @@ two orders of magnitude more parties than the seed (n = 10,000 instead
 of tens), and ``write_bench_json`` records the measured wall-clock of a
 full vectorized two-phase round at that scale into
 ``BENCH_msgcost.json`` so future PRs have a perf trajectory.
+
+``wire_round`` additionally runs a *real* multi-process round (TCP
+coordinator + party worker processes, DESIGN.md §9) and asserts the
+measured wire elements equal Eqs. 3–6 exactly — theory, simulation,
+and actual sockets are cross-checked against each other on every
+bench-regression CI run.
 """
 
 from __future__ import annotations
@@ -153,6 +159,61 @@ def vectorized_round(n: int = 10_000, s: int = 10_000, m: int = 3,
     }
 
 
+def wire_round(n: int = 4, s: int = SIMPLE_S, m: int = 3, e: int = 1,
+               seed: int = 1) -> dict:
+    """One real multi-process two-phase round over TCP (DESIGN.md §9).
+
+    Spawns ``n`` party worker processes, runs Phase I + ``e`` Phase II
+    rounds over localhost sockets, and asserts the *measured* wire
+    elements equal Eqs. 3–6 exactly — the bench-regression gate
+    re-measures this on every CI run, so the wire accounting can never
+    silently drift from the paper's closed forms.  Raw socket bytes
+    (frame headers + hub transit) are recorded alongside for the
+    bytes-vs-equations reconciliation table.
+    """
+    from repro.fl import make_transport
+    rng = np.random.RandomState(0)
+    flats = jnp.asarray(rng.randn(n, s).astype(np.float32))
+    t0 = time.perf_counter()
+    tr = make_transport("two_phase", n, backend="wire", m=m, seed=seed)
+    try:
+        spawn_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tr.elect()
+        elect_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for r in range(e):
+            tr.aggregate(flats, round_index=r)
+        rounds_s = time.perf_counter() - t0
+        p = CostParams(n=n, e=e, s=s, m=m, b=tr.b)
+        st1 = tr.net.stats("phase1")
+        p2_num = sum(tr.net.stats(ph).msg_num for ph in
+                     ("phase2_upload", "phase2_exchange",
+                      "phase2_broadcast"))
+        p2_size = sum(tr.net.stats(ph).msg_size for ph in
+                      ("phase2_upload", "phase2_exchange",
+                       "phase2_broadcast"))
+        assert st1.msg_num == costmodel.phase1_msg_num(p), (st1, p)
+        assert st1.msg_size == costmodel.phase1_msg_size(p), (st1, p)
+        assert p2_num == costmodel.phase2_msg_num(p), (p2_num, p)
+        assert p2_size == costmodel.phase2_msg_size(p), (p2_size, p)
+        return {
+            "n": n, "s": s, "m": m, "e": e, "scheme": "additive",
+            "spawn_wall_s": round(spawn_s, 3),
+            "phase1_wall_s": round(elect_s, 3),
+            "phase2_wall_s": round(rounds_s, 3),
+            "phase1_msg_num": st1.msg_num,
+            "phase1_msg_size": st1.msg_size,
+            "phase2_msg_num": p2_num,
+            "phase2_msg_size": p2_size,
+            "raw_socket_bytes_in": tr.coordinator.raw_bytes_in,
+            "raw_socket_bytes_out": tr.coordinator.raw_bytes_out,
+            "wire_matches_eqs_3_6": True,
+        }
+    finally:
+        tr.close()
+
+
 def write_bench_json(path: str = "BENCH_msgcost.json",
                      n_values=(4, 16, 64, 256, 1024, 4096, 10_000),
                      e: int = 15, s: int = SIMPLE_S,
@@ -185,6 +246,9 @@ def write_bench_json(path: str = "BENCH_msgcost.json",
     }
     if include_round:
         out["vectorized_two_phase_round"] = vectorized_round()
+        # real multi-process TCP round: measured wire elements asserted
+        # equal to Eqs. 3-6 on every regeneration (DESIGN.md §9)
+        out["wire_two_phase_round"] = wire_round()
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

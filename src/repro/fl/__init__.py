@@ -1,4 +1,4 @@
-from .faults import RoundOutcome, apply_faults, quorum_met
+from .faults import RoundOutcome, apply_faults, quorum_met, resolve_outcome
 from .rounds import FedAvgConfig, FedAvgResult, run_fedavg
 from .simulation import FLSimulation
 from .transport import (Network, P2PTransport, PhaseStats, PlainTransport,
@@ -7,5 +7,6 @@ from .transport import (Network, P2PTransport, PhaseStats, PlainTransport,
 
 __all__ = ["FLSimulation", "Network", "PhaseStats", "FedAvgConfig",
            "FedAvgResult", "run_fedavg", "RoundOutcome", "apply_faults",
-           "quorum_met", "Transport", "P2PTransport", "TwoPhaseTransport",
-           "PlainTransport", "SPMDTransport", "make_transport"]
+           "quorum_met", "resolve_outcome", "Transport", "P2PTransport",
+           "TwoPhaseTransport", "PlainTransport", "SPMDTransport",
+           "make_transport"]

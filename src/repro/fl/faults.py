@@ -19,6 +19,12 @@ pattern — seeding a fresh RNG with the bare seed would replay the
 identical fault pattern every round, which systematically biases the
 paper's dropout experiments (the same parties die every time).
 
+Two fault *sources* share one outcome brain: ``apply_faults`` draws a
+simulated crash/straggler pattern, the wire coordinator
+(``repro.net.coordinator``) observes real ones (TCP EOF, stage-deadline
+expiry) — both feed ``resolve_outcome``, which applies the committee
+quorum and liveness floor identically.
+
 Quorum floor: a round never proceeds without enough live committee
 members to reconstruct — ``degree + 1`` for Shamir, all ``m`` for the
 additive scheme.  Members below the threshold are resurrected (fastest
@@ -70,12 +76,43 @@ def apply_faults(members: set, latency_s: dict[int, float],
     if deadline_s is not None:
         straggled = {i for i in members - dropped
                      if latency_s.get(i, 0.0) > deadline_s}
+    return resolve_outcome(members, dropped, straggled,
+                           latency_s=latency_s, committee=committee,
+                           reconstruct_threshold=reconstruct_threshold)
+
+
+def resolve_outcome(members: set, dropped: set, straggled: set, *,
+                    latency_s: dict[int, float] | None = None,
+                    committee: Sequence[int] | None = None,
+                    reconstruct_threshold: int | None = None,
+                    resurrect: bool = True) -> RoundOutcome:
+    """Fold *observed* fault sets into a quorum-checked ``RoundOutcome``.
+
+    The shared tail of the fault model: ``apply_faults`` feeds it the
+    crash/straggler pattern it *simulated*; the wire coordinator
+    (``repro.net.coordinator``) feeds it the dropouts (TCP EOF) and
+    stragglers (stage-deadline expiry) it *measured* — both go through
+    the identical committee-quorum and liveness-floor logic, so a real
+    multi-process round reports the same ``RoundOutcome`` the
+    simulation would for the same fault pattern.
+
+    Args:
+      resurrect: whether faulted committee members may be resurrected
+        to reach the reconstruction threshold.  The simulation models a
+        committee that blocks until its quorum re-appears
+        (``resurrect=True``); on a real wire a dead TCP peer cannot be
+        revived, so the coordinator passes ``False`` and a
+        sub-threshold committee raises instead.
+    """
+    latency_s = latency_s or {}
+    dropped = set(dropped) & set(members)
+    straggled = set(straggled) & set(members) - dropped
     alive = set(members) - dropped - straggled
 
     if committee is not None and reconstruct_threshold is not None:
         alive, dropped, straggled = _enforce_committee_quorum(
             alive, dropped, straggled, members, latency_s,
-            committee, reconstruct_threshold)
+            committee, reconstruct_threshold, resurrect=resurrect)
 
     if not alive:
         # quorum floor: never lose the round entirely; keep fastest party
@@ -88,7 +125,7 @@ def apply_faults(members: set, latency_s: dict[int, float],
 
 def _enforce_committee_quorum(alive, dropped, straggled, members,
                               latency_s, committee: Iterable[int],
-                              threshold: int):
+                              threshold: int, resurrect: bool = True):
     """Resurrect faulted committee members until reconstruction works."""
     com_members = [w for w in committee if w in members]
     if len(com_members) < threshold:
@@ -99,6 +136,11 @@ def _enforce_committee_quorum(alive, dropped, straggled, members,
     live_com = [w for w in com_members if w in alive]
     if len(live_com) >= threshold:
         return alive, dropped, straggled
+    if not resurrect:
+        raise ValueError(
+            f"only {len(live_com)} committee members alive but "
+            f"reconstruction needs {threshold} shares, and faulted "
+            f"members cannot be resurrected on this transport")
     candidates = sorted((w for w in com_members if w not in alive),
                         key=lambda i: latency_s.get(i, 0.0))
     for w in candidates:

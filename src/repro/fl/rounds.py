@@ -84,6 +84,19 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
                        chunk_elems=cfg.chunk_elems,
                        compression=cfg.compression(),
                        **(cfg.agg_kwargs or {}))
+    try:
+        return _run_fedavg(cfg, sim, init_params, local_train_step,
+                           party_batches, eval_fn, latency_s,
+                           membership_schedule)
+    finally:
+        # the wire backend owns party worker processes + a server
+        # thread; a sim-backend close is a no-op
+        sim.close()
+
+
+def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
+                local_train_step, party_batches, eval_fn, latency_s,
+                membership_schedule):
     params = init_params
     _, unflatten = flatten_pytree(params)
     if cfg.protocol == "two_phase":

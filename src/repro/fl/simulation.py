@@ -36,7 +36,15 @@ __all__ = ["FLSimulation", "Network", "PhaseStats"]
 
 
 class FLSimulation:
-    """n-party simulation driving the transports over one Network."""
+    """n-party simulation driving the transports over one Network.
+
+    ``backend="wire"`` swaps the two-phase transport for the real
+    multi-process TCP deployment (``repro.net.WireTransport``) — same
+    driver code, same counters, bit-identical means (DESIGN.md §9);
+    use as a context manager (or call ``close()``) so the party worker
+    processes are reaped.  ``wire_kwargs`` forwards extra
+    ``WireTransport`` options (``log_dir=``, ``deadline_s=``, ...).
+    """
 
     def __init__(self, n: int, m: int = 3, scheme: str = "additive",
                  seed: int = 0, b: int = 10,
@@ -47,6 +55,8 @@ class FLSimulation:
                  chunk: int = 2048, kernel_backend: str | None = None,
                  chunk_elems: int | None = None,
                  compression: CompressionConfig | None = None,
+                 backend: str = "sim",
+                 wire_kwargs: dict | None = None,
                  **unknown):
         if unknown:
             # catch typos (chunk_elms, compresion, ...) loudly instead
@@ -74,12 +84,16 @@ class FLSimulation:
                 shamir_degree = agg.shamir_degree
             if kernel_backend is None:
                 kernel_backend = agg.kernel_backend
+        if backend not in ("sim", "wire"):
+            raise ValueError(f"unknown backend {backend!r}; expected "
+                             "'sim' or 'wire'")
         self.n = n
         self.m = m
         self.b = b
         self.seed = seed
         self.scheme = scheme
         self.fp = fp
+        self.backend = backend
         self.net = Network(latency_s)
         self.round = 0
         kw = dict(scheme=scheme, seed=seed, net=self.net, fp=fp,
@@ -91,6 +105,18 @@ class FLSimulation:
             "p2p": P2PTransport(n, m=m, b=b, **kw),
             "two_phase": TwoPhaseTransport(n, m=m, b=b, **kw),
         }
+        if backend == "wire":
+            # real multi-process deployment for the paper's protocol;
+            # the baselines stay in-sim (the wire only speaks two_phase)
+            if compression is not None:
+                raise ValueError(
+                    "top-k compression is not implemented on the wire "
+                    "backend yet; drop compression= or use backend='sim'")
+            from repro.net import WireTransport
+            self.transports["two_phase"] = WireTransport(
+                n, m=m, b=b, scheme=scheme, seed=seed, net=self.net,
+                fp=fp, shamir_degree=shamir_degree,
+                chunk_elems=chunk_elems, **(wire_kwargs or {}))
 
     @property
     def committee(self):
@@ -134,11 +160,31 @@ class FLSimulation:
                             committee_dropout=()):
         """Alg. 3: share upload -> committee chain-sum -> broadcast."""
         live = sorted(alive) if alive is not None else list(range(self.n))
+        # committee_dropout is a *simulated* fault injection; on the
+        # wire backend members drop by actually dying, so the kwarg is
+        # only forwarded when used (sim transports) or non-empty (loud
+        # TypeError on the wire instead of silently ignoring the fault)
+        kw = ({"committee_dropout": committee_dropout}
+              if committee_dropout else {})
         mean = self.transports["two_phase"].aggregate(
             [flats[i] for i in live], party_ids=live,
-            round_index=self.round, committee_dropout=committee_dropout)
+            round_index=self.round, **kw)
         self.round += 1
         return mean, self.net.stats()
+
+    # -- lifecycle (the wire backend owns real OS resources) ---------------
+
+    def close(self) -> None:
+        for tr in self.transports.values():
+            closer = getattr(tr, "close", None)
+            if closer is not None:
+                closer()
+
+    def __enter__(self) -> "FLSimulation":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- paper-equation cross-check -----------------------------------------
 

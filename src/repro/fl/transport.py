@@ -18,6 +18,10 @@ Implementations:
 * ``SPMDTransport``   — adapter mapping the same protocol steps onto the
   mesh-collective modes of ``fl.spmd`` (``psum`` / ``reduce_scatter`` /
   ``p2p`` / ``plain``); see DESIGN.md §2.2 for the wire-fidelity mapping.
+* ``repro.net.WireTransport`` (``backend="wire"``) — the *real* thing:
+  an asyncio TCP coordinator plus one party worker process per party,
+  bit-identical to ``TwoPhaseTransport`` under the same seeds and
+  counted into the same ``Network`` phases (DESIGN.md §9).
 
 Wire accounting is *batched*: instead of one Python ``net.send`` call
 per message (O(n²) interpreter work), transports call
@@ -62,10 +66,29 @@ class PhaseStats:
     msg_size: int = 0          # in elements, paper convention
 
     def add(self, size: int):
+        """Count one message of ``size`` elements (must be positive —
+        a zero/negative message size is always an accounting bug and
+        would silently skew the Eqs. 1-8 cross-checks)."""
+        if size <= 0:
+            raise ValueError(
+                f"message size must be positive, got {size}")
         self.msg_num += 1
         self.msg_size += size
 
     def add_batch(self, count: int, size: int):
+        """Count ``count`` messages of ``size`` elements each.
+
+        Bit-identical to ``count`` successive ``add`` calls, including
+        the validation: ``count`` may be zero (an empty batch, e.g. the
+        m−1 exchange term with one live member) but never negative, and
+        ``size`` must be positive like every individual message.
+        """
+        if count < 0:
+            raise ValueError(
+                f"message count must be non-negative, got {count}")
+        if size <= 0:
+            raise ValueError(
+                f"message size must be positive, got {size}")
         self.msg_num += count
         self.msg_size += count * size
 
@@ -455,9 +478,23 @@ SIM_TRANSPORTS = {
 
 def make_transport(protocol: str, n: int, *, backend: str = "sim",
                    **kw) -> Transport:
-    """Factory: a counting simulation transport or the SPMD adapter."""
+    """Factory: counting simulation, SPMD adapter, or the real wire.
+
+    ``backend="wire"`` returns a ``repro.net.WireTransport``: an
+    asyncio TCP coordinator plus one party worker *process* per party,
+    running Phase I/II over actual sockets with the same counters and
+    bit-identical results (DESIGN.md §9).  Only ``two_phase`` runs on
+    the wire — the P2P baseline exists to be beaten, not deployed.
+    """
     if backend == "spmd":
         return SPMDTransport(protocol, n=n, **kw)
+    if backend == "wire":
+        if protocol != "two_phase":
+            raise ValueError(
+                f"the wire backend only deploys the two_phase protocol, "
+                f"not {protocol!r}")
+        from repro.net import WireTransport
+        return WireTransport(n, **kw)
     if backend != "sim":
         raise ValueError(f"unknown backend {backend!r}")
     if protocol not in SIM_TRANSPORTS:

@@ -1,0 +1,27 @@
+"""Real multi-process wire transport for the two-phase MPC protocol.
+
+The first end-to-end path where the paper's protocol runs as separate
+OS processes over TCP: length-prefixed versioned frames (``wire``),
+array/pytree codecs (``codec``), chunk reassembly + Eqs. 1-8 wire
+accounting (``messages``), injectable-clock dropout detection
+(``timeouts``), the asyncio coordinator and party workers
+(``coordinator`` / ``party``), and the ``Transport``-conforming facade
+(``transport.WireTransport``).  See DESIGN.md §9.
+"""
+
+from .config import WireConfig
+from .messages import MessageAssembler, MessageMeter
+from .timeouts import ManualClock, StageMonitor, SystemClock
+from .transport import WireTransport
+from .wire import (BadMagicError, Frame, FrameReader, MsgType,
+                   OversizedFrameError, PartyFailedError, Phase,
+                   ProtocolError, Scheme, TruncatedFrameError,
+                   VersionError, WireError, WireTimeoutError, Wiredtype)
+
+__all__ = [
+    "BadMagicError", "Frame", "FrameReader", "ManualClock",
+    "MessageAssembler", "MessageMeter", "MsgType", "OversizedFrameError",
+    "PartyFailedError", "Phase", "ProtocolError", "Scheme", "StageMonitor",
+    "SystemClock", "TruncatedFrameError", "VersionError", "WireConfig",
+    "WireError", "WireTimeoutError", "WireTransport", "Wiredtype",
+]

@@ -1,0 +1,99 @@
+"""Federation config shared by coordinator and party workers.
+
+The coordinator owns the configuration; party workers receive it in
+the WELCOME frame (JSON payload), so a worker needs nothing on its
+command line beyond ``--host/--port/--party-id``.  Everything that
+affects the share math (scheme, fixed-point codec, Shamir degree,
+chunking) travels here — both sides must construct bit-identical
+``SecureAggregator`` objects or the protocol's cross-checks fail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.aggregation import (DEFAULT_CHUNK_ELEMS, SecureAggregator,
+                                    _check_chunk_elems)
+from repro.core.fixed_point import FixedPointConfig
+
+from .wire import MAX_PAYLOAD_BYTES, ProtocolError
+
+__all__ = ["WireConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireConfig:
+    """Everything a party needs to run the protocol bit-identically."""
+
+    n: int
+    m: int = 3
+    b: int = 10
+    seed: int = 0
+    scheme: str = "additive"
+    shamir_degree: int | None = None
+    frac_bits: int = 16
+    clip: float = 64.0
+    algebra: str = "ring"
+    #: element-chunk size for streamed share/input/broadcast messages —
+    #: same alignment contract as the streaming aggregation pipeline
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS
+    #: per-stage straggler deadline (None disables; EOF dropout
+    #: detection is always on)
+    deadline_s: float | None = 30.0
+
+    def __post_init__(self):
+        _check_chunk_elems(self.chunk_elems)
+        if self.chunk_elems * 4 > MAX_PAYLOAD_BYTES:
+            raise ValueError(
+                f"chunk_elems={self.chunk_elems} exceeds the "
+                f"{MAX_PAYLOAD_BYTES}-byte frame payload bound")
+
+    def fp(self) -> FixedPointConfig:
+        return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
+                                algebra=self.algebra)
+
+    def aggregator(self) -> SecureAggregator:
+        return SecureAggregator(scheme=self.scheme, m=self.m,
+                                fp=self.fp(),
+                                shamir_degree=self.shamir_degree)
+
+    def reconstruct_threshold(self) -> int:
+        """Live committee members a round needs to reconstruct."""
+        if self.scheme == "shamir":
+            degree = (self.shamir_degree if self.shamir_degree is not None
+                      else self.m - 1)
+            return degree + 1
+        return self.m
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "WireConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(obj) - fields
+        if unknown:
+            raise ProtocolError(
+                f"WELCOME config carries unknown fields {sorted(unknown)}")
+        return cls(**obj)
+
+    @classmethod
+    def from_aggregation_kwargs(cls, n: int, *, m: int = 3, b: int = 10,
+                                seed: int = 0, scheme: str = "additive",
+                                fp: FixedPointConfig | None = None,
+                                shamir_degree: int | None = None,
+                                chunk_elems: int | None = None,
+                                deadline_s: float | None = 30.0
+                                ) -> "WireConfig":
+        """Build from the simulation transports' kwarg vocabulary."""
+        if fp is None:
+            # resolve the scheme's default codec exactly as the
+            # aggregator would, so both sides agree on the algebra
+            fp = SecureAggregator(scheme=scheme, m=m,
+                                  shamir_degree=shamir_degree).fp
+        return cls(n=n, m=m, b=b, seed=seed, scheme=scheme,
+                   shamir_degree=shamir_degree, frac_bits=fp.frac_bits,
+                   clip=fp.clip, algebra=fp.algebra,
+                   chunk_elems=(DEFAULT_CHUNK_ELEMS if chunk_elems is None
+                                else chunk_elems),
+                   deadline_s=deadline_s)

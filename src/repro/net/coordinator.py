@@ -1,0 +1,531 @@
+"""Asyncio TCP coordinator: Algs. 2 + 3 over real sockets.
+
+The coordinator is the *physical* hub of the deployment — parties keep
+one TCP connection each — while the *logical* protocol stays the
+paper's: vote shares and partial sums travel party→party (relayed,
+``src``/``dst`` in the frame header), model shares travel
+party→committee member, the committee chains partial sums, and the
+aggregate is broadcast back.  A :class:`~repro.net.messages.MessageMeter`
+observes every relayed logical message and counts it into the shared
+``fl.transport.Network`` under the paper's phase names, so the measured
+wire traffic is cross-checked against Eqs. 1–8 with the *same*
+assertions the counting simulation uses.  Hub artifacts that the paper
+does not count (driver→party input shipping, final-member→coordinator
+result return, JSON control frames) are deliberately outside those
+counters (``wire_input`` / ``wire_result`` / uncounted).
+
+Fault handling: a party's EOF is a deterministic dropout; a connected
+party that misses a stage deadline (injectable clock,
+``timeouts.StageMonitor``) is a straggler.  Observed fault sets feed
+``fl.faults.resolve_outcome`` — the same quorum/committee logic the
+simulation uses — and the round proceeds over survivors (Shamir
+sub-threshold reconstruction) or aborts exactly where the simulation
+would raise.
+
+Ordering invariant (load-bearing): a relayed frame is written to its
+destination *before* it is metered, and stage decisions (COMMIT, chain
+kickoff) are only made from metered state and written afterwards on the
+same per-party sockets — TCP ordering then guarantees a member has
+every relayed share of an included party before its COMMIT arrives.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextlib
+
+import numpy as np
+
+from repro.core import committee as committee_mod
+from repro.fl.faults import resolve_outcome
+from repro.fl.transport import Network
+
+from . import codec
+from .config import WireConfig
+from .messages import MessageAssembler, MessageMeter
+from .timeouts import StageMonitor, SystemClock
+from .wire import (Frame, MsgType, PartyFailedError, Phase, ProtocolError,
+                   Scheme, WireError, WireTimeoutError, Wiredtype,
+                   read_frame, write_frame)
+
+__all__ = ["Coordinator"]
+
+#: poll granularity of deadline checks (real-clock runs); manual-clock
+#: state-machine tests never sleep — they drive StageMonitor directly
+_POLL_S = 0.05
+
+
+class _Conn:
+    """One connected party."""
+
+    def __init__(self, pid: int, reader, writer):
+        self.pid = pid
+        self.reader = reader
+        self.writer = writer
+        self.lock = asyncio.Lock()
+        self.alive = True
+        self.task: asyncio.Task | None = None
+
+
+class Coordinator:
+    """TCP server orchestrating two-phase MPC rounds over ``n`` parties."""
+
+    def __init__(self, cfg: WireConfig, *, net: Network | None = None,
+                 clock=None, log=None):
+        self.cfg = cfg
+        self.net = net if net is not None else Network()
+        self.clock = clock if clock is not None else SystemClock()
+        self.log = log or (lambda msg: None)
+        self.committee: tuple[int, ...] | None = None
+        self.election_rounds: int | None = None
+        self.raw_bytes_in = 0
+        self.raw_bytes_out = 0
+        self._server: asyncio.Server | None = None
+        self._conns: dict[int, _Conn] = {}
+        self._event = asyncio.Event()
+        self._meter: MessageMeter | None = None
+        self._result: MessageAssembler | None = None
+        self._result_mean: np.ndarray | None = None
+        self._committee_reports: dict[int, list | None] = {}
+        self._ready: set[int] = set()
+        self._upload_done: dict[int, int] = {}
+        self._party_error: str | None = None
+        self._round_dropped: set[int] = set()
+        self._monitors: list[StageMonitor] = []
+        self._upload_mon: StageMonitor | None = None
+
+    # -- lifecycle --------------------------------------------------------
+
+    @property
+    def port(self) -> int:
+        assert self._server is not None, "coordinator not started"
+        return self._server.sockets[0].getsockname()[1]
+
+    async def start(self, host: str = "127.0.0.1", port: int = 0) -> int:
+        self._server = await asyncio.start_server(self._accept, host, port)
+        self.log(f"coordinator listening on {host}:{self.port}")
+        return self.port
+
+    async def stop(self) -> None:
+        for conn in list(self._conns.values()):
+            if conn.alive:
+                with contextlib.suppress(Exception):
+                    await self._send(conn.pid, Frame(MsgType.SHUTDOWN))
+        for conn in list(self._conns.values()):
+            if conn.task is not None:
+                conn.task.cancel()
+                with contextlib.suppress(asyncio.CancelledError, Exception):
+                    await conn.task
+            with contextlib.suppress(Exception):
+                conn.writer.close()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def wait_for_parties(self, timeout_s: float = 60.0) -> None:
+        """Block until all ``n`` parties have completed HELLO/WELCOME."""
+        def ready():
+            return len(self._conns) >= self.cfg.n
+        await self._wait(ready, timeout_s,
+                         what=f"{self.cfg.n}-party registration")
+
+    # -- connection handling ---------------------------------------------
+
+    async def _accept(self, reader, writer):
+        try:
+            hello = await read_frame(reader)
+        except WireError as e:
+            self.log(f"handshake failed: {e}")
+            writer.close()
+            return
+        if hello is None or hello.msg_type != MsgType.HELLO:
+            self.log("connection without HELLO; dropping")
+            writer.close()
+            return
+        pid = hello.src
+        if not 0 <= pid < self.cfg.n or pid in self._conns:
+            self.log(f"rejecting HELLO from invalid/duplicate party {pid}")
+            writer.close()
+            return
+        conn = _Conn(pid, reader, writer)
+        self._conns[pid] = conn
+        await write_frame(writer, Frame(
+            MsgType.WELCOME, dst=pid,
+            payload=codec.encode_json(self.cfg.to_json())), conn.lock)
+        conn.task = asyncio.ensure_future(self._serve(conn))
+        self.log(f"party {pid} registered "
+                 f"({len(self._conns)}/{self.cfg.n})")
+        self._pulse()
+
+    async def _serve(self, conn: _Conn) -> None:
+        """Per-party read loop: relay, meter, surface control frames."""
+        try:
+            while True:
+                frame = await read_frame(conn.reader)
+                if frame is None:
+                    break
+                self.raw_bytes_in += 4 + 28 + len(frame.payload)
+                await self._on_frame(conn, frame)
+        except (WireError, ConnectionError, asyncio.IncompleteReadError,
+                OSError) as e:
+            self.log(f"party {conn.pid} stream error: {e!r}")
+        finally:
+            self._mark_dead(conn.pid)
+
+    def _mark_dead(self, pid: int) -> None:
+        conn = self._conns.get(pid)
+        if conn is not None and conn.alive:
+            conn.alive = False
+            self._round_dropped.add(pid)
+            for mon in self._monitors:
+                mon.eof(pid)
+            self.log(f"party {pid} disconnected (EOF)")
+            self._pulse()
+
+    async def _on_frame(self, conn: _Conn, frame: Frame) -> None:
+        if frame.src != conn.pid:
+            raise ProtocolError(
+                f"party {conn.pid} spoofed src={frame.src}")
+        if frame.dst >= 0:
+            # party->party data: relay FIRST, then meter — the ordering
+            # invariant every COMMIT/chain decision depends on
+            if frame.dst >= self.cfg.n:
+                raise ProtocolError(
+                    f"relay to out-of-range party {frame.dst}")
+            await self._relay(frame)
+            if self._meter is None:
+                raise ProtocolError(
+                    f"{frame.type_name()} data frame outside any round")
+            if self._meter.feed(frame):
+                self._note_completion(frame)
+            self._pulse()
+            return
+        # control / result traffic addressed to the coordinator
+        if frame.msg_type == MsgType.COMMITTEE:
+            report = codec.decode_json(frame.payload)
+            self._committee_reports[conn.pid] = report.get("committee")
+        elif frame.msg_type == MsgType.READY:
+            self._ready.add(conn.pid)
+        elif frame.msg_type == MsgType.RESULT:
+            if self._result is None or self._meter is None:
+                raise ProtocolError("RESULT outside an aggregation round")
+            done = self._result.feed(frame)
+            self._meter.feed(frame)
+            if done is not None:
+                self._result_mean = done
+        elif frame.msg_type == MsgType.ERROR:
+            info = codec.decode_json(frame.payload)
+            self._party_error = (f"party {conn.pid} failed: "
+                                 f"{info.get('error')}")
+            self.log(self._party_error)
+        else:
+            raise ProtocolError(
+                f"unexpected {frame.type_name()} addressed to the "
+                "coordinator")
+        self._pulse()
+
+    def _note_completion(self, frame: Frame) -> None:
+        if frame.msg_type == MsgType.SHARE_UPLOAD:
+            done = self._upload_done.get(frame.src, 0) + 1
+            self._upload_done[frame.src] = done
+            if done == self.cfg.m and self._upload_mon is not None:
+                # only the upload stage completes here — a member's
+                # READY (liveness gate) is a separate signal, so a
+                # party that dies right after uploading is still a
+                # deterministic member dropout
+                self._upload_mon.completed(frame.src)
+
+    async def _relay(self, frame: Frame) -> None:
+        dst = self._conns.get(frame.dst)
+        if dst is None or not dst.alive:
+            return  # logical message still counted; delivery impossible
+        try:
+            self.raw_bytes_out += await write_frame(dst.writer, frame,
+                                                    dst.lock)
+        except (ConnectionError, OSError):
+            self._mark_dead(frame.dst)
+
+    async def _send(self, pid: int, frame: Frame) -> None:
+        conn = self._conns.get(pid)
+        if conn is None or not conn.alive:
+            return
+        try:
+            self.raw_bytes_out += await write_frame(conn.writer, frame,
+                                                    conn.lock)
+        except (ConnectionError, OSError):
+            self._mark_dead(pid)
+
+    async def _send_chunked(self, pid: int, msg_type: int, *, round_index,
+                            phase: int, dtype: int, arr: np.ndarray,
+                            src: int = -1) -> None:
+        for frame in codec.chunk_frames(
+                msg_type, arr, round_index=round_index, phase=phase,
+                scheme=Scheme.CODES.get(self.cfg.scheme, 0),
+                dtype_code=dtype, src=src, dst=pid,
+                chunk_elems=self.cfg.chunk_elems):
+            await self._send(pid, frame)
+
+    # -- waiting ----------------------------------------------------------
+
+    def _pulse(self) -> None:
+        self._event.set()
+
+    def _check_party_error(self) -> None:
+        if self._party_error is not None:
+            raise PartyFailedError(self._party_error)
+
+    async def _wait(self, cond, timeout_s: float | None, *, what: str,
+                    monitor: StageMonitor | None = None) -> None:
+        """Wait for ``cond()``; fold deadline expiry into ``monitor``."""
+        t0 = self.clock.monotonic()
+        while True:
+            self._check_party_error()
+            if monitor is not None:
+                monitor.check()
+            if cond():
+                return
+            if monitor is not None and monitor.settled():
+                return
+            if (timeout_s is not None
+                    and self.clock.monotonic() - t0 > timeout_s):
+                raise WireTimeoutError(f"timed out waiting for {what}")
+            self._event.clear()
+            with contextlib.suppress(asyncio.TimeoutError):
+                await asyncio.wait_for(self._event.wait(), _POLL_S)
+
+    def _live(self, ids) -> list[int]:
+        return [i for i in ids
+                if i in self._conns and self._conns[i].alive]
+
+    def _new_monitor(self, expected) -> StageMonitor:
+        """Create+register a stage monitor, replaying known dropouts.
+
+        Registered *before* any stage frames are sent so an EOF landing
+        mid-stage is never lost; parties already dead are folded in
+        immediately (their EOF event predates the monitor).
+        """
+        mon = StageMonitor(expected, self.cfg.deadline_s,
+                           self.clock).start()
+        for pid in list(mon.expected):
+            conn = self._conns.get(pid)
+            if conn is None or not conn.alive:
+                mon.eof(pid)
+        self._monitors.append(mon)
+        return mon
+
+    # -- Phase I: committee election (Alg. 2) -----------------------------
+
+    async def elect(self, round_index: int = 0) -> tuple[int, ...]:
+        """Run the election over the wire; all parties must be alive."""
+        cfg = self.cfg
+        live = self._live(range(cfg.n))
+        if len(live) < cfg.n:
+            raise WireError(
+                f"election needs all {cfg.n} parties connected, have "
+                f"{len(live)} (Alg. 2 elects over the full membership)")
+        self._meter = MessageMeter(self.net, round_index=round_index)
+        subround = 0
+        try:
+            while True:
+                self._committee_reports = {}
+                mon = self._new_monitor(live)
+                for pid in live:
+                    await self._send(pid, Frame(
+                        MsgType.ELECT, round=round_index, dst=pid,
+                        payload=codec.encode_json({"subround": subround})))
+
+                def reported(mon=mon):
+                    for pid in live:
+                        if pid in self._committee_reports:
+                            mon.completed(pid)
+                    return len(self._committee_reports) == len(live)
+
+                await self._wait(
+                    reported, None,
+                    what=f"election subround {subround} reports",
+                    monitor=mon)
+                if mon.dropped or mon.straggled:
+                    raise WireError(
+                        f"party failure during election: dropped="
+                        f"{sorted(mon.dropped)} straggled="
+                        f"{sorted(mon.straggled)} — election has no "
+                        "quorum path (Alg. 2 needs every party's votes)")
+                reports = set(
+                    tuple(r or ())
+                    for r in self._committee_reports.values())
+                if len(reports) != 1:
+                    raise ProtocolError(
+                        f"parties disagree on the committee: {reports}")
+                committee = reports.pop()
+                subround += 1
+                if len(committee) == cfg.m:
+                    break
+                if subround >= 8:
+                    raise WireError(
+                        f"election failed to fill a committee of "
+                        f"{cfg.m} in {subround} subrounds")
+        finally:
+            self._monitors = []
+            self._meter = None
+        # conformance cross-check: the wire election must agree with the
+        # in-sim oracle (same seeds => same draws => same committee)
+        oracle = committee_mod.elect(cfg.n, cfg.m, cfg.b,
+                                     cfg.seed + round_index)
+        if tuple(committee) != oracle.committee:
+            raise ProtocolError(
+                f"wire election produced {committee}, oracle says "
+                f"{oracle.committee}")
+        if subround != oracle.rounds:
+            raise ProtocolError(
+                f"wire election used {subround} subrounds, oracle used "
+                f"{oracle.rounds}")
+        self.committee = tuple(committee)
+        self.election_rounds = subround
+        self.log(f"committee elected: {self.committee} "
+                 f"({subround} subround(s))")
+        return self.committee
+
+    # -- Phase II: committee aggregation (Alg. 3) -------------------------
+
+    async def aggregate(self, round_index: int, flats: np.ndarray,
+                        party_ids: list[int]):
+        """One aggregation round; returns ``(mean [d], RoundOutcome)``."""
+        cfg = self.cfg
+        if self.committee is None:
+            await self.elect(round_index)
+        flats = np.ascontiguousarray(np.asarray(flats, dtype=np.float32))
+        ids = [int(i) for i in party_ids]
+        if flats.shape[0] != len(ids):
+            raise ValueError(
+                f"{flats.shape[0]} updates but {len(ids)} party ids")
+        d = int(flats.shape[1])
+        # all raise-able validation BEFORE wire traffic: a rejected
+        # round must not corrupt the Eqs. 5-6 counters (sim contract)
+        if d == 0:
+            raise ValueError(
+                "cannot aggregate zero-length updates over the wire "
+                "(zero-element messages are protocol violations)")
+        cfg.aggregator().fp.validate_for_parties(len(ids))
+
+        members = set(ids)
+        self._round_dropped = set()
+        self._ready = set()
+        self._upload_done = {}
+        self._result_mean = None
+        self._monitors = []
+        self._meter = MessageMeter(self.net, round_index=round_index)
+        self._result = MessageAssembler(round_index=round_index)
+
+        participants = self._live(ids)
+        pre_dead = sorted(set(ids) - set(participants))
+        if pre_dead:
+            self.log(f"parties {pre_dead} already dead at round start")
+            self._round_dropped |= set(pre_dead)
+
+        # stage monitors registered BEFORE any stage frame goes out so
+        # a mid-stage EOF is never missed
+        upload_mon = self._upload_mon = self._new_monitor(participants)
+        member_mon = self._new_monitor(self._live(self.committee))
+
+        # 1) ROUND_START to every connected party (members must take
+        #    part even when the driver excluded them as data parties)
+        start_body = codec.encode_json({
+            "party_ids": ids, "committee": list(self.committee),
+            "d": d, "round": round_index})
+        for pid in self._live(range(cfg.n)):
+            await self._send(pid, Frame(
+                MsgType.ROUND_START, round=round_index, dst=pid,
+                payload=start_body))
+        # 2) ship each participant its flat update (hub artifact: the
+        #    driver owns the federation's data in this reproduction)
+        row = {pid: k for k, pid in enumerate(ids)}
+        for pid in participants:
+            await self._send_chunked(
+                pid, MsgType.INPUT, round_index=round_index,
+                phase=Phase.WIRE_INPUT, dtype=Wiredtype.FLOAT32,
+                arr=flats[row[pid]])
+            self.net.send_batch(1, d, "wire_input")
+
+        # 3) wait for uploads (n·m logical messages) + member READY
+        await self._wait(lambda: False, None, what="share uploads",
+                         monitor=upload_mon)
+
+        def members_ready():
+            for w in member_mon.expected:
+                if w in self._ready:
+                    member_mon.completed(w)
+            return member_mon.settled()
+
+        await self._wait(members_ready, None, what="member READY",
+                         monitor=member_mon)
+        upload_mon.require_any_progress()
+
+        # 4) fault resolution through the simulation's quorum brain
+        dropped = (self._round_dropped | upload_mon.dropped
+                   | member_mon.dropped) & members
+        straggled = (upload_mon.straggled | member_mon.straggled) & members
+        # a party flagged late whose upload nevertheless completed
+        # before COMMIT is aggregated (the committee sums exactly the
+        # share sets it received) — it must not be reported straggled,
+        # or the (mean, outcome) pair would contradict itself
+        straggled -= {pid for pid in participants
+                      if self._upload_done.get(pid, 0) == cfg.m}
+        outcome = resolve_outcome(
+            members, dropped, straggled,
+            committee=[w for w in self.committee if w in members],
+            reconstruct_threshold=(cfg.reconstruct_threshold()
+                                   if set(self.committee) <= members
+                                   else None),
+            resurrect=False)
+
+        # members that answered READY and still hold a live socket
+        live_members = [w for w in self.committee
+                        if w in self._ready
+                        and w in self._conns and self._conns[w].alive]
+        if not live_members:
+            raise WireTimeoutError("no live committee members")
+        included = sorted((pid for pid in participants
+                           if self._upload_done.get(pid, 0) == cfg.m),
+                          key=row.get)
+        if not included:
+            raise WireTimeoutError("no party completed its upload")
+
+        # 5) COMMIT: members fold exactly this set, then chain
+        commit_body = codec.encode_json({
+            "included": included, "live_members": live_members,
+            "l": len(included)})
+        chain_mon = self._new_monitor(live_members)
+        for w in live_members:
+            await self._send(w, Frame(
+                MsgType.COMMIT, round=round_index, dst=w,
+                payload=commit_body))
+
+        await self._wait(lambda: self._result_mean is not None, None,
+                         what="committee chain + RESULT",
+                         monitor=chain_mon)
+        if self._result_mean is None:
+            raise WireTimeoutError(
+                f"committee chain failed: dropped="
+                f"{sorted(chain_mon.dropped)} straggled="
+                f"{sorted(chain_mon.straggled)}")
+        mean = self._result_mean
+
+        # 6) broadcast: member w serves parties i ≡ w−1 (mod m)
+        #    (Alg. 3 l.22); the paper counts all n broadcasts — dead
+        #    parties' messages are attempted (counted) but undeliverable
+        for pid in range(cfg.n):
+            serving = self.committee[pid % len(self.committee)]
+            self.net.send_batch(1, d, "phase2_broadcast")
+            if pid in self._conns and self._conns[pid].alive:
+                await self._send_chunked(
+                    pid, MsgType.BROADCAST, round_index=round_index,
+                    phase=Phase.PHASE2_BROADCAST, dtype=Wiredtype.FLOAT32,
+                    arr=mean, src=serving)
+
+        self._monitors = []
+        self._upload_mon = None
+        self._meter = None
+        self._result = None
+        self.log(f"round {round_index}: l={len(included)} "
+                 f"live_members={live_members} outcome={outcome}")
+        return mean, outcome

@@ -1,0 +1,398 @@
+"""Party worker process: one federated party over a real socket.
+
+Runs as its own OS process (``python -m repro.net.party --host H
+--port P --party-id I``), connects to the coordinator, receives the
+federation config in WELCOME, and then speaks the paper's protocol:
+
+* **Phase I (Alg. 2)** — draw a ``b``-vector of votes from its own
+  Philox stream, secret-share it to every peer (relayed), sum received
+  shares, exchange partial sums, tally, and report the committee it
+  computed — every party must arrive at the same committee or the
+  coordinator raises a conformance error.
+* **Phase II (Alg. 3)** — encode its flat update to fixed point, split
+  it into ``m`` shares chunk-by-chunk (``chunk_elems`` elements at a
+  time through ``SecureAggregator.make_shares_batch`` with
+  ``elem_base`` — the streaming invariant keeps the Philox counters
+  bit-identical to the whole-vector path), and upload share ``w`` to
+  committee member ``w``.  Committee members fold completed uploads,
+  chain partial sums (additive) or send their sum row to the last live
+  member (Shamir), and the final member reconstructs + decodes the
+  FedAvg mean and returns it for broadcast.
+
+The share math is the *same* ``SecureAggregator`` the simulation uses,
+with the same ``(seed, party, round)`` stream derivation — which is
+why a wire round is bit-identical to ``TwoPhaseTransport`` in-sim
+(pinned by ``tests/test_wire_e2e.py``).
+
+Test hook: ``--die-after-upload R`` makes the process exit abruptly
+(``os._exit``) right after sending its round-``R`` share uploads —
+before its member READY — which is how the dropout tests kill a
+committee member mid-Phase-II deterministically (the coordinator sees
+EOF, no wall-clock races).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import collections
+import os
+import sys
+import traceback
+
+import numpy as np
+
+from repro.core import committee as committee_mod
+from repro.core import philox
+from repro.core.additive import share as additive_share
+from repro.core.field import MERSENNE_P_INT
+
+from . import codec
+from .config import WireConfig
+from .messages import MessageAssembler
+from .wire import (Frame, MsgType, Phase, ProtocolError, Scheme,
+                   TruncatedFrameError, Wiredtype, read_frame, write_frame)
+
+__all__ = ["PartyWorker", "main"]
+
+
+class _Shutdown(Exception):
+    """Coordinator asked us to exit (clean)."""
+
+
+class PartyWorker:
+    def __init__(self, host: str, port: int, party_id: int, *,
+                 die_after_upload: int | None = None, log=None):
+        self.host = host
+        self.port = port
+        self.pid = int(party_id)
+        self.die_after_upload = die_after_upload
+        self.log = log or (lambda msg: None)
+        self.cfg: WireConfig | None = None
+        self.agg = None
+        self.reader: asyncio.StreamReader | None = None
+        self.writer: asyncio.StreamWriter | None = None
+        self._pending: dict[int, collections.deque] = (
+            collections.defaultdict(collections.deque))
+        self._tally: np.ndarray | None = None
+        self.last_mean: np.ndarray | None = None
+
+    # -- framed IO --------------------------------------------------------
+
+    async def _next(self, *types: int) -> Frame:
+        """Next frame of one of ``types``; everything else is buffered.
+
+        SHUTDOWN interrupts any wait — a party never hangs on a stage
+        the coordinator has abandoned.
+        """
+        for t in types:
+            if self._pending[t]:
+                return self._pending[t].popleft()
+        while True:
+            frame = await read_frame(self.reader)
+            if frame is None:
+                raise TruncatedFrameError("coordinator closed the stream")
+            if frame.msg_type == MsgType.SHUTDOWN:
+                raise _Shutdown()
+            if frame.msg_type in types:
+                return frame
+            self._pending[frame.msg_type].append(frame)
+
+    async def _send(self, frame: Frame) -> None:
+        await write_frame(self.writer, frame)
+
+    async def _send_chunked(self, msg_type: int, dst: int, *, round_index,
+                            phase: int, arr: np.ndarray,
+                            dtype_code: int) -> None:
+        for frame in codec.chunk_frames(
+                msg_type, arr, round_index=round_index, phase=phase,
+                scheme=Scheme.CODES.get(self.cfg.scheme, 0),
+                dtype_code=dtype_code, src=self.pid, dst=dst,
+                chunk_elems=self.cfg.chunk_elems):
+            await self._send(frame)
+
+    async def _collect(self, assembler: MessageAssembler, msg_type: int,
+                       expect_srcs: set[int]) -> dict[int, np.ndarray]:
+        """Assemble one complete message per expected source."""
+        done: dict[int, np.ndarray] = {}
+        while set(done) != expect_srcs:
+            frame = await self._next(msg_type)
+            if frame.src not in expect_srcs:
+                raise ProtocolError(
+                    f"{frame.type_name()} from unexpected party "
+                    f"{frame.src} (expecting {sorted(expect_srcs)})")
+            if frame.src in done:
+                raise ProtocolError(
+                    f"duplicate {frame.type_name()} from {frame.src}")
+            arr = assembler.feed(frame)
+            if arr is not None:
+                done[frame.src] = arr
+        return done
+
+    # -- field/ring fold (bit-identical to the sim's share sums) ----------
+
+    def _fold(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        if self.cfg.scheme == "shamir":
+            # canonical Mersenne-field add — same value fadd computes
+            return ((a.astype(np.uint64) + b.astype(np.uint64))
+                    % np.uint64(MERSENNE_P_INT)).astype(np.uint32)
+        return (a + b).astype(np.uint32)       # Z_2^32 wraparound
+
+    # -- Phase I: election subround (Alg. 2) ------------------------------
+
+    async def _election_subround(self, elect: Frame) -> None:
+        cfg = self.cfg
+        body = codec.decode_json(elect.payload)
+        subround = int(body["subround"])
+        round_index = elect.round
+        if subround == 0:
+            self._tally = np.zeros(cfg.n, dtype=np.int64)
+        elect_seed = cfg.seed + round_index
+        k0, k1 = philox.derive_key(elect_seed, (subround << 20) | self.pid)
+        votes = committee_mod.draw_votes(cfg.n, cfg.b, k0, k1,
+                                         round_index=subround)
+        shares = np.asarray(additive_share(votes, cfg.n, k0, k1),
+                            dtype=np.uint32)            # [n, b]
+        peers = {j for j in range(cfg.n) if j != self.pid}
+        for j in peers:
+            await self._send_chunked(
+                MsgType.VOTE_SHARE, j, round_index=round_index,
+                phase=Phase.PHASE1, arr=shares[j],
+                dtype_code=Wiredtype.UINT32)
+        asm = MessageAssembler(round_index=round_index)
+        got = await self._collect(asm, MsgType.VOTE_SHARE, peers)
+        partial = shares[self.pid]
+        for arr in got.values():              # wraparound: order-free
+            partial = (partial + arr.astype(np.uint32)).astype(np.uint32)
+        for j in peers:
+            await self._send_chunked(
+                MsgType.VOTE_PARTIAL, j, round_index=round_index,
+                phase=Phase.PHASE1, arr=partial,
+                dtype_code=Wiredtype.UINT32)
+        got = await self._collect(asm, MsgType.VOTE_PARTIAL, peers)
+        total = partial
+        for arr in got.values():
+            total = (total + arr.astype(np.uint32)).astype(np.uint32)
+        self._tally += committee_mod.tally_votes(total, cfg.n)
+        committee = committee_mod.select_committee(self._tally, cfg.m)
+        report = committee if len(committee) == cfg.m else None
+        await self._send(Frame(
+            MsgType.COMMITTEE, round=round_index, src=self.pid,
+            payload=codec.encode_json({"committee": report})))
+        self.log(f"election r{round_index}.{subround}: "
+                 f"tally committee={report}")
+
+    # -- Phase II: aggregation round (Alg. 3) -----------------------------
+
+    async def _round(self, start: Frame) -> None:
+        cfg = self.cfg
+        body = codec.decode_json(start.payload)
+        round_index = start.round
+        ids: list[int] = body["party_ids"]
+        committee: list[int] = body["committee"]
+        d = int(body["d"])
+        participant = self.pid in ids
+        member = self.pid in committee
+        asm = MessageAssembler(round_index=round_index)
+
+        if participant:
+            got = await self._collect(asm, MsgType.INPUT, {-1})
+            flat = got[-1].astype(np.float32, copy=False)
+            if flat.shape[0] != d:
+                raise ProtocolError(
+                    f"INPUT carried {flat.shape[0]} elements, "
+                    f"ROUND_START promised {d}")
+            # stream shares chunk-by-chunk: elem_base keeps the Philox
+            # counters exactly where the whole-vector call would put
+            # them, so no [m, d] stack ever materializes per frame
+            for e_lo in range(0, d, cfg.chunk_elems):
+                e_hi = min(e_lo + cfg.chunk_elems, d)
+                stack = np.asarray(self.agg.make_shares_batch(
+                    flat[None, e_lo:e_hi], seed=cfg.seed,
+                    party_ids=[self.pid], round_index=round_index,
+                    elem_base=e_lo))[0]                # [m, chunk]
+                for w, member_id in enumerate(committee):
+                    _, payload = codec.encode_array(
+                        stack[w].astype(np.uint32, copy=False))
+                    await self._send(Frame(
+                        MsgType.SHARE_UPLOAD, round=round_index,
+                        phase=Phase.PHASE2_UPLOAD,
+                        scheme=Scheme.CODES[cfg.scheme],
+                        dtype=Wiredtype.UINT32, src=self.pid,
+                        dst=member_id, chunk_off=e_lo, total_elems=d,
+                        payload=payload))
+            if self.die_after_upload == round_index:
+                # frames are already drained to the kernel (write_frame
+                # awaits drain); process exit sends FIN *after* them, so
+                # the coordinator sees a complete upload then EOF
+                self.log(f"test hook: dying after round {round_index} "
+                         "uploads")
+                os._exit(1)
+
+        if member:
+            await self._send(Frame(MsgType.READY, round=round_index,
+                                   src=self.pid))
+            await self._member_duties(round_index, ids, committee, d, asm)
+
+        # every connected party receives the aggregate (Alg. 3 l.22)
+        got = await self._collect(asm, MsgType.BROADCAST,
+                                  {committee[self.pid % len(committee)]})
+        self.last_mean = next(iter(got.values()))
+        self.log(f"round {round_index} done "
+                 f"(|G|={np.linalg.norm(self.last_mean):.4f})")
+
+    async def _member_duties(self, round_index: int, ids, committee, d,
+                             asm: MessageAssembler) -> None:
+        cfg = self.cfg
+        buffers: dict[int, np.ndarray] = {}
+        commit = None
+        # uploads are buffered until COMMIT names the included set — a
+        # party that died mid-upload must not leak partial chunks into
+        # the member's sum (ring/field sums have no "partial" notion)
+        while commit is None:
+            frame = await self._next(MsgType.SHARE_UPLOAD, MsgType.COMMIT)
+            if frame.msg_type == MsgType.COMMIT:
+                commit = codec.decode_json(frame.payload)
+                break
+            arr = asm.feed(frame)
+            if arr is not None:
+                buffers[frame.src] = arr.astype(np.uint32, copy=False)
+        included: list[int] = commit["included"]
+        live_members: list[int] = commit["live_members"]
+        l = int(commit["l"])
+        missing = [p for p in included if p not in buffers]
+        while missing:       # relay-before-COMMIT ordering makes this
+            frame = await self._next(MsgType.SHARE_UPLOAD)  # a no-op path
+            arr = asm.feed(frame)
+            if arr is not None:
+                buffers[frame.src] = arr.astype(np.uint32, copy=False)
+            missing = [p for p in included if p not in buffers]
+
+        acc = np.zeros(d, dtype=np.uint32)
+        for p in included:
+            acc = self._fold(acc, buffers[p])
+
+        order = live_members
+        my_idx = order.index(self.pid)
+        k = len(order)
+        if cfg.scheme == "additive":
+            # Alg. 3 chain: each member adds its local sum and passes on
+            if my_idx > 0:
+                got = await self._collect(asm, MsgType.CHAIN_SUM,
+                                          {order[my_idx - 1]})
+                acc = self._fold(acc, got[order[my_idx - 1]])
+            if my_idx < k - 1:
+                await self._send_chunked(
+                    MsgType.CHAIN_SUM, order[my_idx + 1],
+                    round_index=round_index, phase=Phase.PHASE2_EXCHANGE,
+                    arr=acc, dtype_code=Wiredtype.UINT32)
+                return
+            member_sums = acc[None, :]
+            points = None
+        else:
+            # Shamir rows must stay distinct: non-final members send
+            # their sum row to the final live member (same m−1 count)
+            if my_idx < k - 1:
+                await self._send_chunked(
+                    MsgType.CHAIN_SUM, order[-1],
+                    round_index=round_index, phase=Phase.PHASE2_EXCHANGE,
+                    arr=acc, dtype_code=Wiredtype.UINT32)
+                return
+            rows = {self.pid: acc}
+            if k > 1:
+                rows.update(await self._collect(
+                    asm, MsgType.CHAIN_SUM, set(order[:-1])))
+            member_sums = np.stack([rows[w] for w in order])
+            points = (None if k == len(committee) else
+                      tuple(committee.index(w) + 1 for w in order))
+
+        mean = np.asarray(self.agg.reconstruct_mean(
+            member_sums, l, points=points), dtype=np.float32)
+        await self._send_chunked(
+            MsgType.RESULT, -1, round_index=round_index,
+            phase=Phase.WIRE_RESULT, arr=mean,
+            dtype_code=Wiredtype.FLOAT32)
+
+    # -- main loop --------------------------------------------------------
+
+    async def run(self) -> None:
+        self.reader, self.writer = await asyncio.open_connection(
+            self.host, self.port)
+        await self._send(Frame(MsgType.HELLO, src=self.pid))
+        welcome = await self._next(MsgType.WELCOME)
+        self.cfg = WireConfig.from_json(codec.decode_json(welcome.payload))
+        self.agg = self.cfg.aggregator()
+        self.log(f"party {self.pid} joined federation "
+                 f"(n={self.cfg.n}, scheme={self.cfg.scheme})")
+        try:
+            while True:
+                frame = await self._next(MsgType.ELECT,
+                                         MsgType.ROUND_START)
+                if frame.msg_type == MsgType.ELECT:
+                    await self._election_subround(frame)
+                else:
+                    await self._round(frame)
+        except _Shutdown:
+            self.log("shutdown requested")
+        finally:
+            self.writer.close()
+
+    async def fail(self, exc: BaseException) -> None:
+        """Best-effort ERROR report before exiting."""
+        try:
+            await self._send(Frame(
+                MsgType.ERROR, src=self.pid,
+                payload=codec.encode_json(
+                    {"error": f"{type(exc).__name__}: {exc}"})))
+            await self.writer.drain()
+        except Exception:
+            pass
+
+
+def _open_log(party_id: int, path: str | None):
+    if path is None:
+        log_dir = os.environ.get("REPRO_NET_LOG_DIR")
+        if not log_dir:
+            return lambda msg: None, None
+        os.makedirs(log_dir, exist_ok=True)
+        path = os.path.join(log_dir, f"party-{party_id}.log")
+    fh = open(path, "a", buffering=1)
+
+    def log(msg):
+        fh.write(f"[party {party_id}] {msg}\n")
+
+    return log, fh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--party-id", type=int, required=True)
+    ap.add_argument("--log-file", default=None)
+    ap.add_argument("--die-after-upload", type=int, default=None,
+                    help="TEST HOOK: exit abruptly after sending this "
+                         "round's share uploads")
+    args = ap.parse_args(argv)
+    log, fh = _open_log(args.party_id, args.log_file)
+    worker = PartyWorker(args.host, args.port, args.party_id,
+                         die_after_upload=args.die_after_upload, log=log)
+
+    async def _run():
+        try:
+            await worker.run()
+            return 0
+        except Exception as e:
+            log("FATAL: " + "".join(traceback.format_exception(e)))
+            if worker.writer is not None:
+                await worker.fail(e)
+            return 1
+
+    code = asyncio.run(_run())
+    if fh is not None:
+        fh.close()
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,13 @@ def pytest_configure(config):
         "markers",
         "kernels: Pallas-kernel differential tests (CPU interpret / TPU "
         "compiled); any skip must carry an asserted 'capability:' reason")
+    # multi-process wire-transport integration tests: spawn party
+    # worker subprocesses + TCP sockets; CI runs them as a dedicated
+    # job with a hard 120s timeout and log upload (-m net)
+    config.addinivalue_line(
+        "markers",
+        "net: multi-process TCP wire-transport integration tests "
+        "(subprocesses + localhost sockets)")
 
 try:
     import hypothesis  # noqa: F401  (real package wins)

@@ -8,12 +8,15 @@ import sys
 import numpy as np
 import jax.numpy as jnp
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import costmodel
 from repro.core.aggregation import SecureAggregator
 from repro.core.costmodel import CostParams
 from repro.core.fixed_point import FixedPointConfig
-from repro.fl import (FLSimulation, Network, SPMDTransport, make_transport)
+from repro.fl import (FLSimulation, Network, PhaseStats, SPMDTransport,
+                      make_transport)
 
 
 def _flats(n, s, seed=0):
@@ -31,6 +34,50 @@ def test_send_batch_equals_send_loop():
         a.send(0, 1, 13, "x")
     b.send_batch(7, 13, "x")
     assert a.stats("x") == b.stats("x")
+
+
+@settings(max_examples=40)
+@given(st.integers(0, 2**32 - 1))
+def test_send_batch_never_drifts_from_send_loop(seed):
+    """Property (all phases, arbitrary interleavings): batched and
+    per-message accounting stay bit-identical — the Eqs. 1-8
+    cross-checks silently depend on this equivalence."""
+    rng = np.random.RandomState(seed % 2**31)
+    phases = ("phase1", "phase2_upload", "phase2_exchange",
+              "phase2_broadcast", "p2p", "plain")
+    per_msg, batched = Network(), Network()
+    for _ in range(int(rng.randint(1, 30))):
+        phase = phases[rng.randint(len(phases))]
+        count = int(rng.randint(0, 20))
+        size = int(rng.randint(1, 10_000))
+        for _ in range(count):
+            per_msg.send(0, 1, size, phase)
+        batched.send_batch(count, size, phase)
+    for phase in phases:
+        assert per_msg.stats(phase) == batched.stats(phase), phase
+    assert per_msg.stats() == batched.stats()
+
+
+def test_phase_stats_rejects_nonpositive_sizes_and_negative_counts():
+    """Zero/negative message sizes are always accounting bugs; they
+    must fail loudly instead of skewing the paper-equation checks."""
+    st_ = PhaseStats()
+    for bad in (0, -1, -242):
+        with pytest.raises(ValueError, match="size must be positive"):
+            st_.add(bad)
+        with pytest.raises(ValueError, match="size must be positive"):
+            st_.add_batch(3, bad)
+    with pytest.raises(ValueError, match="count must be non-negative"):
+        st_.add_batch(-1, 7)
+    net = Network()
+    with pytest.raises(ValueError):
+        net.send(0, 1, 0, "x")
+    with pytest.raises(ValueError):
+        net.send_batch(2, -5, "x")
+    # the rejected calls must not have corrupted any counter
+    assert st_ == PhaseStats() and net.stats() == PhaseStats()
+    st_.add_batch(0, 9)           # an empty batch is legal (e.g. m=1)
+    assert st_ == PhaseStats()
 
 
 @pytest.mark.parametrize("n,m,e,s", [(4, 3, 2, 242), (10, 3, 3, 64),

@@ -1,0 +1,382 @@
+"""Wire-protocol conformance: golden frames, typed rejections, codec
+round-trips, chunk sequencing, and the injectable-clock dropout state
+machine.  No sockets, no subprocesses — the multi-process integration
+tests live in tests/test_wire_e2e.py (-m net)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fixed_point import FixedPointConfig
+from repro.fl.faults import apply_faults, resolve_outcome
+from repro.fl.transport import Network
+from repro.net import (BadMagicError, Frame, FrameReader, ManualClock,
+                       MessageAssembler, MessageMeter, MsgType,
+                       OversizedFrameError, Phase, ProtocolError, Scheme,
+                       StageMonitor, TruncatedFrameError, VersionError,
+                       WireConfig, Wiredtype)
+from repro.net import codec, wire
+
+
+# ---------------------------------------------------------------------------
+# Golden frame fixtures: the byte layout is pinned, not emergent
+# ---------------------------------------------------------------------------
+
+GOLDEN_FRAME = Frame(
+    msg_type=MsgType.SHARE_UPLOAD, round=7, phase=Phase.PHASE2_UPLOAD,
+    scheme=Scheme.ADDITIVE, dtype=Wiredtype.UINT32, src=2, dst=5,
+    chunk_off=128, total_elems=256,
+    payload=np.array([1, 2, 3, 4], dtype="<u4").tobytes())
+
+#: version 1 layout, byte for byte — changing the header format MUST
+#: bump PROTOCOL_VERSION and re-pin this fixture
+GOLDEN_BYTES = bytes.fromhex(
+    "0000002c"                # length prefix: 28-byte header + 16 payload
+    "3250"                    # magic "2P"
+    "01"                      # protocol version
+    "09"                      # msg_type SHARE_UPLOAD
+    "00000007"                # round 7
+    "02"                      # phase PHASE2_UPLOAD
+    "01"                      # scheme additive
+    "01"                      # dtype uint32
+    "00"                      # flags
+    "00000002"                # src party 2
+    "00000005"                # dst party 5
+    "00000080"                # chunk_off 128
+    "00000100"                # total_elems 256
+    "01000000" "02000000" "03000000" "04000000")   # payload, LE uint32
+
+
+def test_golden_frame_encodes_to_pinned_bytes():
+    assert wire.encode_frame(GOLDEN_FRAME) == GOLDEN_BYTES
+
+
+def test_golden_bytes_decode_to_pinned_fields():
+    frame, used = wire.decode_frame(GOLDEN_BYTES)
+    assert used == len(GOLDEN_BYTES)
+    assert frame == GOLDEN_FRAME
+    assert frame.elems == 4
+
+
+def test_control_frame_round_trips_with_json_payload():
+    f = Frame(MsgType.COMMIT, round=3,
+              payload=codec.encode_json({"included": [0, 2], "l": 2}))
+    decoded, _ = wire.decode_frame(wire.encode_frame(f))
+    assert decoded == f
+    assert codec.decode_json(decoded.payload) == {"included": [0, 2],
+                                                  "l": 2}
+
+
+# ---------------------------------------------------------------------------
+# Malformed input: typed WireError, never a hang, never garbage
+# ---------------------------------------------------------------------------
+
+def test_truncated_frames_raise_typed_error():
+    for cut in (0, 2, 4, 10, len(GOLDEN_BYTES) - 1):
+        with pytest.raises(TruncatedFrameError):
+            wire.decode_frame(GOLDEN_BYTES[:cut])
+
+
+def test_frame_reader_buffers_partial_frames_instead_of_failing():
+    reader = FrameReader()
+    frames = reader.feed(GOLDEN_BYTES[:13])
+    assert frames == []
+    frames = reader.feed(GOLDEN_BYTES[13:] + GOLDEN_BYTES)
+    assert frames == [GOLDEN_FRAME, GOLDEN_FRAME]
+    reader.eof()   # clean boundary: no error
+
+
+def test_frame_reader_eof_mid_frame_raises():
+    reader = FrameReader()
+    assert reader.feed(GOLDEN_BYTES[:17]) == []
+    with pytest.raises(TruncatedFrameError):
+        reader.eof()
+
+
+def test_oversized_frame_rejected_before_allocation():
+    huge = wire._LEN.pack(wire.HEADER_SIZE + wire.MAX_PAYLOAD_BYTES + 1)
+    with pytest.raises(OversizedFrameError):
+        wire.decode_frame(huge + b"\x00" * 64)
+    with pytest.raises(OversizedFrameError):
+        wire.encode_frame(Frame(
+            MsgType.INPUT, dtype=Wiredtype.RAW,
+            payload=b"\x00" * (wire.MAX_PAYLOAD_BYTES + 1)))
+
+
+def test_bad_magic_rejected():
+    corrupted = bytearray(GOLDEN_BYTES)
+    corrupted[4:6] = b"XX"
+    with pytest.raises(BadMagicError):
+        wire.decode_frame(bytes(corrupted))
+
+
+def test_wrong_version_rejected():
+    corrupted = bytearray(GOLDEN_BYTES)
+    corrupted[6] = wire.PROTOCOL_VERSION + 1
+    with pytest.raises(VersionError):
+        wire.decode_frame(bytes(corrupted))
+
+
+def test_dtype_payload_mismatch_rejected():
+    # 15 payload bytes cannot be uint32 elements
+    bad = Frame(MsgType.SHARE_UPLOAD, phase=Phase.PHASE2_UPLOAD,
+                dtype=Wiredtype.UINT32, total_elems=4,
+                payload=b"\x00" * 15)
+    encoded = wire.encode_frame(bad)
+    with pytest.raises(ProtocolError, match="not a multiple"):
+        wire.decode_frame(encoded)
+
+
+def test_chunk_overrunning_total_rejected():
+    bad = Frame(MsgType.SHARE_UPLOAD, phase=Phase.PHASE2_UPLOAD,
+                dtype=Wiredtype.UINT32, chunk_off=4, total_elems=6,
+                payload=np.zeros(4, "<u4").tobytes())
+    with pytest.raises(ProtocolError, match="overruns"):
+        wire.decode_frame(wire.encode_frame(bad))
+
+
+def _upload_frame(round=0, chunk_off=0, total=8, n_elems=4, src=1, dst=0):
+    return Frame(MsgType.SHARE_UPLOAD, round=round,
+                 phase=Phase.PHASE2_UPLOAD, scheme=Scheme.ADDITIVE,
+                 dtype=Wiredtype.UINT32, src=src, dst=dst,
+                 chunk_off=chunk_off, total_elems=total,
+                 payload=np.arange(n_elems, dtype="<u4").tobytes())
+
+
+def test_wrong_round_frame_rejected_by_assembler_and_meter():
+    asm = MessageAssembler(round_index=3)
+    with pytest.raises(ProtocolError, match="round 9 arrived"):
+        asm.feed(_upload_frame(round=9))
+    meter = MessageMeter(Network(), round_index=3)
+    with pytest.raises(ProtocolError, match="round 9 arrived"):
+        meter.feed(_upload_frame(round=9))
+
+
+def test_out_of_order_chunk_rejected():
+    asm = MessageAssembler(round_index=0)
+    assert asm.feed(_upload_frame(chunk_off=0)) is None
+    with pytest.raises(ProtocolError, match="out-of-order"):
+        asm.feed(_upload_frame(chunk_off=0))       # replayed chunk
+    asm2 = MessageAssembler(round_index=0)
+    asm2.feed(_upload_frame(chunk_off=0, total=12))
+    with pytest.raises(ProtocolError, match="out-of-order"):
+        asm2.feed(_upload_frame(chunk_off=8, total=12))  # skipped ahead
+
+
+def test_mid_message_metadata_change_rejected():
+    asm = MessageAssembler(round_index=0)
+    asm.feed(_upload_frame(chunk_off=0, total=12))
+    with pytest.raises(ProtocolError, match="metadata changed"):
+        asm.feed(_upload_frame(chunk_off=4, total=16))
+
+
+def test_oversized_logical_message_rejected_by_bound():
+    asm = MessageAssembler(round_index=0, max_elems=6)
+    with pytest.raises(ProtocolError, match="message bound"):
+        asm.feed(_upload_frame(total=8))
+
+
+def test_zero_element_message_rejected():
+    """Every counted leg carries >= 1 element (b or s); a zero-element
+    data message must be a typed protocol violation, not a crash in
+    the PhaseStats validation downstream."""
+    zero = _upload_frame(total=0, n_elems=0)
+    with pytest.raises(ProtocolError, match="zero-element"):
+        MessageAssembler(round_index=0).feed(zero)
+    with pytest.raises(ProtocolError, match="zero-element"):
+        MessageMeter(Network(), round_index=0).feed(zero)
+    # and senders never produce such a message: empty arrays frame to
+    # nothing instead of an empty-chunk frame
+    assert list(codec.iter_chunks(np.zeros(0, np.uint32), 16)) == []
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trips (hypothesis): arrays x fixed-point x chunk offsets
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from([1, 3, 7, 64, 129, 1000]))
+def test_uint32_array_roundtrip_bit_identical(seed, size):
+    rng = np.random.RandomState(seed % 2**31)
+    arr = rng.randint(0, 2**32, size=size, dtype=np.uint64).astype(
+        np.uint32)
+    code, payload = codec.encode_array(arr)
+    assert code == Wiredtype.UINT32
+    out = codec.decode_array(code, payload)
+    np.testing.assert_array_equal(out, arr)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**32 - 1))
+def test_float32_roundtrip_preserves_exact_bits(seed):
+    rng = np.random.RandomState(seed % 2**31)
+    # arbitrary bit patterns reinterpreted as float32: NaNs, infs,
+    # denormals — the codec must never re-round or canonicalize
+    bits = rng.randint(0, 2**32, size=257, dtype=np.uint64).astype(
+        np.uint32)
+    arr = bits.view(np.float32)
+    code, payload = codec.encode_array(arr)
+    assert code == Wiredtype.FLOAT32
+    out = codec.decode_array(code, payload)
+    np.testing.assert_array_equal(out.view(np.uint32), bits)
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from([(16, "ring"), (10, "ring"), (16, "field"),
+                        (8, "field")]))
+def test_fixed_point_codewords_survive_the_wire(seed, fp_params):
+    frac_bits, algebra = fp_params
+    fp = FixedPointConfig(frac_bits=frac_bits, clip=8.0, algebra=algebra)
+    rng = np.random.RandomState(seed % 2**31)
+    x = rng.randn(300).astype(np.float32)
+    code_words = np.asarray(fp.encode(x), dtype=np.uint32)
+    _, payload = codec.encode_array(code_words)
+    out = codec.decode_array(Wiredtype.UINT32, payload)
+    np.testing.assert_array_equal(out, code_words)
+    np.testing.assert_array_equal(np.asarray(fp.decode(out)),
+                                  np.asarray(fp.decode(code_words)))
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from([4, 8, 64, 128, 1000]),
+       st.sampled_from([0, 1, 2]))
+def test_chunked_message_reassembles_bit_identically(seed, chunk, round_i):
+    """Arbitrary arrays x chunk sizes x rounds: framing is lossless."""
+    rng = np.random.RandomState(seed % 2**31)
+    total = int(rng.randint(1, 700))
+    arr = rng.randint(0, 2**32, size=total, dtype=np.uint64).astype(
+        np.uint32)
+    asm = MessageAssembler(round_index=round_i)
+    meter = MessageMeter(Network(), round_index=round_i)
+    out = None
+    for off, part in codec.iter_chunks(arr, chunk):
+        _, payload = codec.encode_array(part)
+        frame = Frame(MsgType.SHARE_UPLOAD, round=round_i,
+                      phase=Phase.PHASE2_UPLOAD, dtype=Wiredtype.UINT32,
+                      src=3, dst=1, chunk_off=off, total_elems=total,
+                      payload=payload)
+        # encode -> decode through the real frame layer, like a socket
+        decoded, _ = wire.decode_frame(wire.encode_frame(frame))
+        meter.feed(decoded)
+        got = asm.feed(decoded)
+        if got is not None:
+            out = got
+    np.testing.assert_array_equal(out, arr)
+    stats = meter.net.stats("phase2_upload")
+    assert (stats.msg_num, stats.msg_size) == (1, total)
+
+
+def _random_pytree(rng, depth=0):
+    kind = rng.randint(0, 3 if depth < 2 else 1)
+    if kind == 0:
+        shape = tuple(rng.randint(1, 4, size=rng.randint(0, 3)))
+        if rng.randint(2):
+            return np.asarray(rng.randn(*shape), dtype=np.float32)
+        return np.asarray(rng.randint(0, 2**32, size=shape,
+                                      dtype=np.uint64), dtype=np.uint32)
+    if kind == 1:
+        return {f"k{i}": _random_pytree(rng, depth + 1)
+                for i in range(rng.randint(1, 4))}
+    seq = [_random_pytree(rng, depth + 1)
+           for _ in range(rng.randint(1, 4))]
+    return seq if rng.randint(2) else tuple(seq)
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and sorted(a) == sorted(b)
+                and all(_tree_equal(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(_tree_equal(x, y) for x, y in zip(a, b)))
+    return (np.asarray(a).dtype == np.asarray(b).dtype
+            and np.asarray(a).shape == np.asarray(b).shape
+            and np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**32 - 1))
+def test_pytree_codec_roundtrip_bit_identical(seed):
+    rng = np.random.RandomState(seed % 2**31)
+    tree = _random_pytree(rng)
+    out = codec.decode_pytree(codec.encode_pytree(tree))
+    assert _tree_equal(tree, out)
+
+
+def test_pytree_codec_rejects_trailing_garbage():
+    payload = codec.encode_pytree({"w": np.zeros(3, np.float32)})
+    with pytest.raises(ProtocolError, match="trailing"):
+        codec.decode_pytree(payload + b"\x00\x00\x00\x00")
+
+
+def test_wire_config_roundtrip_and_unknown_fields_rejected():
+    cfg = WireConfig(n=5, m=3, scheme="shamir", shamir_degree=1,
+                     algebra="field", chunk_elems=256)
+    assert WireConfig.from_json(cfg.to_json()) == cfg
+    with pytest.raises(ProtocolError, match="unknown fields"):
+        WireConfig.from_json({**cfg.to_json(), "evil": 1})
+    agg = cfg.aggregator()
+    assert agg.scheme == "shamir" and agg.fp.algebra == "field"
+    assert cfg.reconstruct_threshold() == 2
+
+
+# ---------------------------------------------------------------------------
+# Dropout/straggler state machine on an injectable clock (no sleeping)
+# ---------------------------------------------------------------------------
+
+def test_stage_monitor_eof_is_deterministic_dropout():
+    clock = ManualClock()
+    mon = StageMonitor({0, 1, 2, 3}, deadline_s=10.0, clock=clock).start()
+    mon.completed(0)
+    mon.eof(2)
+    assert mon.dropped == {2} and mon.pending() == {1, 3}
+    mon.eof(0)                 # EOF after completion is NOT a dropout
+    assert mon.dropped == {2}
+    mon.completed(1)
+    mon.completed(3)
+    assert mon.settled() and not mon.expired()
+
+
+def test_stage_monitor_deadline_expiry_marks_stragglers():
+    clock = ManualClock()
+    mon = StageMonitor({0, 1, 2}, deadline_s=5.0, clock=clock).start()
+    mon.completed(0)
+    clock.advance(4.99)
+    mon.check()
+    assert not mon.expired() and mon.straggled == set()
+    clock.advance(0.02)
+    assert mon.expired()
+    mon.check()
+    assert mon.straggled == {1, 2} and mon.settled()
+
+
+def test_observed_faults_resolve_like_apply_faults():
+    """The wire feeds measured fault sets into the same quorum logic
+    apply_faults uses — identical inputs, identical RoundOutcome."""
+    members = set(range(6))
+    latency = {4: 9.0, 5: 9.0}
+    via_sim = apply_faults(members, latency, deadline_s=1.0,
+                           committee=[0, 1, 2],
+                           reconstruct_threshold=2)
+    via_wire = resolve_outcome(members, dropped=set(),
+                               straggled={4, 5}, latency_s=latency,
+                               committee=[0, 1, 2],
+                               reconstruct_threshold=2)
+    assert via_sim == via_wire
+    assert via_wire.alive == {0, 1, 2, 3}
+
+
+def test_resolve_outcome_without_resurrection_raises_subthreshold():
+    members = set(range(4))
+    with pytest.raises(ValueError, match="cannot be resurrected"):
+        resolve_outcome(members, dropped={0, 1}, straggled=set(),
+                        committee=[0, 1, 2], reconstruct_threshold=2,
+                        resurrect=False)
+    # with resurrection (sim semantics) the same pattern recovers
+    out = resolve_outcome(members, dropped={0, 1}, straggled=set(),
+                          committee=[0, 1, 2], reconstruct_threshold=2)
+    assert {0, 1} & out.alive   # someone was resurrected

@@ -34,7 +34,7 @@ from repro.fl.simulation import FLSimulation
 SIMPLE_S = 242
 COMPLEX_S = 7380
 
-#: headroom for 10k+ party ring sums (frac_bits 16 caps out at 512)
+#: headroom for 10k+ party ring sums (frac_bits 16 caps out at 511)
 LARGE_N_FP = FixedPointConfig(frac_bits=10, clip=64.0, algebra="ring")
 
 
@@ -114,6 +114,49 @@ def compression_sweep(ratios=(0.01, 0.1), n_values=(16, 64, 256), e=15,
             else:
                 row["verified"] = False
             rows.append(row)
+    return rows
+
+
+def vss_overhead_sweep(n_values=(4, 16, 64, 256), m_values=(3, 5),
+                       s_values=(SIMPLE_S, COMPLEX_S), e=15,
+                       verify_n=4, verify_s=SIMPLE_S):
+    """Feldman-VSS commitment overhead: bytes vs n, m and model size.
+
+    For every (n, m, s) the extended closed forms (``summary_vss`` —
+    the Eq. 5-6 commitment legs at degree m-1) are evaluated; at the
+    smallest corner the counting simulation runs with ``vss=True`` and
+    the measured ``phase2_commit`` counters are asserted equal to the
+    closed forms, so the bench-regression gate re-verifies the
+    verification overhead on every CI run.
+    """
+    rows = []
+    for s in s_values:
+        for m in m_values:
+            for n in n_values:
+                p = CostParams(n=n, e=e, s=s, m=m, b=10)
+                row = costmodel.summary_vss(p)
+                row["twophase_msg_size_dense"] = \
+                    costmodel.twophase_msg_size(p)
+                if n == verify_n and s == verify_s and m == 3:
+                    e_chk = 2
+                    rng = np.random.RandomState(0)
+                    flats = [jnp.asarray(rng.randn(s).astype(np.float32))
+                             for _ in range(n)]
+                    sim = FLSimulation(n=n, m=m, seed=1, scheme="shamir",
+                                       shamir_degree=m - 1, vss=True)
+                    sim.elect_committee()
+                    for _ in range(e_chk):
+                        sim.aggregate_two_phase(flats)
+                    st = sim.net.stats("phase2_commit")
+                    p_chk = CostParams(n=n, e=e_chk, s=s, m=m, b=10)
+                    assert st.msg_num == \
+                        costmodel.phase2_commit_msg_num(p_chk), (st, row)
+                    assert st.msg_size == \
+                        costmodel.phase2_commit_msg_size(p_chk), (st, row)
+                    row["verified"] = True
+                else:
+                    row["verified"] = False
+                rows.append(row)
     return rows
 
 
@@ -243,6 +286,13 @@ def write_bench_json(path: str = "BENCH_msgcost.json",
              for k, v in row.items()}
             for row in compression_sweep()
         ],
+        # Feldman-VSS commitment overhead (Eq. 5-6 extensions,
+        # sim-verified at the small corner — DESIGN.md §10)
+        "vss_overhead": [
+            {k: (round(v, 4) if isinstance(v, float) else v)
+             for k, v in row.items()}
+            for row in vss_overhead_sweep()
+        ],
     }
     if include_round:
         out["vectorized_two_phase_round"] = vectorized_round()
@@ -273,3 +323,9 @@ def emit(writer):
                row["twophase_msg_size_topk"])
         writer(f"combined_reduction_{tag}", None,
                round(row["combined_reduction_factor"], 2))
+    for row in vss_overhead_sweep():
+        tag = f"m{row['m']}_s{row['s']}_n{row['n']}"
+        writer(f"vss_commit_size_{tag}", None,
+               row["phase2_commit_msg_size"])
+        writer(f"vss_overhead_{tag}", None,
+               round(row["vss_overhead_factor"], 4))

@@ -53,21 +53,60 @@ def tally_votes(vote_sum, n: int) -> np.ndarray:
     return np.bincount(idx.astype(np.int64), minlength=n)
 
 
-def select_committee(tally: np.ndarray, m: int) -> list[int]:
-    """Top-m parties by tally; deterministic lowest-index tie-break."""
-    order = np.lexsort((np.arange(len(tally)), -tally))
-    voted = [int(i) for i in order if tally[i] > 0]
+def select_committee(tally: np.ndarray, m: int,
+                     exclude=(),
+                     reputation: dict[int, float] | None = None
+                     ) -> list[int]:
+    """Top-m parties by tally; deterministic lowest-index tie-break.
+
+    ``exclude``: party ids barred from serving (evicted — blamed by the
+    VSS layer or administratively removed); their votes still count
+    (Alg. 2's unbiased sum needs every party's randomness) but they can
+    never be selected.
+
+    ``reputation``: optional per-party weight multiplying the tally
+    (default 1.0) — the per-round re-election scores faulted members
+    down without hard-evicting them (DESIGN.md §10).  ``None`` keeps
+    the exact integer scoring path, bit-identical to the historical
+    election.
+    """
+    excluded = set(int(i) for i in exclude)
+    if reputation is None:
+        order = np.lexsort((np.arange(len(tally)), -tally))
+        voted = [int(i) for i in order
+                 if tally[i] > 0 and i not in excluded]
+        return voted[:m]
+    # float64 weighted score; ties (incl. weight 0) break on index.
+    # every side of the protocol (sim transport, each wire party, the
+    # conformance oracle) computes this same sequence, so determinism
+    # only needs IEEE float64 — which numpy guarantees cross-process.
+    weights = np.array([float(reputation.get(i, 1.0))
+                        for i in range(len(tally))])
+    score = tally.astype(np.float64) * weights
+    order = np.lexsort((np.arange(len(tally)), -score))
+    voted = [int(i) for i in order
+             if tally[i] > 0 and score[i] > 0.0 and i not in excluded]
     return voted[:m]
 
 
-def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8
-          ) -> ElectionResult:
+def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8,
+          exclude=(),
+          reputation: dict[int, float] | None = None) -> ElectionResult:
     """Full election as every honest party computes it (deterministic
     given the per-party Philox seeds, which the simulation backend uses
     to cross-check that all parties agree on ``C``).
+
+    ``exclude``/``reputation`` forward to ``select_committee`` — the
+    per-round re-election path evicts blamed members and reweights
+    faulted ones; defaults are bit-identical to the historical
+    single-shot election.
     """
     if m > n:
         raise ValueError(f"committee m={m} larger than parties n={n}")
+    if n - len(set(int(i) for i in exclude)) < m:
+        raise ValueError(
+            f"cannot elect a committee of {m} from {n} parties with "
+            f"{sorted(set(int(i) for i in exclude))} evicted")
     committee: list[int] = []
     tally = np.zeros(n, dtype=np.int64)
     ids = jnp.arange(n, dtype=jnp.uint32)
@@ -81,7 +120,8 @@ def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8
         votes = jax.vmap(_draw)(jnp.uint32(r << 20) | ids)     # [n, b]
         total = jnp.sum(votes, axis=0, dtype=jnp.uint32)
         tally = tally + tally_votes(total, n)
-        committee = select_committee(tally, m)
+        committee = select_committee(tally, m, exclude=exclude,
+                                     reputation=reputation)
         if len(committee) == m:
             return ElectionResult(tuple(committee), r + 1, tally)
     raise RuntimeError(

@@ -139,6 +139,85 @@ def summary_topk(p: CostParams, ratio: float) -> dict:
     }
 
 
+# -- Feldman-VSS commitment broadcast (Eq. 5-6 extensions) -------------------
+#
+# With verifiable secret sharing enabled each party broadcasts Feldman
+# commitments to its round polynomial alongside its share uploads: one
+# logical message per (party, committee member) of
+# ``(degree+1) * 2 * s`` uint32 elements (commitments to a_0..a_d per
+# codeword element, two 32-bit limbs per group element of F_q,
+# q = 2^59 - 2^28 + 1 — ``core.vss``).  Verification itself is local
+# (no traffic), so the extension is purely the commitment legs; the
+# counting transports meter them under ``phase2_commit`` and the sim
+# and wire cross-check these closed forms exactly (DESIGN.md §10).
+
+
+def _vss_degree(p: CostParams, degree: int | None) -> int:
+    return (p.m - 1) if degree is None else int(degree)
+
+
+def vss_commit_elems(p: CostParams, degree: int | None = None) -> int:
+    """Elements per commitment broadcast: (d+1) coefficients x 2 limbs."""
+    return (_vss_degree(p, degree) + 1) * 2 * p.s
+
+
+def phase2_commit_msg_num(p: CostParams) -> int:
+    """One commitment message per (party, member) per epoch — the same
+    n·m fan-out as the share uploads they authenticate."""
+    return p.n * p.m * p.e
+
+
+def phase2_commit_msg_size(p: CostParams, degree: int | None = None) -> int:
+    return phase2_commit_msg_num(p) * vss_commit_elems(p, degree)
+
+
+def twophase_msg_num_vss(p: CostParams) -> int:
+    """Eq. 7 extended with the commitment legs."""
+    return twophase_msg_num(p) + phase2_commit_msg_num(p)
+
+
+def twophase_msg_size_vss(p: CostParams, degree: int | None = None) -> int:
+    """Eq. 8 extended with the commitment legs."""
+    return twophase_msg_size(p) + phase2_commit_msg_size(p, degree)
+
+
+def vss_overhead_factor(p: CostParams, degree: int | None = None) -> float:
+    """Verifiability tax: VSS-extended bytes / plain two-phase bytes."""
+    return twophase_msg_size_vss(p, degree) / twophase_msg_size(p)
+
+
+# -- Per-round committee re-election (Eq. 3-4 run every epoch) ---------------
+#
+# The paper amortizes Phase I over all e epochs; running Alg. 2 every
+# round (evicting blamed/dropped members) multiplies the election legs
+# by e (assuming the common single-subround fill, which b = 10 gives
+# with overwhelming probability — the sim cross-check uses the actual
+# subround count).
+
+
+def phase1_msg_num_reelect(p: CostParams) -> int:
+    return p.e * phase1_msg_num(p)
+
+
+def phase1_msg_size_reelect(p: CostParams) -> int:
+    return p.e * phase1_msg_size(p)
+
+
+def summary_vss(p: CostParams, degree: int | None = None) -> dict:
+    return {
+        "n": p.n, "m": p.m, "e": p.e, "s": p.s, "b": p.b,
+        "degree": _vss_degree(p, degree),
+        "vss_commit_elems": vss_commit_elems(p, degree),
+        "phase2_commit_msg_num": phase2_commit_msg_num(p),
+        "phase2_commit_msg_size": phase2_commit_msg_size(p, degree),
+        "twophase_msg_num_vss": twophase_msg_num_vss(p),
+        "twophase_msg_size_vss": twophase_msg_size_vss(p, degree),
+        "vss_overhead_factor": vss_overhead_factor(p, degree),
+        "phase1_msg_num_reelect": phase1_msg_num_reelect(p),
+        "phase1_msg_size_reelect": phase1_msg_size_reelect(p),
+    }
+
+
 def summary(p: CostParams) -> dict:
     return {
         "n": p.n, "m": p.m, "e": p.e, "s": p.s, "b": p.b,

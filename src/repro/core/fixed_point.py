@@ -47,9 +47,18 @@ class FixedPointConfig:
         return 2 ** 32 if self.algebra == "ring" else MERSENNE_P_INT
 
     def max_parties(self) -> int:
-        """Largest n for which a sum of encoded values cannot wrap."""
+        """Largest n for which a sum of encoded values cannot wrap.
+
+        The positive extreme binds: in the ring the largest decodable
+        positive value is ``2^31 - 1`` (``+2^31`` IS the sign bit — a
+        sum landing exactly there decodes as ``-2^31/scale``, found by
+        the ``tests/test_fixed_point.py`` boundary property), while in
+        the field ``(p-1)/2`` itself decodes positively, so equality is
+        safe there.
+        """
         half = self.modulus // 2
-        return int(half // (self.clip * self.scale))
+        limit = half - 1 if self.algebra == "ring" else half
+        return int(limit // (self.clip * self.scale))
 
     def validate_for_parties(self, n: int) -> None:
         if n > self.max_parties():
@@ -100,8 +109,9 @@ class FixedPointConfig:
         return float(n) * 0.5 / self.scale
 
 
-#: Paper-faithful default: Q15.16, clip 64 — supports up to 2^15/64 = 512
-#: parties in the ring before headroom runs out.
+#: Paper-faithful default: Q15.16, clip 64 — supports up to 511 parties
+#: in the ring before headroom runs out (512 would put the all-+clip
+#: worst case exactly on the 2^31 sign boundary).
 DEFAULT_RING = FixedPointConfig(frac_bits=16, clip=64.0, algebra="ring")
 DEFAULT_FIELD = FixedPointConfig(frac_bits=16, clip=64.0, algebra="field")
 

@@ -114,6 +114,71 @@ def reconstruct(shares, points: tuple[int, ...] | None = None):
     return acc
 
 
+def share_with_commitments(v, m: int, key0, key1,
+                           degree: int | None = None,
+                           counter_base: int = 0):
+    """``share()`` plus Feldman commitments to the same polynomial.
+
+    The commitments re-derive the coefficient streams from the same
+    ``(key, counter_base)`` the shares use, so for every chunk offset
+    ``share_with_commitments(v[off:], ..., counter_base=off//4)``
+    returns exactly the sliced whole-vector result (the §8 streaming
+    invariant extends to the commitments — DESIGN.md §10).
+
+    Returns:
+      (uint32 ``[m, *v.shape]`` shares,
+       uint32 ``[*v.shape, d+1, 2]`` commitments ``h^{a_j}``).
+    """
+    from . import vss
+    d = (m - 1) if degree is None else degree
+    shares = share(v, m, key0, key1, degree=degree,
+                   counter_base=counter_base)
+    commits = vss.feldman_commit(jnp.asarray(v, dtype=jnp.uint32),
+                                 key0, key1, degree=d,
+                                 counter_base=counter_base)
+    return shares, commits
+
+
+def reconstruct_verified(member_rows, agg_commits,
+                         points: tuple[int, ...], degree: int):
+    """Verify member rows against aggregate commitments, reconstruct
+    from the verified subset, and name the failing rows.
+
+    Args:
+      member_rows: uint32 ``[k, D]`` — per-member partial sums at
+        ``points``.
+      agg_commits: uint32 ``[D, degree+1, 2]`` — the product of every
+        included dealer's commitments (``vss.aggregate_commits``).
+      points: Shamir evaluation points of the ``k`` rows.
+      degree: polynomial degree (reconstruction needs ``degree + 1``
+        verified rows).
+
+    Returns:
+      ``(value [D], bad_rows)`` — ``bad_rows`` is the tuple of row
+      indices whose verification failed (empty when all pass).
+
+    Raises:
+      ValueError: fewer than ``degree + 1`` rows verify.
+    """
+    from . import vss
+    member_rows = jnp.asarray(member_rows, dtype=jnp.uint32)
+    k = int(member_rows.shape[0])
+    if len(points) != k:
+        raise ValueError("points/rows length mismatch")
+    ok = [bool(np.asarray(vss.verify_share(member_rows[i], agg_commits,
+                                           points[i])).all())
+          for i in range(k)]
+    good = [i for i in range(k) if ok[i]]
+    bad = tuple(i for i in range(k) if not ok[i])
+    if len(good) < degree + 1:
+        raise ValueError(
+            f"only {len(good)} of {k} member rows verified but "
+            f"reconstruction needs degree+1={degree + 1}")
+    value = reconstruct(member_rows[jnp.asarray(good)],
+                        points=tuple(points[i] for i in good))
+    return value, bad
+
+
 def aggregate_shares(per_party_shares):
     """Committee aggregation: field-sum over parties, then interpolate.
 

@@ -40,12 +40,26 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+#: Deterministic corruption constants of the VSS adversarial battery —
+#: the single definition both injection sites (the sim transport's
+#: ``committee_tamper=`` and the wire worker's ``--tamper`` hook) use,
+#: so the two halves of ``tests/test_vss_adversarial.py`` exercise the
+#: same adversary by construction.
+TAMPER_FLIP_MASK = 0x00FF00FF
+TAMPER_SEED_XOR = 0xBADBAD
+TAMPER_MODES = ("flip", "wrong_poly", "replay")
+
 
 @dataclasses.dataclass
 class RoundOutcome:
     alive: set
     dropped: set
     straggled: set
+    #: committee members caught tampering by the VSS layer this round
+    #: (blamed via commitment verification, evicted from the next
+    #: election) — empty for every honest/crash-only round, so all
+    #: pre-VSS comparisons are unchanged
+    blamed: set = dataclasses.field(default_factory=set)
 
 
 def round_rng(seed: int, round_index: int) -> np.random.RandomState:
@@ -85,7 +99,8 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
                     latency_s: dict[int, float] | None = None,
                     committee: Sequence[int] | None = None,
                     reconstruct_threshold: int | None = None,
-                    resurrect: bool = True) -> RoundOutcome:
+                    resurrect: bool = True,
+                    blamed: Iterable[int] = ()) -> RoundOutcome:
     """Fold *observed* fault sets into a quorum-checked ``RoundOutcome``.
 
     The shared tail of the fault model: ``apply_faults`` feeds it the
@@ -103,24 +118,47 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
         (``resurrect=True``); on a real wire a dead TCP peer cannot be
         revived, so the coordinator passes ``False`` and a
         sub-threshold committee raises instead.
+      blamed: committee members the VSS layer caught tampering
+        (commitment verification failed on their partial sums).  A
+        blamed member is out of the round like a dropped one — its row
+        is excluded from reconstruction — but it is *never*
+        resurrected (it is malicious, not slow) and it is reported in
+        its own ``RoundOutcome.blamed`` set so the driver evicts it
+        from the next election.
     """
     latency_s = latency_s or {}
-    dropped = set(dropped) & set(members)
-    straggled = set(straggled) & set(members) - dropped
-    alive = set(members) - dropped - straggled
+    blamed = set(blamed) & set(members)
+    dropped = set(dropped) & set(members) - blamed
+    straggled = set(straggled) & set(members) - dropped - blamed
+    alive = set(members) - dropped - straggled - blamed
 
     if committee is not None and reconstruct_threshold is not None:
+        # blamed members are barred from resurrection by shrinking the
+        # committee the quorum logic may draw from; the threshold is
+        # unchanged (reconstruction still needs degree+1 honest rows)
+        com = [w for w in committee if w not in blamed]
         alive, dropped, straggled = _enforce_committee_quorum(
-            alive, dropped, straggled, members, latency_s,
-            committee, reconstruct_threshold, resurrect=resurrect)
+            alive, dropped, straggled, set(members) - blamed, latency_s,
+            com, reconstruct_threshold, resurrect=resurrect)
 
     if not alive:
-        # quorum floor: never lose the round entirely; keep fastest party
-        fastest = min(members, key=lambda i: latency_s.get(i, 0.0))
+        # quorum floor: never lose the round entirely; keep the fastest
+        # non-blamed party.  A tamperer must never carry the round
+        # alone — if every member is blamed there is nobody honest
+        # left to resurrect and the round must fail loudly rather than
+        # seat a known-malicious survivor (and silently erase its
+        # blame on the way).
+        pool = set(members) - blamed
+        if not pool:
+            raise ValueError(
+                f"every member of {sorted(members)} was blamed by the "
+                "VSS layer — no honest party can carry the round")
+        fastest = min(pool, key=lambda i: latency_s.get(i, 0.0))
         alive = {fastest}
         dropped.discard(fastest)
         straggled.discard(fastest)
-    return RoundOutcome(alive=alive, dropped=dropped, straggled=straggled)
+    return RoundOutcome(alive=alive, dropped=dropped, straggled=straggled,
+                        blamed=blamed)
 
 
 def _enforce_committee_quorum(alive, dropped, straggled, members,

@@ -57,6 +57,8 @@ class FLSimulation:
                  compression: CompressionConfig | None = None,
                  backend: str = "sim",
                  wire_kwargs: dict | None = None,
+                 vss: bool = False,
+                 reelect_each_round: bool = False,
                  **unknown):
         if unknown:
             # catch typos (chunk_elms, compresion, ...) loudly instead
@@ -103,7 +105,12 @@ class FLSimulation:
         self.transports: dict[str, Transport] = {
             "plain": PlainTransport(n, m=m, b=b, **kw),
             "p2p": P2PTransport(n, m=m, b=b, **kw),
-            "two_phase": TwoPhaseTransport(n, m=m, b=b, **kw),
+            # the malicious-security knobs are two-phase-only: VSS
+            # commitments verify committee partial sums, and per-round
+            # re-election is the committee's Phase I (DESIGN.md §10)
+            "two_phase": TwoPhaseTransport(n, m=m, b=b, vss=vss,
+                                           reelect_each_round=
+                                           reelect_each_round, **kw),
         }
         if backend == "wire":
             # real multi-process deployment for the paper's protocol;
@@ -116,7 +123,9 @@ class FLSimulation:
             self.transports["two_phase"] = WireTransport(
                 n, m=m, b=b, scheme=scheme, seed=seed, net=self.net,
                 fp=fp, shamir_degree=shamir_degree,
-                chunk_elems=chunk_elems, **(wire_kwargs or {}))
+                chunk_elems=chunk_elems, vss=vss,
+                reelect_each_round=reelect_each_round,
+                **(wire_kwargs or {}))
 
     @property
     def committee(self):
@@ -157,15 +166,19 @@ class FLSimulation:
 
     def aggregate_two_phase(self, flats: list,
                             alive: set[int] | None = None,
-                            committee_dropout=()):
+                            committee_dropout=(),
+                            committee_tamper: dict | None = None):
         """Alg. 3: share upload -> committee chain-sum -> broadcast."""
         live = sorted(alive) if alive is not None else list(range(self.n))
-        # committee_dropout is a *simulated* fault injection; on the
-        # wire backend members drop by actually dying, so the kwarg is
-        # only forwarded when used (sim transports) or non-empty (loud
-        # TypeError on the wire instead of silently ignoring the fault)
+        # committee_dropout/committee_tamper are *simulated* fault
+        # injections; on the wire backend members drop/tamper by
+        # actually doing it, so the kwargs are only forwarded when
+        # non-empty (loud TypeError on the wire instead of silently
+        # ignoring the fault)
         kw = ({"committee_dropout": committee_dropout}
               if committee_dropout else {})
+        if committee_tamper:
+            kw["committee_tamper"] = committee_tamper
         mean = self.transports["two_phase"].aggregate(
             [flats[i] for i in live], party_ids=live,
             round_index=self.round, **kw)

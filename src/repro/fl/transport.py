@@ -39,10 +39,13 @@ import abc
 import dataclasses
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import committee as committee_mod
+from repro.fl.faults import (TAMPER_FLIP_MASK, TAMPER_SEED_XOR,
+                             resolve_outcome)
 from repro.core.aggregation import (DEFAULT_CHUNK_ELEMS, SecureAggregator,
                                     _check_chunk_elems)
 from repro.core.compression import (CompressionConfig, compress_topk_batch,
@@ -311,37 +314,93 @@ class TwoPhaseTransport(_SimTransport):
     Committee-member dropouts (``committee_dropout``) are tolerated by
     the Shamir scheme whenever the surviving members still hold
     ``degree+1`` evaluation points — sub-threshold reconstruction.
+
+    Malicious security (``vss=True``, Shamir only — DESIGN.md §10):
+    every party additionally broadcasts Feldman commitments to its
+    round polynomial (``phase2_commit`` counter, (d+1)·2·s elements per
+    party/member pair), member partial sums are batch-verified against
+    the aggregate commitments chunk-by-chunk before reconstruction
+    (``kernels/verify_shares``), failing members are *blamed* (reported
+    in ``last_outcome.blamed``), evicted from future elections, and the
+    round reconstructs from the verified sub-threshold point set.
+    ``committee_tamper={member_id: mode}`` injects the adversary:
+    ``"flip"`` (bit-flipped partial sum), ``"wrong_poly"`` (partial sum
+    from a polynomial nobody committed to), ``"replay"`` (the member's
+    round r−1 partial sum).
+
+    ``reelect_each_round=True`` re-runs Alg. 2 at the start of every
+    aggregation round (seed + round_index — the paper's Algorithm 2 as
+    a *per-epoch* phase), excluding evicted members and down-weighting
+    faulted ones by their reputation.
     """
 
     protocol = "two_phase"
 
-    def __init__(self, n: int, **kw):
+    def __init__(self, n: int, *, vss: bool = False,
+                 reelect_each_round: bool = False, **kw):
         super().__init__(n, **kw)
+        if vss and self.scheme != "shamir":
+            raise ValueError(
+                "verifiable secret sharing needs the Shamir scheme "
+                "(commitments verify polynomial evaluations); "
+                f"got scheme={self.scheme!r}")
+        if vss and self.compression is not None \
+                and self.compression.enabled:
+            raise ValueError(
+                "vss=True with top-k compression is not supported yet "
+                "— commitments would bind the densified update")
+        self.vss = vss
+        self.reelect_each_round = reelect_each_round
         self.committee: tuple[int, ...] | None = None
+        #: members caught tampering (never eligible again)
+        self.evicted: set[int] = set()
+        #: per-party election weight (1.0 default; halved per fault)
+        self.reputation: dict[int, float] = {}
+        self.last_outcome = None
+        self._elected_round: int | None = None
         self.agg = SecureAggregator(scheme=self.scheme, m=self.m,
                                     fp=self.fp,
                                     shamir_degree=self.shamir_degree,
                                     kernel_backend=self.kernel_backend)
 
+    @property
+    def degree(self) -> int:
+        return (self.agg.shamir_degree
+                if self.agg.shamir_degree is not None else self.m - 1)
+
     # -- Phase I ----------------------------------------------------------
 
     def elect(self, round_index: int = 0) -> tuple[int, ...]:
         """Alg. 2 with counted messages (P2P MPC on b-vectors)."""
-        result = committee_mod.elect(self.n, self.m, self.b,
-                                     self.seed + round_index)
+        result = committee_mod.elect(
+            self.n, self.m, self.b, self.seed + round_index,
+            exclude=self.evicted,
+            reputation=self.reputation or None)
         # wire accounting: each election round is one P2P additive MPC
         # exchange of b-element messages (shares + partial sums)
         self.net.send_batch(result.rounds * 2 * self.n * (self.n - 1),
                             self.b, "phase1")
         self.committee = result.committee
+        self._elected_round = round_index
         return result.committee
 
     # -- Phase II ---------------------------------------------------------
 
     def aggregate(self, flats, party_ids=None, *, round_index: int = 0,
-                  committee_dropout: Sequence[int] = ()):
-        if self.committee is None:
+                  committee_dropout: Sequence[int] = (),
+                  committee_tamper: dict | None = None):
+        if self.reelect_each_round \
+                and self._elected_round != round_index:
+            # per-epoch re-election: Alg. 2 re-run with evicted members
+            # excluded and reputation-weighted scoring
             self.elect(round_index)
+        elif self.committee is None:
+            self.elect(round_index)
+        if committee_tamper and not self.vss:
+            raise ValueError(
+                "committee_tamper needs vss=True — without commitments "
+                "a tampered partial sum is undetectable and the round "
+                "would silently return garbage")
         flats = self._as_batch(flats)
         l, s = int(flats.shape[0]), int(flats.shape[1])
         ids = self._ids(party_ids, l)
@@ -362,17 +421,28 @@ class TwoPhaseTransport(_SimTransport):
                     "additive sharing cannot reconstruct with committee "
                     f"members {sorted(dropped)} down — use scheme='shamir' "
                     "with degree < m-1 for committee fault tolerance")
-            degree = (self.agg.shamir_degree
-                      if self.agg.shamir_degree is not None else self.m - 1)
-            if m_live < degree + 1:
+            if m_live < self.degree + 1:
                 raise ValueError(
                     f"only {m_live} committee members alive but Shamir "
-                    f"degree {degree} needs {degree + 1} shares")
+                    f"degree {self.degree} needs {self.degree + 1} shares")
+        tamper = dict(committee_tamper or {})
+        if tamper:
+            bad_targets = set(tamper) - set(com) | (set(tamper) & dropped)
+            if bad_targets:
+                raise ValueError(
+                    f"committee_tamper targets {sorted(bad_targets)} that "
+                    f"are not live members of committee {com}")
 
         flats, wire_s = self._compress(flats, ids)
         # 1) every live party uploads one (possibly sparsified) share to
         #    each live member — the only leg top-k shrinks (Eq. 6 topk)
         self.net.send_batch(l * m_live, wire_s, "phase2_upload")
+        if self.vss:
+            # 1b) each party broadcasts its Feldman commitments to each
+            #     live member: (degree+1) coefficients x 2 limbs per
+            #     element (the Eq. 5-6 extension, costmodel cross-check)
+            self.net.send_batch(l * m_live, (self.degree + 1) * 2 * s,
+                                "phase2_commit")
         # 2) members chain-exchange partial sums (m−1, Eq. 5 middle
         #    term); sums over differently-supported sparse updates live
         #    on the union support -> dense size s
@@ -380,11 +450,147 @@ class TwoPhaseTransport(_SimTransport):
         # 3) committee broadcasts the dense aggregate G to every party
         self.net.send_batch(self.n, s, "phase2_broadcast")
 
-        if m_live == self.m:
-            return self._secure_mean(self.agg, flats, ids, round_index)
+        if not self.vss:
+            self._finish_outcome(ids, dropped, set())
+            if m_live == self.m:
+                return self._secure_mean(self.agg, flats, ids, round_index)
+            points = tuple(w + 1 for w in live_pos)
+            return self._secure_mean(self.agg, flats, ids, round_index,
+                                     member_rows=live_pos, points=points)
+        return self._vss_aggregate(flats, ids, round_index, live_pos,
+                                   dropped, tamper)
+
+    # -- malicious-secure epilogue (verify -> blame -> reconstruct) -------
+
+    def _member_sums(self, flats, ids, round_index, d):
+        """[m, d] member sums, element-chunked on the §8 boundaries."""
+        chunk = self.chunk_elems if self.chunk_elems is not None else d
+        sums = [self.agg.sum_shares_batch(
+                    flats[:, e_lo:min(e_lo + chunk, d)], seed=self.seed,
+                    party_ids=ids, round_index=round_index,
+                    chunk=self.chunk, elem_base=e_lo)
+                for e_lo in range(0, d, chunk)]
+        return jnp.concatenate(sums, axis=-1) if len(sums) > 1 else sums[0]
+
+    def _aggregate_commits(self, flats, ids, round_index, e_lo, e_hi):
+        """Aggregate Feldman commitments for elements [e_lo, e_hi).
+
+        Re-derives each dealer's coefficient streams exactly as
+        ``make_shares_batch`` does (same key derivation, same
+        ``counter_base`` chunk offset) and multiplies the commitments
+        pointwise — what every member can compute locally from the
+        dealers' broadcasts.
+        """
+        from repro.core import philox, vss
+        stream_hi = (round_index << 24) >> 32
+        lo_words = [((round_index << 24) & 0xFFFFFFFF) | int(i)
+                    for i in ids]
+
+        def _one(block, lo):
+            k0, k1 = philox.derive_key(self.seed, (lo, stream_hi))
+            return vss.feldman_commit(self.agg.encode(block), k0, k1,
+                                      degree=self.degree,
+                                      counter_base=e_lo // 4)
+
+        stacks = jax.vmap(_one)(flats[:, e_lo:e_hi],
+                                jnp.asarray(lo_words, jnp.uint32))
+        return vss.aggregate_commits(stacks)
+
+    def _tampered_rows(self, member_sums, flats, ids, round_index, d,
+                       tamper):
+        """Apply the injected member corruptions to their sum rows."""
+        from repro.core import philox
+        from repro.core.field import to_field
+        com = self.committee
+        rows = member_sums
+        for member, mode in tamper.items():
+            w = com.index(int(member))
+            if mode == "flip":
+                bad = rows[w] ^ jnp.uint32(TAMPER_FLIP_MASK)
+            elif mode == "wrong_poly":
+                k0, k1 = philox.derive_key(
+                    self.seed ^ TAMPER_SEED_XOR,
+                    (round_index << 24) | int(member))
+                bad = to_field(philox.random_bits(d, k0, k1))
+            elif mode == "replay":
+                if round_index == 0:
+                    raise ValueError(
+                        "replay tamper needs a previous round (the "
+                        "member replays its round r-1 partial sum)")
+                bad = self._member_sums(flats, ids, round_index - 1, d)[w]
+            else:
+                raise ValueError(
+                    f"unknown tamper mode {mode!r}; expected "
+                    "flip | wrong_poly | replay")
+            rows = rows.at[w].set(bad)
+        return rows
+
+    def _finish_outcome(self, ids, dropped, blamed):
+        """Fold the observed fault/blame sets through the shared quorum
+        brain (same call shape as the wire coordinator) and update the
+        eviction/reputation state the next election reads."""
+        members = set(ids)
+        com_in = [w for w in self.committee if w in members]
+        self.last_outcome = resolve_outcome(
+            members, set(dropped) & members, set(),
+            committee=com_in,
+            reconstruct_threshold=(
+                self.degree + 1 if self.scheme == "shamir" else self.m)
+            if set(self.committee) <= members else None,
+            resurrect=False, blamed=blamed)
+        for w in blamed:
+            self.evicted.add(int(w))
+            self.reputation[int(w)] = 0.0
+        if self.reelect_each_round:
+            # reputation only steers the per-round re-election; leaving
+            # it untouched otherwise keeps the historical single-shot
+            # election on the exact integer scoring path
+            for w in set(dropped):
+                self.reputation[int(w)] = \
+                    self.reputation.get(int(w), 1.0) * 0.5
+
+    def _vss_aggregate(self, flats, ids, round_index, live_pos, dropped,
+                       tamper):
+        """Verify member rows chunk-by-chunk, blame, reconstruct."""
+        from repro.kernels.verify_shares import verify_shares
+        l, d = int(flats.shape[0]), int(flats.shape[1])
+        com = self.committee
+        member_sums = self._member_sums(flats, ids, round_index, d)
+        rows = self._tampered_rows(member_sums, flats, ids, round_index,
+                                   d, tamper)
+        live_rows = rows[jnp.asarray(live_pos)]
         points = tuple(w + 1 for w in live_pos)
-        return self._secure_mean(self.agg, flats, ids, round_index,
-                                 member_rows=live_pos, points=points)
+
+        # batched commitment verification riding the §8 element chunks:
+        # every chunk re-derives its commitment slice with the same
+        # counter_base the share stream used, so chunked verification
+        # is bit-identical to whole-vector verification
+        chunk = self.chunk_elems if self.chunk_elems is not None else d
+        row_ok = np.ones(len(live_pos), dtype=bool)
+        for e_lo in range(0, d, chunk):
+            e_hi = min(e_lo + chunk, d)
+            agg_commits = self._aggregate_commits(flats, ids, round_index,
+                                                  e_lo, e_hi)
+            ok = verify_shares(live_rows[:, e_lo:e_hi], agg_commits,
+                               points,
+                               forced=self.kernel_backend)
+            row_ok &= np.asarray(ok).all(axis=1)
+
+        blamed = {com[live_pos[i]] for i in range(len(live_pos))
+                  if not row_ok[i]}
+        good = [i for i in range(len(live_pos)) if row_ok[i]]
+        if len(good) < self.degree + 1:
+            raise ValueError(
+                f"only {len(good)} committee rows verified but Shamir "
+                f"degree {self.degree} needs {self.degree + 1}; blamed "
+                f"members: {sorted(blamed)}")
+        self._finish_outcome(ids, dropped, blamed)
+
+        good_points = tuple(points[i] for i in good)
+        good_rows = live_rows[jnp.asarray(good)]
+        if len(good) == self.m:
+            good_points = None
+        return self.agg.reconstruct_mean(good_rows, l, points=good_points)
 
 
 class SPMDTransport(Transport):

@@ -1,0 +1,93 @@
+"""Public wrapper for the batched Feldman verification kernel.
+
+Handles arbitrary flat lengths (identity-padding so the pad region
+always verifies), converts the element-major wire commitment layout
+``[D, c, 2]`` into the plane-major tiles the kernel wants, and routes
+the backend decision through ``kernels.dispatch`` (DESIGN.md §7) like
+every other family.  ``hot_path=True`` default: verification sits on
+the protocol round path, so off-TPU auto resolution prefers the jnp
+oracle (interpret mode is for the kernel differential tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.share_gen.ops import LANES
+from .kernel import verify_shares_pallas
+from .ref import verify_shares_ref
+
+
+def _pad_planes(rows, commits_em, block_rows: int):
+    """Tile rows and element-major commits; identity-pad the tail.
+
+    Padded share elements are 0 and padded commitments are the group
+    identity ``(0, 1)`` — the zero polynomial, whose Feldman equation
+    holds (``h^0 = 1 = Π 1^x``) — so the pad region verifies and an
+    all-true row means exactly "every real element verified".
+    """
+    k, d = rows.shape
+    c = commits_em.shape[-2]
+    tile = LANES * block_rows
+    padded = -(-d // tile) * tile
+    rows_t = jnp.pad(rows, ((0, 0), (0, padded - d))
+                     ).reshape(k, -1, LANES)
+    hi = jnp.pad(commits_em[..., 0], ((0, padded - d), (0, 0)))
+    lo = jnp.pad(commits_em[..., 1], ((0, padded - d), (0, 0)),
+                 constant_values=1)
+    # [D, c] planes -> plane-major tiles [c, 2, R, 128]
+    planes = jnp.stack([hi.T, lo.T], axis=1)          # [c, 2, D]
+    return rows_t, planes.reshape(c, 2, -1, LANES), d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("points", "block_rows", "use_ref",
+                                    "interpret"))
+def _verify_shares_jit(rows, commits_em, points, block_rows, use_ref,
+                       interpret):
+    rows_t, planes, d = _pad_planes(rows, commits_em, block_rows)
+    if use_ref:
+        ok = verify_shares_ref(rows_t, planes, points)
+    else:
+        ok = verify_shares_pallas(rows_t, planes, points,
+                                  block_rows=block_rows,
+                                  interpret=interpret)
+    return ok.reshape(rows.shape[0], -1)[:, :d]
+
+
+def verify_shares(rows, commits, points: tuple[int, ...],
+                  block_rows: int = 8, use_ref: bool = False,
+                  interpret: bool | None = None, hot_path: bool = True,
+                  forced: str | None = None):
+    """Batch-verify ``k`` rows of shares/partial sums.
+
+    Args:
+      rows: uint32 ``[k, D]`` — field elements at ``points[i]`` per row
+        (a dealer's share vector, or a member's partial sum).
+      commits: uint32 ``[D, c, 2]`` element-major (aggregate)
+        commitments, ``c = degree + 1``.
+      points: the ``k`` Shamir evaluation points.
+
+    Returns:
+      uint32 ``[k, D]`` — 1 where the Feldman equation holds.
+    """
+    rows = jnp.asarray(rows, dtype=jnp.uint32)
+    commits = jnp.asarray(commits, dtype=jnp.uint32)
+    if rows.ndim != 2:
+        raise ValueError(f"rows must be [k, D], got {rows.shape}")
+    if commits.shape != (rows.shape[1], commits.shape[1], 2):
+        raise ValueError(
+            f"commits must be [D, c, 2] with D={rows.shape[1]}, got "
+            f"{commits.shape}")
+    if rows.shape[0] != len(points):
+        raise ValueError(
+            f"{rows.shape[0]} rows but {len(points)} points")
+    dec = dispatch.decide(use_ref, interpret, hot_path=hot_path,
+                          forced=forced)
+    return _verify_shares_jit(rows, commits,
+                              tuple(int(p) for p in points), block_rows,
+                              dec.use_ref, dec.interpret)

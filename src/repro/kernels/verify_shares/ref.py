@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the batched Feldman verification kernel.
+
+Contract (bit-exact for ``kernel.py``): given ``k`` share/partial-sum
+rows ``[k, R, 128]`` (uint32 field elements) and plane-major aggregate
+commitments ``[c, 2, R, 128]`` (``c = degree+1``; limb planes hi/lo),
+emit ``ok [k, R, 128]`` uint32 with 1 where
+
+    h^{row_i[e]} == Π_j C_j[e]^{points[i]^j}      (mod q)
+
+holds per element.  The group arithmetic is the exact jnp sequence of
+``core.vss`` (two-limb Crandall F_q), so kernel and oracle agree by
+construction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import vss
+
+
+def _verify_row_planes(row, c_hi, c_lo, point: int):
+    """One row [R,128] against planes [c, R, 128]; uint32 ok-mask."""
+    k = c_hi.shape[0]
+    lhs_hi, lhs_lo = vss.gpow(row)
+    acc = (c_hi[k - 1], c_lo[k - 1])
+    for j in range(k - 2, -1, -1):
+        acc = vss.qpow_scalar(acc, point)
+        acc = vss.qmul(acc, (c_hi[j], c_lo[j]))
+    return ((lhs_hi == acc[0]) & (lhs_lo == acc[1])).astype(jnp.uint32)
+
+
+def verify_shares_ref(rows, commits, points: tuple[int, ...]):
+    """uint32 [k,R,128] rows + [c,2,R,128] commits -> uint32 [k,R,128]."""
+    rows = jnp.asarray(rows, dtype=jnp.uint32)
+    commits = jnp.asarray(commits, dtype=jnp.uint32)
+    assert rows.ndim == 3 and rows.shape[2] == 128, rows.shape
+    assert commits.ndim == 4 and commits.shape[1] == 2, commits.shape
+    assert rows.shape[0] == len(points)
+    c_hi, c_lo = commits[:, 0], commits[:, 1]
+    return jnp.stack([
+        _verify_row_planes(rows[i], c_hi, c_lo, int(points[i]))
+        for i in range(rows.shape[0])
+    ], axis=0)

@@ -95,20 +95,28 @@ def iter_chunks(arr: np.ndarray, chunk_elems: int):
 
 def chunk_frames(msg_type: int, arr: np.ndarray, *, round_index: int,
                  phase: int, scheme: int, dtype_code: int, src: int,
-                 dst: int, chunk_elems: int):
+                 dst: int, chunk_elems: int, chunk_base: int = 0,
+                 total_elems: int | None = None):
     """Frame a logical message: one chunked ``Frame`` per slice.
 
     The single implementation of the chunk-send protocol (chunk_off /
     total_elems sequencing) — coordinator and party workers both frame
     through here, so their streams cannot drift apart.
+
+    ``chunk_base``/``total_elems``: senders that stream a logical
+    message incrementally (e.g. per-element-chunk VSS commitment
+    blocks) pass the block's element offset inside the whole message
+    and the whole-message length; the default frames ``arr`` as the
+    complete message.
     """
     from .wire import Frame
-    total = int(arr.shape[0])
+    total = int(arr.shape[0]) if total_elems is None else int(total_elems)
     for off, chunk in iter_chunks(arr, chunk_elems):
         _, payload = encode_array(chunk)
         yield Frame(msg_type, round=round_index, phase=phase,
                     scheme=scheme, dtype=dtype_code, src=src, dst=dst,
-                    chunk_off=off, total_elems=total, payload=payload)
+                    chunk_off=chunk_base + off, total_elems=total,
+                    payload=payload)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,14 @@ class WireConfig:
     #: per-stage straggler deadline (None disables; EOF dropout
     #: detection is always on)
     deadline_s: float | None = 30.0
+    #: Feldman verifiable secret sharing (Shamir only): dealers
+    #: broadcast commitments, members verify shares before summing,
+    #: the final member verifies partial-sum rows and blames tampering
+    #: members before reconstruction (DESIGN.md §10)
+    vss: bool = False
+    #: re-run Alg. 2 at the start of every aggregation round, evicting
+    #: blamed members and down-weighting faulted ones
+    reelect_each_round: bool = False
 
     def __post_init__(self):
         _check_chunk_elems(self.chunk_elems)
@@ -47,6 +55,10 @@ class WireConfig:
             raise ValueError(
                 f"chunk_elems={self.chunk_elems} exceeds the "
                 f"{MAX_PAYLOAD_BYTES}-byte frame payload bound")
+        if self.vss and self.scheme != "shamir":
+            raise ValueError(
+                "vss=True needs scheme='shamir' (Feldman commitments "
+                "verify polynomial evaluations)")
 
     def fp(self) -> FixedPointConfig:
         return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
@@ -57,13 +69,21 @@ class WireConfig:
                                 fp=self.fp(),
                                 shamir_degree=self.shamir_degree)
 
+    def degree(self) -> int:
+        """Shamir polynomial degree (the paper's m-1 default)."""
+        return (self.shamir_degree if self.shamir_degree is not None
+                else self.m - 1)
+
     def reconstruct_threshold(self) -> int:
         """Live committee members a round needs to reconstruct."""
         if self.scheme == "shamir":
-            degree = (self.shamir_degree if self.shamir_degree is not None
-                      else self.m - 1)
-            return degree + 1
+            return self.degree() + 1
         return self.m
+
+    def commit_elems(self, d: int) -> int:
+        """uint32 elements of one dealer's commitment message
+        (element-major ``[d, degree+1, 2]`` — ``vss.commit_elems``)."""
+        return d * (self.degree() + 1) * 2
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -83,7 +103,9 @@ class WireConfig:
                                 fp: FixedPointConfig | None = None,
                                 shamir_degree: int | None = None,
                                 chunk_elems: int | None = None,
-                                deadline_s: float | None = 30.0
+                                deadline_s: float | None = 30.0,
+                                vss: bool = False,
+                                reelect_each_round: bool = False
                                 ) -> "WireConfig":
         """Build from the simulation transports' kwarg vocabulary."""
         if fp is None:
@@ -96,4 +118,5 @@ class WireConfig:
                    clip=fp.clip, algebra=fp.algebra,
                    chunk_elems=(DEFAULT_CHUNK_ELEMS if chunk_elems is None
                                 else chunk_elems),
-                   deadline_s=deadline_s)
+                   deadline_s=deadline_s, vss=vss,
+                   reelect_each_round=reelect_each_round)

@@ -78,6 +78,15 @@ class Coordinator:
         self.log = log or (lambda msg: None)
         self.committee: tuple[int, ...] | None = None
         self.election_rounds: int | None = None
+        #: members caught tampering by the VSS layer (never re-elected)
+        self.evicted: set[int] = set()
+        #: per-party election weight for the per-round re-election
+        self.reputation: dict[int, float] = {}
+        self._elected_round: int | None = None
+        self._round_blamed: set[int] = set()
+        #: the only party whose member-BLAME is accepted this round
+        #: (the final live member — it runs the row verification)
+        self._verifier: int | None = None
         self.raw_bytes_in = 0
         self.raw_bytes_out = 0
         self._server: asyncio.Server | None = None
@@ -213,6 +222,8 @@ class Coordinator:
             self._meter.feed(frame)
             if done is not None:
                 self._result_mean = done
+        elif frame.msg_type == MsgType.BLAME:
+            self._on_blame(conn.pid, frame)
         elif frame.msg_type == MsgType.ERROR:
             info = codec.decode_json(frame.payload)
             self._party_error = (f"party {conn.pid} failed: "
@@ -223,6 +234,61 @@ class Coordinator:
                 f"unexpected {frame.type_name()} addressed to the "
                 "coordinator")
         self._pulse()
+
+    def _on_blame(self, pid: int, frame: Frame) -> None:
+        """Validate + fold a BLAME report.
+
+        Blame is powerful (it evicts parties from every future
+        election), so the coordinator accepts it only from the party
+        the protocol designates as the verifier of that evidence —
+        anything else is a typed ``ProtocolError`` that costs the
+        *reporter* its connection, never the accused: a single
+        malicious worker must not be able to brick the federation by
+        naming honest parties.
+        """
+        report = codec.decode_json(frame.payload)
+        try:
+            kind = report.get("kind")
+            blamed = {int(w) for w in report.get("blamed", [])}
+        except (TypeError, ValueError, AttributeError) as e:
+            raise ProtocolError(
+                f"malformed BLAME payload from party {pid}: {e}")
+        committee = set(self.committee or ())
+        if kind not in ("member", "dealer") or not blamed:
+            raise ProtocolError(
+                f"BLAME from party {pid} with kind={kind!r} and "
+                f"blamed={sorted(blamed)}")
+        if not blamed <= set(range(self.cfg.n)):
+            raise ProtocolError(
+                f"BLAME from party {pid} names out-of-range parties "
+                f"{sorted(blamed - set(range(self.cfg.n)))}")
+        if kind == "member":
+            # only the round's designated verifier (the final live
+            # member, which holds every partial-sum row) may blame
+            # members, and only committee members can be blamed
+            if pid != self._verifier:
+                raise ProtocolError(
+                    f"party {pid} sent a member BLAME but the round's "
+                    f"verifier is {self._verifier}")
+            if not blamed <= committee:
+                raise ProtocolError(
+                    f"member BLAME names non-committee parties "
+                    f"{sorted(blamed - committee)}")
+            self._round_blamed |= blamed
+            self.log(f"member {pid} blames members {sorted(blamed)} "
+                     f"(round {frame.round})")
+        else:
+            # a dealer whose share fails its own commitments is
+            # protocol-fatal: members cannot unilaterally shrink the
+            # included set, so the round aborts loudly.  Any committee
+            # member may report it (each verifies its own shares).
+            if pid not in committee:
+                raise ProtocolError(
+                    f"non-member party {pid} sent a dealer BLAME")
+            self._party_error = (
+                f"member {pid} blames dealer(s) {sorted(blamed)}: "
+                "share verification failed before the member sum")
+            self.log(self._party_error)
 
     def _note_completion(self, frame: Frame) -> None:
         if frame.msg_type == MsgType.SHARE_UPLOAD:
@@ -325,6 +391,14 @@ class Coordinator:
                 f"{len(live)} (Alg. 2 elects over the full membership)")
         self._meter = MessageMeter(self.net, round_index=round_index)
         subround = 0
+        # eviction/reputation state rides the ELECT body so every party
+        # applies the identical filter/weighting (unanimity check below)
+        elect_state = {}
+        if self.evicted:
+            elect_state["exclude"] = sorted(self.evicted)
+        if self.reputation:
+            elect_state["weights"] = {str(k): v for k, v
+                                      in sorted(self.reputation.items())}
         try:
             while True:
                 self._committee_reports = {}
@@ -332,7 +406,8 @@ class Coordinator:
                 for pid in live:
                     await self._send(pid, Frame(
                         MsgType.ELECT, round=round_index, dst=pid,
-                        payload=codec.encode_json({"subround": subround})))
+                        payload=codec.encode_json(
+                            {"subround": subround, **elect_state})))
 
                 def reported(mon=mon):
                     for pid in live:
@@ -370,7 +445,9 @@ class Coordinator:
         # conformance cross-check: the wire election must agree with the
         # in-sim oracle (same seeds => same draws => same committee)
         oracle = committee_mod.elect(cfg.n, cfg.m, cfg.b,
-                                     cfg.seed + round_index)
+                                     cfg.seed + round_index,
+                                     exclude=self.evicted,
+                                     reputation=self.reputation or None)
         if tuple(committee) != oracle.committee:
             raise ProtocolError(
                 f"wire election produced {committee}, oracle says "
@@ -381,6 +458,7 @@ class Coordinator:
                 f"{oracle.rounds}")
         self.committee = tuple(committee)
         self.election_rounds = subround
+        self._elected_round = round_index
         self.log(f"committee elected: {self.committee} "
                  f"({subround} subround(s))")
         return self.committee
@@ -391,7 +469,12 @@ class Coordinator:
                         party_ids: list[int]):
         """One aggregation round; returns ``(mean [d], RoundOutcome)``."""
         cfg = self.cfg
-        if self.committee is None:
+        if self.committee is None or (cfg.reelect_each_round
+                                      and self._elected_round
+                                      != round_index):
+            # per-epoch re-election (Alg. 2 re-run): evicted members
+            # are excluded, faulted ones reputation-weighted — mirrors
+            # TwoPhaseTransport.reelect_each_round exactly
             await self.elect(round_index)
         flats = np.ascontiguousarray(np.asarray(flats, dtype=np.float32))
         ids = [int(i) for i in party_ids]
@@ -409,6 +492,8 @@ class Coordinator:
 
         members = set(ids)
         self._round_dropped = set()
+        self._round_blamed = set()
+        self._verifier = None
         self._ready = set()
         self._upload_done = {}
         self._result_mean = None
@@ -484,6 +569,10 @@ class Coordinator:
                         and w in self._conns and self._conns[w].alive]
         if not live_members:
             raise WireTimeoutError("no live committee members")
+        # the final live member assembles every partial-sum row, so it
+        # is the round's designated verifier — the only party whose
+        # member-BLAME reports are accepted (see _on_blame)
+        self._verifier = live_members[-1]
         included = sorted((pid for pid in participants
                            if self._upload_done.get(pid, 0) == cfg.m),
                           key=row.get)
@@ -509,6 +598,28 @@ class Coordinator:
                 f"{sorted(chain_mon.dropped)} straggled="
                 f"{sorted(chain_mon.straggled)}")
         mean = self._result_mean
+
+        if self._round_blamed:
+            # the verifier's BLAME landed before its RESULT (same
+            # socket, FIFO): re-fold the outcome with the blamed set —
+            # blamed members are out of the round, never resurrected,
+            # and evicted from every future election
+            blamed = self._round_blamed & members
+            outcome = resolve_outcome(
+                members, dropped, straggled,
+                committee=[w for w in self.committee if w in members],
+                reconstruct_threshold=(cfg.reconstruct_threshold()
+                                       if set(self.committee) <= members
+                                       else None),
+                resurrect=False, blamed=blamed)
+        for w in self._round_blamed:
+            self.evicted.add(w)
+            self.reputation[w] = 0.0
+        if cfg.reelect_each_round:
+            # reputation only steers the per-round re-election (mirrors
+            # TwoPhaseTransport._finish_outcome)
+            for w in outcome.dropped:
+                self.reputation[w] = self.reputation.get(w, 1.0) * 0.5
 
         # 6) broadcast: member w serves parties i ≡ w−1 (mod m)
         #    (Alg. 3 l.22); the paper counts all n broadcasts — dead

@@ -24,11 +24,25 @@ with the same ``(seed, party, round)`` stream derivation — which is
 why a wire round is bit-identical to ``TwoPhaseTransport`` in-sim
 (pinned by ``tests/test_wire_e2e.py``).
 
-Test hook: ``--die-after-upload R`` makes the process exit abruptly
+Malicious security (``cfg.vss`` — DESIGN.md §10): dealers additionally
+broadcast Feldman commitments to their round polynomial (COMMITMENT
+frames, chunked on the same element boundaries as the share stream),
+members batch-verify every included dealer's share against its
+commitments *before* folding the member sum, and the final member
+verifies every partial-sum row against the aggregate commitments
+before reconstructing — a row that fails is excluded and its member
+reported in a BLAME frame, so a tampering member is caught instead of
+corrupting the round.
+
+Test hooks: ``--die-after-upload R`` makes the process exit abruptly
 (``os._exit``) right after sending its round-``R`` share uploads —
 before its member READY — which is how the dropout tests kill a
 committee member mid-Phase-II deterministically (the coordinator sees
-EOF, no wall-clock races).
+EOF, no wall-clock races).  ``--tamper MODE --tamper-round R`` makes a
+*committee member* corrupt its round-``R`` partial sum (``flip`` =
+bit-flipped row, ``wrong_poly`` = a row from a polynomial nobody
+committed to, ``replay`` = its round ``R-1`` row) — the adversary of
+the VSS battery (``tests/test_vss_adversarial.py``).
 """
 
 from __future__ import annotations
@@ -44,8 +58,13 @@ import numpy as np
 
 from repro.core import committee as committee_mod
 from repro.core import philox
+from repro.core import vss
 from repro.core.additive import share as additive_share
 from repro.core.field import MERSENNE_P_INT
+# the sim and the wire inject the same adversary: single definition of
+# the corruption constants in fl.faults (numpy-only, cycle-free)
+from repro.fl.faults import (TAMPER_FLIP_MASK, TAMPER_MODES,
+                             TAMPER_SEED_XOR)
 
 from . import codec
 from .config import WireConfig
@@ -60,13 +79,23 @@ class _Shutdown(Exception):
     """Coordinator asked us to exit (clean)."""
 
 
+
+
 class PartyWorker:
     def __init__(self, host: str, port: int, party_id: int, *,
-                 die_after_upload: int | None = None, log=None):
+                 die_after_upload: int | None = None,
+                 tamper: str | None = None,
+                 tamper_round: int | None = None, log=None):
         self.host = host
         self.port = port
         self.pid = int(party_id)
         self.die_after_upload = die_after_upload
+        if tamper is not None and tamper not in TAMPER_MODES:
+            raise ValueError(
+                f"unknown tamper mode {tamper!r}; expected one of "
+                f"{TAMPER_MODES}")
+        self.tamper = tamper
+        self.tamper_round = tamper_round
         self.log = log or (lambda msg: None)
         self.cfg: WireConfig | None = None
         self.agg = None
@@ -75,6 +104,7 @@ class PartyWorker:
         self._pending: dict[int, collections.deque] = (
             collections.defaultdict(collections.deque))
         self._tally: np.ndarray | None = None
+        self._prev_acc: np.ndarray | None = None
         self.last_mean: np.ndarray | None = None
 
     # -- framed IO --------------------------------------------------------
@@ -174,7 +204,15 @@ class PartyWorker:
         for arr in got.values():
             total = (total + arr.astype(np.uint32)).astype(np.uint32)
         self._tally += committee_mod.tally_votes(total, cfg.n)
-        committee = committee_mod.select_committee(self._tally, cfg.m)
+        # eviction/reputation state is coordinator-broadcast in the
+        # ELECT body so every party applies the identical filter and
+        # weighting — the conformance check requires unanimity
+        exclude = body.get("exclude") or ()
+        weights = body.get("weights") or None
+        if weights is not None:
+            weights = {int(k): float(v) for k, v in weights.items()}
+        committee = committee_mod.select_committee(
+            self._tally, cfg.m, exclude=exclude, reputation=weights)
         report = committee if len(committee) == cfg.m else None
         await self._send(Frame(
             MsgType.COMMITTEE, round=round_index, src=self.pid,
@@ -211,6 +249,14 @@ class PartyWorker:
                     flat[None, e_lo:e_hi], seed=cfg.seed,
                     party_ids=[self.pid], round_index=round_index,
                     elem_base=e_lo))[0]                # [m, chunk]
+                if cfg.vss:
+                    # commitments for this chunk go out BEFORE its
+                    # uploads: the coordinator's relay-before-meter
+                    # ordering then guarantees a member holds every
+                    # included dealer's commitments once COMMIT lands
+                    # (same invariant the shares rely on)
+                    await self._send_commitments(round_index, committee,
+                                                 flat, d, e_lo, e_hi)
                 for w, member_id in enumerate(committee):
                     _, payload = codec.encode_array(
                         stack[w].astype(np.uint32, copy=False))
@@ -241,36 +287,159 @@ class PartyWorker:
         self.log(f"round {round_index} done "
                  f"(|G|={np.linalg.norm(self.last_mean):.4f})")
 
+    async def _send_commitments(self, round_index: int, committee,
+                                flat: np.ndarray, d: int, e_lo: int,
+                                e_hi: int) -> None:
+        """Feldman commitments for elements [e_lo, e_hi) to every member.
+
+        The commitment stream re-derives the chunk's coefficient words
+        with the same ``counter_base`` the share stream used, so the
+        chunked commitments are bit-identical slices of the
+        whole-vector commitments (the §8 invariant extended to §10).
+        The element-major word layout makes the chunk a contiguous
+        ``chunk_off`` range of the ``d*(degree+1)*2``-word logical
+        message.
+        """
+        cfg = self.cfg
+        deg = cfg.degree()
+        k0, k1 = philox.derive_key(cfg.seed,
+                                   (round_index << 24) | self.pid)
+        code = self.agg.encode(flat[e_lo:e_hi])
+        words = np.asarray(
+            vss.feldman_commit(code, k0, k1, degree=deg,
+                               counter_base=e_lo // 4),
+            dtype=np.uint32).reshape(-1)
+        stride = (deg + 1) * 2
+        for member_id in committee:
+            for frame in codec.chunk_frames(
+                    MsgType.COMMITMENT, words, round_index=round_index,
+                    phase=Phase.PHASE2_COMMIT,
+                    scheme=Scheme.CODES[cfg.scheme],
+                    dtype_code=Wiredtype.UINT32, src=self.pid,
+                    dst=member_id, chunk_elems=cfg.chunk_elems,
+                    chunk_base=e_lo * stride, total_elems=d * stride):
+                await self._send(frame)
+
+    def _apply_tamper(self, acc: np.ndarray, round_index: int,
+                      d: int) -> np.ndarray:
+        """TEST HOOK: corrupt this member's partial sum (the VSS
+        adversary).  Constants match the sim's injection so both paths
+        exercise the same detector."""
+        if self.tamper is None or self.tamper_round != round_index:
+            return acc
+        self.log(f"test hook: tampering round {round_index} partial "
+                 f"sum ({self.tamper})")
+        if self.tamper == "flip":
+            return acc ^ np.uint32(TAMPER_FLIP_MASK)
+        if self.tamper == "wrong_poly":
+            k0, k1 = philox.derive_key(
+                self.cfg.seed ^ TAMPER_SEED_XOR,
+                (round_index << 24) | self.pid)
+            bits = np.asarray(philox.random_bits(d, k0, k1), np.uint32)
+            # numpy twin of core.field.to_field (mask to 31 bits, fold
+            # the single out-of-range word p to 0) — the identical row
+            # the sim's wrong_poly injection fabricates
+            r = bits & np.uint32(MERSENNE_P_INT)
+            return np.where(r == np.uint32(MERSENNE_P_INT),
+                            np.uint32(0), r)
+        # replay: the member's round r-1 partial sum
+        if self._prev_acc is None or self._prev_acc.shape[0] != d:
+            raise ProtocolError(
+                "replay tamper hook needs a previous round's partial "
+                "sum of the same model size")
+        return self._prev_acc
+
+    def _verify_dealer_shares(self, buffers, commit_bufs, included,
+                              my_point: int, d: int):
+        """Party-side verification before the member sum: every
+        included dealer's share must satisfy its own commitments.
+        Returns the list of blamed dealer ids (normally empty)."""
+        from repro.kernels.verify_shares import verify_shares
+        deg = self.cfg.degree()
+        # one batched kernel call: dealers concatenate on the element
+        # axis (each element verifies against its own dealer's
+        # commitment columns)
+        rows = np.concatenate([buffers[p] for p in included])[None, :]
+        commits = np.concatenate(
+            [commit_bufs[p].reshape(d, deg + 1, 2) for p in included])
+        ok = np.asarray(verify_shares(rows, commits, (my_point,)))[0]
+        ok_per_dealer = ok.reshape(len(included), d).all(axis=1)
+        return [p for k, p in enumerate(included) if not ok_per_dealer[k]]
+
     async def _member_duties(self, round_index: int, ids, committee, d,
                              asm: MessageAssembler) -> None:
         cfg = self.cfg
         buffers: dict[int, np.ndarray] = {}
+        commit_bufs: dict[int, np.ndarray] = {}
         commit = None
-        # uploads are buffered until COMMIT names the included set — a
-        # party that died mid-upload must not leak partial chunks into
-        # the member's sum (ring/field sums have no "partial" notion)
+        deg = cfg.degree()
+        commit_words = d * (deg + 1) * 2
+
+        def _feed_data(frame) -> None:
+            arr = asm.feed(frame)
+            if arr is None:
+                return
+            arr = arr.astype(np.uint32, copy=False)
+            if frame.msg_type == MsgType.COMMITMENT:
+                commit_bufs[frame.src] = arr
+            else:
+                buffers[frame.src] = arr
+
+        # uploads (and commitments, under VSS) are buffered until
+        # COMMIT names the included set — a party that died mid-upload
+        # must not leak partial chunks into the member's sum (ring/
+        # field sums have no "partial" notion)
+        data_types = ((MsgType.SHARE_UPLOAD, MsgType.COMMITMENT)
+                      if cfg.vss else (MsgType.SHARE_UPLOAD,))
         while commit is None:
-            frame = await self._next(MsgType.SHARE_UPLOAD, MsgType.COMMIT)
+            frame = await self._next(*data_types, MsgType.COMMIT)
             if frame.msg_type == MsgType.COMMIT:
                 commit = codec.decode_json(frame.payload)
                 break
-            arr = asm.feed(frame)
-            if arr is not None:
-                buffers[frame.src] = arr.astype(np.uint32, copy=False)
+            _feed_data(frame)
         included: list[int] = commit["included"]
         live_members: list[int] = commit["live_members"]
         l = int(commit["l"])
-        missing = [p for p in included if p not in buffers]
-        while missing:       # relay-before-COMMIT ordering makes this
-            frame = await self._next(MsgType.SHARE_UPLOAD)  # a no-op path
-            arr = asm.feed(frame)
-            if arr is not None:
-                buffers[frame.src] = arr.astype(np.uint32, copy=False)
-            missing = [p for p in included if p not in buffers]
+
+        def _missing():
+            out = [p for p in included if p not in buffers]
+            if cfg.vss:
+                out += [p for p in included if p not in commit_bufs]
+            return out
+
+        while _missing():     # relay-before-COMMIT ordering makes this
+            frame = await self._next(*data_types)        # a no-op path
+            _feed_data(frame)
+
+        if cfg.vss:
+            for p in included:
+                if commit_bufs[p].shape[0] != commit_words:
+                    raise ProtocolError(
+                        f"dealer {p} commitment carries "
+                        f"{commit_bufs[p].shape[0]} words, expected "
+                        f"{commit_words}")
+            my_point = committee.index(self.pid) + 1
+            bad_dealers = self._verify_dealer_shares(
+                buffers, commit_bufs, included, my_point, d)
+            if bad_dealers:
+                # a dealer whose share fails its own commitments is a
+                # protocol-fatal fault: members cannot agree on an
+                # included set unilaterally, so blame loudly and abort
+                await self._send(Frame(
+                    MsgType.BLAME, round=round_index, src=self.pid,
+                    payload=codec.encode_json(
+                        {"kind": "dealer", "blamed": bad_dealers,
+                         "round": round_index})))
+                raise ProtocolError(
+                    f"dealer share verification failed for parties "
+                    f"{bad_dealers} at member {self.pid}")
 
         acc = np.zeros(d, dtype=np.uint32)
         for p in included:
             acc = self._fold(acc, buffers[p])
+        honest_acc = acc
+        acc = self._apply_tamper(acc, round_index, d)
+        self._prev_acc = honest_acc
 
         order = live_members
         my_idx = order.index(self.pid)
@@ -302,9 +471,14 @@ class PartyWorker:
             if k > 1:
                 rows.update(await self._collect(
                     asm, MsgType.CHAIN_SUM, set(order[:-1])))
-            member_sums = np.stack([rows[w] for w in order])
-            points = (None if k == len(committee) else
-                      tuple(committee.index(w) + 1 for w in order))
+            use_order = list(order)
+            if cfg.vss:
+                use_order = await self._verify_member_rows(
+                    round_index, rows, order, committee, included,
+                    commit_bufs, d)
+            member_sums = np.stack([rows[w] for w in use_order])
+            points = (None if len(use_order) == len(committee) else
+                      tuple(committee.index(w) + 1 for w in use_order))
 
         mean = np.asarray(self.agg.reconstruct_mean(
             member_sums, l, points=points), dtype=np.float32)
@@ -312,6 +486,43 @@ class PartyWorker:
             MsgType.RESULT, -1, round_index=round_index,
             phase=Phase.WIRE_RESULT, arr=mean,
             dtype_code=Wiredtype.FLOAT32)
+
+    async def _verify_member_rows(self, round_index: int, rows, order,
+                                  committee, included, commit_bufs,
+                                  d: int) -> list:
+        """Batch-verify every member row against the aggregate
+        commitments; BLAME failing members; return the verified order.
+
+        This is the detector of the VSS battery: a tampered partial
+        sum (flipped bits / wrong polynomial / replayed round) cannot
+        satisfy ``h^{row_w} == Π_j (Π_i C_{i,j})^{x_w^j}`` — the
+        aggregate commitments bind this round's polynomials exactly.
+        """
+        from repro.kernels.verify_shares import verify_shares
+        cfg = self.cfg
+        deg = cfg.degree()
+        agg_commits = np.asarray(vss.aggregate_commits(np.stack(
+            [commit_bufs[p].reshape(d, deg + 1, 2) for p in included])),
+            dtype=np.uint32)
+        points = tuple(committee.index(w) + 1 for w in order)
+        ok = np.asarray(verify_shares(
+            np.stack([rows[w] for w in order]), agg_commits, points))
+        row_ok = ok.all(axis=1)
+        blamed = [w for i, w in enumerate(order) if not row_ok[i]]
+        if blamed:
+            self.log(f"round {round_index}: blaming members {blamed} "
+                     "(partial-sum verification failed)")
+            await self._send(Frame(
+                MsgType.BLAME, round=round_index, src=self.pid,
+                payload=codec.encode_json(
+                    {"kind": "member", "blamed": blamed,
+                     "round": round_index})))
+        good = [w for i, w in enumerate(order) if row_ok[i]]
+        if len(good) < deg + 1:
+            raise ProtocolError(
+                f"only {len(good)} member rows verified but Shamir "
+                f"degree {deg} needs {deg + 1}; blamed: {blamed}")
+        return good
 
     # -- main loop --------------------------------------------------------
 
@@ -373,10 +584,17 @@ def main(argv=None) -> int:
     ap.add_argument("--die-after-upload", type=int, default=None,
                     help="TEST HOOK: exit abruptly after sending this "
                          "round's share uploads")
+    ap.add_argument("--tamper", choices=TAMPER_MODES, default=None,
+                    help="TEST HOOK: corrupt this member's partial sum "
+                         "(the VSS adversary)")
+    ap.add_argument("--tamper-round", type=int, default=None,
+                    help="round index the --tamper hook fires on")
     args = ap.parse_args(argv)
     log, fh = _open_log(args.party_id, args.log_file)
     worker = PartyWorker(args.host, args.port, args.party_id,
-                         die_after_upload=args.die_after_upload, log=log)
+                         die_after_upload=args.die_after_upload,
+                         tamper=args.tamper,
+                         tamper_round=args.tamper_round, log=log)
 
     async def _run():
         try:

@@ -60,6 +60,7 @@ class WireTransport(Transport):
                  fp=None, shamir_degree: int | None = None,
                  chunk_elems: int | None = None,
                  deadline_s: float | None = 30.0,
+                 vss: bool = False, reelect_each_round: bool = False,
                  round_timeout_s: float = 120.0,
                  host: str = "127.0.0.1", port: int = 0,
                  spawn: bool = True,
@@ -69,7 +70,8 @@ class WireTransport(Transport):
         self.cfg = WireConfig.from_aggregation_kwargs(
             n, m=m, b=b, seed=seed, scheme=scheme, fp=fp,
             shamir_degree=shamir_degree, chunk_elems=chunk_elems,
-            deadline_s=deadline_s)
+            deadline_s=deadline_s, vss=vss,
+            reelect_each_round=reelect_each_round)
         self.n = n
         self.m = m
         self.b = b
@@ -160,6 +162,12 @@ class WireTransport(Transport):
         except TimeoutError:
             fut.cancel()
             raise
+
+    @property
+    def evicted(self) -> set:
+        """Members the VSS layer blamed and evicted (coordinator view)."""
+        return (set(self.coordinator.evicted)
+                if self.coordinator is not None else set())
 
     # -- Transport interface ---------------------------------------------
 

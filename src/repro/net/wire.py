@@ -117,6 +117,10 @@ class MsgType:
     ERROR = 15          # party -> coordinator: fatal error JSON
     READY = 16          # member -> coordinator: upload duties done,
                         # alive and awaiting COMMIT (liveness gate)
+    COMMITMENT = 17     # party -> committee member (relayed): Feldman
+                        # commitment chunk (VSS; DESIGN.md §10)
+    BLAME = 18          # member -> coordinator: verification-failure
+                        # report JSON {kind, blamed, round}
 
     _NAMES = {}  # filled below
 
@@ -135,6 +139,8 @@ class Phase:
     PHASE2_BROADCAST = 4
     WIRE_INPUT = 5          # driver -> party input shipping (hub artifact)
     WIRE_RESULT = 6         # final member -> coordinator (hub artifact)
+    PHASE2_COMMIT = 7       # Feldman commitment broadcasts (VSS — the
+                            # Eq. 5-6 extension, costmodel cross-check)
 
     #: Network counter name per phase code; WIRE_* phases are physical
     #: hub artifacts outside the paper's Eqs. 1-8 and are counted under
@@ -146,6 +152,7 @@ class Phase:
         PHASE2_BROADCAST: "phase2_broadcast",
         WIRE_INPUT: "wire_input",
         WIRE_RESULT: "wire_result",
+        PHASE2_COMMIT: "phase2_commit",
     }
 
 

@@ -14,9 +14,13 @@ environments, not to replace hypothesis in CI.
 from __future__ import annotations
 
 
+import os
 import random
+import re
 import sys
 import types
+
+import pytest
 
 
 def pytest_configure(config):
@@ -34,6 +38,36 @@ def pytest_configure(config):
         "markers",
         "net: multi-process TCP wire-transport integration tests "
         "(subprocesses + localhost sockets)")
+    # malicious-security battery: tampering committee members must be
+    # detected/blamed/evicted by the VSS layer (DESIGN.md §10); the
+    # wire half also carries the net marker so the net CI job runs it
+    config.addinivalue_line(
+        "markers",
+        "adversarial: VSS tampering battery (detection, blame, "
+        "eviction, re-election)")
+
+
+@pytest.fixture
+def net_log_dir(tmp_path, request):
+    """Per-test coordinator/party log directory.
+
+    CI sets ``REPRO_NET_LOG_DIR`` so failing runs upload logs as
+    artifacts; each test gets its own *subdirectory* of it (derived
+    from the test's nodeid) so concurrently running tests — pytest-
+    xdist workers — never append to each other's log files.  Ports are
+    never shared state: every ``WireTransport`` binds port 0 and the
+    OS-assigned ephemeral port is surfaced through the coordinator
+    handshake to the spawned party workers, so ``-m net`` is xdist-safe
+    end to end.  Locally logs land in pytest's tmp dir.
+    """
+    base = os.environ.get("REPRO_NET_LOG_DIR")
+    if not base:
+        return str(tmp_path)
+    sub = os.path.join(base,
+                       re.sub(r"[^A-Za-z0-9_.-]+", "_",
+                              request.node.nodeid))
+    os.makedirs(sub, exist_ok=True)
+    return sub
 
 try:
     import hypothesis  # noqa: F401  (real package wins)

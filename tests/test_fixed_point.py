@@ -1,0 +1,116 @@
+"""Property tests for the fixed-point codec (``core/fixed_point.py``).
+
+The codec was previously covered only incidentally through the e2e
+aggregation tests; these hypothesis properties pin its contract
+directly: exact encode/decode round-trips on the quantization grid
+over the full headroom range, the overflow boundary at ``n`` parties
+(``max_parties`` / ``validate_for_parties``), and negative-value
+wraparound in both algebras (two's complement in Z_2^32, ``p - |q|``
+in the Mersenne field).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.field import MERSENNE_P_INT
+from repro.core.fixed_point import (DEFAULT_FIELD, DEFAULT_RING,
+                                    FixedPointConfig, np_encode)
+
+#: (frac_bits, clip) corners: paper default, large-n headroom, tight clip
+CONFIGS = ((16, 64.0), (10, 64.0), (8, 1.0))
+
+ALGEBRAS = ("ring", "field")
+
+
+def _cfg(fb_clip, algebra):
+    fb, clip = fb_clip
+    return FixedPointConfig(frac_bits=fb, clip=clip, algebra=algebra)
+
+
+@settings(max_examples=60)
+@given(st.integers(min_value=-(64 << 16), max_value=64 << 16),
+       st.sampled_from(ALGEBRAS))
+def test_roundtrip_exact_on_grid_full_headroom(q, algebra):
+    """Values on the quantization grid round-trip exactly across the
+    whole representable range [-clip, clip]."""
+    cfg = _cfg((16, 64.0), algebra)
+    x = np.float32(q / cfg.scale)      # exact: |q| <= 2^22 < 2^24
+    w = np.asarray(_cfg((16, 64.0), algebra).encode(x))
+    assert float(np.asarray(cfg.decode(w))) == float(x)
+    # and the numpy oracle produces the identical codeword
+    assert int(np.asarray(np_encode(cfg, x))) == int(w) % cfg.modulus
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=0, max_value=64 << 16),
+       st.sampled_from(ALGEBRAS))
+def test_negative_wraparound_is_modular_negation(q, algebra):
+    """encode(-x) is the modular negation of encode(x): 2^32 - w in
+    the ring, p - w in the field — so signed sums cancel exactly."""
+    cfg = _cfg((16, 64.0), algebra)
+    x = np.float32(q / cfg.scale)
+    w_pos = int(np.asarray(cfg.encode(x)))
+    w_neg = int(np.asarray(cfg.encode(np.float32(-x))))
+    assert (w_pos + w_neg) % cfg.modulus == 0
+    # a +x and a -x contribution decode to an exact zero sum
+    s = np.uint32((w_pos + w_neg) % cfg.modulus)
+    assert float(np.asarray(cfg.decode(s))) == 0.0
+
+
+@settings(max_examples=20)
+@given(st.sampled_from(CONFIGS), st.sampled_from(ALGEBRAS))
+def test_overflow_boundary_at_n_parties(fb_clip, algebra):
+    """``max_parties`` is sharp: n_max worst-case encodings sum without
+    wraparound (exact decode), n_max + 1 is rejected up front."""
+    cfg = _cfg(fb_clip, algebra)
+    n_max = cfg.max_parties()
+    assert n_max >= 1
+    cfg.validate_for_parties(n_max)
+    with pytest.raises(ValueError, match="headroom"):
+        cfg.validate_for_parties(n_max + 1)
+    # worst case: every party contributes the clip extreme
+    w = int(np.asarray(cfg.encode(np.float32(cfg.clip))))
+    total = (w * n_max) % cfg.modulus
+    got = float(np.asarray(cfg.decode(np.uint32(total))))
+    assert got == pytest.approx(n_max * cfg.clip, rel=0, abs=0)
+    # ... and the all-negative extreme too
+    w = int(np.asarray(cfg.encode(np.float32(-cfg.clip))))
+    total = (w * n_max) % cfg.modulus
+    got = float(np.asarray(cfg.decode(np.uint32(total))))
+    assert got == pytest.approx(-n_max * cfg.clip, rel=0, abs=0)
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=-(1 << 22), max_value=1 << 22),
+       st.integers(min_value=1, max_value=512),
+       st.sampled_from(ALGEBRAS))
+def test_decode_mean_is_exact_sum_over_n(q, n, algebra):
+    """decode_mean(w, n) == decode(w)/n bit-for-bit (one division)."""
+    cfg = _cfg((16, 64.0), algebra)
+    w = np.uint32(q % cfg.modulus)
+    # the same float32 sequence decode_mean uses: decode, ONE division
+    want = np.float32(np.asarray(cfg.decode(w))) / np.float32(n)
+    assert np.float32(np.asarray(cfg.decode_mean(w, n))) == want
+
+
+def test_out_of_range_values_clip_not_wrap():
+    """Inputs beyond the clip range saturate (never alias back into
+    the representable range via modular wraparound)."""
+    for algebra in ALGEBRAS:
+        cfg = _cfg((16, 64.0), algebra)
+        big = np.asarray(cfg.encode(np.float32(1e6)))
+        assert float(np.asarray(cfg.decode(big))) == cfg.clip
+        small = np.asarray(cfg.encode(np.float32(-1e6)))
+        assert float(np.asarray(cfg.decode(small))) == -cfg.clip
+
+
+def test_default_configs_paper_limits():
+    """Q15.16 clip-64 defaults: 511-party ring headroom (512 would put
+    the all-+clip sum exactly on the 2^31 sign boundary); the field
+    default shares the codec parameters on the Shamir side."""
+    assert DEFAULT_RING.max_parties() == 511
+    assert DEFAULT_FIELD.algebra == "field"
+    assert DEFAULT_FIELD.modulus == MERSENNE_P_INT
+    with pytest.raises(ValueError):
+        DEFAULT_RING.validate_for_parties(512)

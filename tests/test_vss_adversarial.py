@@ -1,0 +1,407 @@
+"""Adversarial VSS battery: tampering committee members are caught.
+
+The malicious-security acceptance bar (ISSUE 5 / DESIGN.md §10): a
+committee member that corrupts its partial sum — flipped share bits, a
+row from a *wrong polynomial* nobody committed to, or a *replayed*
+round r−1 row — must be detected by batched Feldman commitment
+verification, **blamed**, **evicted** from the next election, and the
+round must still complete with output **bit-identical** to the honest
+trajectory, with the measured commitment traffic matching the extended
+cost model (``costmodel.phase2_commit_*``) exactly.
+
+The battery runs the same adversary on both backends:
+
+* sim path — ``committee_tamper={member: mode}`` on
+  ``TwoPhaseTransport`` (fast job), and
+* wire path — a real party worker process started with
+  ``--tamper MODE --tamper-round R`` (``-m net`` harness from PR 4,
+  extended; also carries the ``adversarial`` marker),
+
+and asserts the two report the *same* ``RoundOutcome`` through the
+shared ``faults.resolve_outcome`` brain.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import committee as committee_mod
+from repro.core import costmodel, philox, shamir, vss
+from repro.core.costmodel import CostParams
+from repro.core.field import MERSENNE_P_INT
+from repro.fl import FLSimulation, make_transport
+from repro.fl.faults import RoundOutcome, resolve_outcome
+from repro.kernels.verify_shares import verify_shares
+
+B = 10
+N, S, M, DEG = 4, 242, 3, 1
+
+TAMPER_MODES = ("flip", "wrong_poly", "replay")
+
+
+def _flats(n=N, s=S, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, s).astype(np.float32))
+
+
+def _honest_sim(flats, rounds=1, **kw):
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True, **kw)
+    sim.elect()
+    return [np.asarray(sim.aggregate(flats, round_index=r))
+            for r in range(rounds)]
+
+
+# ---------------------------------------------------------------------------
+# core: the Feldman identity and the blame machinery
+# ---------------------------------------------------------------------------
+
+def test_feldman_identity_and_pinpointed_blame():
+    """Shares verify; a single tampered element is pinpointed."""
+    rng = np.random.RandomState(0)
+    k0, k1 = philox.derive_key(3, 11)
+    v = jnp.asarray(rng.randint(0, MERSENNE_P_INT, size=96), jnp.uint32)
+    shares, commits = shamir.share_with_commitments(v, M, k0, k1,
+                                                    degree=DEG)
+    for w in range(M):
+        assert bool(np.asarray(
+            vss.verify_share(shares[w], commits, w + 1)).all())
+    bad = shares.at[1, 5].add(1)
+    ok = np.asarray(vss.verify_share(bad[1], commits, 2))
+    assert not ok[5] and ok.sum() == ok.size - 1
+
+
+def test_chunked_commitments_equal_whole_vector():
+    """The §8 counter invariant extends to commitments: chunk c's
+    commitments are the sliced whole-vector commitments bit-for-bit."""
+    rng = np.random.RandomState(1)
+    k0, k1 = philox.derive_key(7, 2)
+    v = jnp.asarray(rng.randint(0, MERSENNE_P_INT, size=256), jnp.uint32)
+    whole = vss.feldman_commit(v, k0, k1, degree=2)
+    for off in (0, 128):
+        chunk = vss.feldman_commit(v[off:off + 128], k0, k1, degree=2,
+                                   counter_base=off // 4)
+        np.testing.assert_array_equal(np.asarray(chunk),
+                                      np.asarray(whole[off:off + 128]))
+
+
+def test_reconstruct_verified_drops_bad_row_and_raises_subthreshold():
+    rng = np.random.RandomState(2)
+    k0, k1 = philox.derive_key(9, 1)
+    v = jnp.asarray(rng.randint(0, MERSENNE_P_INT, size=64), jnp.uint32)
+    shares, commits = shamir.share_with_commitments(v, M, k0, k1,
+                                                    degree=DEG)
+    rows = shares.at[2, 0].add(3)
+    val, bad = shamir.reconstruct_verified(rows, commits, (1, 2, 3),
+                                           degree=DEG)
+    assert bad == (2,)
+    np.testing.assert_array_equal(np.asarray(val), np.asarray(v))
+    # two bad rows of three with degree 1 -> only one verified -> raise
+    rows = rows.at[1, 0].add(3)
+    with pytest.raises(ValueError, match="verified"):
+        shamir.reconstruct_verified(rows, commits, (1, 2, 3), degree=DEG)
+
+
+def test_aggregate_commit_homomorphism_binds_partial_sums():
+    """Π_i C_{i,j} verifies Σ_i shares — the member-sum detector."""
+    from repro.core.field import fadd
+    rng = np.random.RandomState(3)
+    stacks, commits = [], []
+    for i in range(3):
+        k0, k1 = philox.derive_key(4, i)
+        v = jnp.asarray(rng.randint(0, MERSENNE_P_INT, size=80),
+                        jnp.uint32)
+        s, c = shamir.share_with_commitments(v, M, k0, k1, degree=DEG)
+        stacks.append(s)
+        commits.append(c)
+    agg = vss.aggregate_commits(jnp.stack(commits))
+    rows = stacks[0]
+    for s in stacks[1:]:
+        rows = fadd(rows, s)
+    ok = np.asarray(verify_shares(rows, agg, points=(1, 2, 3)))
+    assert ok.all()
+    tampered = rows.at[1].set(rows[1] ^ jnp.uint32(0x00FF00FF))
+    ok = np.asarray(verify_shares(tampered, agg, points=(1, 2, 3)))
+    assert ok[0].all() and ok[2].all() and not ok[1].any()
+
+
+@pytest.mark.kernels
+def test_verify_shares_kernel_modes_bit_identical():
+    """ref / interpret dispatch modes agree bit-for-bit (capability-
+    gated like every kernel family differential)."""
+    from repro.kernels import dispatch
+    cap = dispatch.probe()
+    if cap == dispatch.CAP_REF_ONLY:
+        pytest.skip(f"capability: {cap} — pallas interpret unavailable")
+    rng = np.random.RandomState(4)
+    k0, k1 = philox.derive_key(6, 3)
+    v = jnp.asarray(rng.randint(0, MERSENNE_P_INT, size=300), jnp.uint32)
+    shares, commits = shamir.share_with_commitments(v, M, k0, k1,
+                                                    degree=DEG)
+    bad = shares.at[0, 33].add(9)
+    want = np.asarray(verify_shares(bad, commits, (1, 2, 3),
+                                    forced="ref"))
+    got = np.asarray(verify_shares(bad, commits, (1, 2, 3),
+                                   forced="interpret"))
+    np.testing.assert_array_equal(want, got)
+    assert not want[0, 33] and want.sum() == want.size - 1
+
+
+# ---------------------------------------------------------------------------
+# sim path: detect -> blame -> evict -> re-elect
+# ---------------------------------------------------------------------------
+
+def test_vss_requires_shamir_and_tamper_requires_vss():
+    with pytest.raises(ValueError, match="[Ss]hamir"):
+        make_transport("two_phase", N, m=M, seed=1, vss=True)
+    tr = make_transport("two_phase", N, m=M, scheme="shamir",
+                        shamir_degree=DEG, seed=1)
+    tr.elect()
+    with pytest.raises(ValueError, match="vss"):
+        tr.aggregate(_flats(), round_index=0,
+                     committee_tamper={tr.committee[0]: "flip"})
+
+
+def test_sim_honest_vss_round_bit_identical_and_commit_costmodel():
+    """VSS only *adds* commitment traffic — the mean is unchanged and
+    the phase2_commit counters equal the extended closed forms."""
+    flats = _flats()
+    plain = make_transport("two_phase", N, m=M, scheme="shamir",
+                           shamir_degree=DEG, seed=1)
+    plain.elect()
+    want = np.asarray(plain.aggregate(flats, round_index=0))
+    (got,) = _honest_sim(flats)
+    np.testing.assert_array_equal(got, want)
+
+    e = 3
+    sim = FLSimulation(n=N, m=M, scheme="shamir", shamir_degree=DEG,
+                       seed=1, vss=True)
+    sim.elect_committee()
+    for _ in range(e):
+        sim.aggregate_two_phase([f for f in flats])
+    p = CostParams(n=N, e=e, s=S, m=M, b=B)
+    st = sim.net.stats("phase2_commit")
+    assert st.msg_num == costmodel.phase2_commit_msg_num(p)
+    assert st.msg_size == costmodel.phase2_commit_msg_size(p, DEG)
+    assert costmodel.vss_commit_elems(p, DEG) == (DEG + 1) * 2 * S
+    # and the pre-existing Eqs. 5-6 legs are untouched by VSS
+    assert sim.net.stats("phase2_upload").msg_num == p.n * p.m * e
+    assert (sim.phase2_stats().msg_num == costmodel.phase2_msg_num(p))
+
+
+@pytest.mark.parametrize("mode", TAMPER_MODES)
+def test_sim_tamper_detected_blamed_evicted_reelected(mode):
+    """Each tamper mode: caught, blamed, evicted; output == honest."""
+    flats = _flats()
+    rounds = 2 if mode == "replay" else 1
+    tamper_round = rounds - 1
+    honest = _honest_sim(flats, rounds=rounds,
+                         reelect_each_round=True)
+    # a non-final member of the tamper round's committee (per-round
+    # re-election: round r elects with seed + r)
+    victim = committee_mod.elect(N, M, B, 1 + tamper_round).committee[0]
+
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True,
+                         reelect_each_round=True)
+    for r in range(rounds):
+        kw = ({"committee_tamper": {victim: mode}}
+              if r == tamper_round else {})
+        got = np.asarray(sim.aggregate(flats, round_index=r, **kw))
+        np.testing.assert_array_equal(got, honest[r])
+    assert sim.last_outcome.blamed == {victim}
+    assert sim.last_outcome.alive == set(range(N)) - {victim}
+    assert victim in sim.evicted
+    # next round's re-election may not seat the evicted member
+    sim.elect(rounds)
+    assert victim not in sim.committee
+
+
+def test_sim_two_colluding_tamperers_abort_loudly():
+    """degree+1 honest rows are required: with two of three members
+    tampering only one row verifies -> the round must raise, never
+    return garbage."""
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True)
+    sim.elect()
+    w0, w1 = sim.committee[0], sim.committee[1]
+    with pytest.raises(ValueError, match="verified"):
+        sim.aggregate(_flats(), round_index=0,
+                      committee_tamper={w0: "flip", w1: "wrong_poly"})
+
+
+def test_sim_streaming_chunked_vss_bit_identical():
+    """Verification rides the §8 element chunks: chunk_elems=128 and
+    whole-vector VSS rounds agree bit-for-bit, tamper included."""
+    flats = _flats(s=384)
+    outs = []
+    for chunk_elems in (None, 128):
+        sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                             shamir_degree=DEG, seed=1, vss=True,
+                             chunk_elems=chunk_elems)
+        sim.elect()
+        victim = sim.committee[1]
+        outs.append((np.asarray(sim.aggregate(
+            flats, round_index=0, committee_tamper={victim: "flip"})),
+            sim.last_outcome))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+    assert outs[0][1].blamed
+
+
+def test_resolve_outcome_blamed_never_resurrected():
+    """A blamed member is excluded like a dropout but must never be
+    resurrected to meet quorum; and it is reported separately."""
+    committee = (0, 1, 2)
+    out = resolve_outcome(set(range(4)), set(), set(),
+                          committee=committee, reconstruct_threshold=2,
+                          blamed={1})
+    assert out == RoundOutcome(alive={0, 2, 3}, dropped=set(),
+                               straggled=set(), blamed={1})
+    # blaming below threshold raises (resurrect=False path)
+    with pytest.raises(ValueError):
+        resolve_outcome(set(range(4)), {0}, set(), committee=committee,
+                        reconstruct_threshold=3, resurrect=False,
+                        blamed={1})
+
+
+def test_resolve_outcome_all_members_blamed_raises():
+    """A known tamperer must never carry the round alone — blaming
+    every member fails loudly instead of seating one."""
+    with pytest.raises(ValueError, match="blamed"):
+        resolve_outcome({0, 1}, set(), set(), blamed={0, 1})
+
+
+def test_coordinator_rejects_forged_or_malformed_blame():
+    """Blame evicts parties from every future election, so only the
+    round's designated verifier may issue it, only against committee
+    members, and malformed payloads are typed ProtocolErrors that cost
+    the reporter — never the accused — its standing (a single
+    malicious worker cannot brick the federation)."""
+    from repro.net import Frame, MsgType, ProtocolError, WireConfig
+    from repro.net import codec
+    from repro.net.coordinator import Coordinator
+    cfg = WireConfig(n=4, m=3, scheme="shamir", shamir_degree=1,
+                     vss=True)
+    co = Coordinator(cfg)
+    co.committee = (3, 0, 1)
+    co._verifier = 1
+
+    def frame(body):
+        return Frame(MsgType.BLAME, payload=codec.encode_json(body))
+
+    cases = [
+        (0, {"kind": "member", "blamed": [3]}, "verifier"),
+        (1, {"kind": "member", "blamed": [9]}, "out-of-range"),
+        (1, {"kind": "member", "blamed": [2]}, "non-committee"),
+        (1, {"kind": "member", "blamed": ["x"]}, "malformed"),
+        (1, {"kind": "member", "blamed": []}, "kind"),
+        (1, {"kind": "mystery", "blamed": [0]}, "kind"),
+        (2, {"kind": "dealer", "blamed": [0]}, "non-member"),
+    ]
+    for pid, body, msg in cases:
+        with pytest.raises(ProtocolError, match=msg):
+            co._on_blame(pid, frame(body))
+    assert co._round_blamed == set() and co.evicted == set()
+    # ... while the verifier's well-formed report is accepted
+    co._on_blame(1, frame({"kind": "member", "blamed": [3]}))
+    assert co._round_blamed == {3}
+
+
+# ---------------------------------------------------------------------------
+# wire path: the same adversary as a real tampering worker process
+# ---------------------------------------------------------------------------
+
+wire = pytest.mark.net
+
+
+@wire
+@pytest.mark.adversarial
+@pytest.mark.parametrize("mode", TAMPER_MODES)
+def test_wire_tampering_member_blamed_evicted_reelected(mode,
+                                                        net_log_dir):
+    """ISSUE 5 acceptance: a 4-party wire round with one tampering
+    member detects the bad row via batched commitment verification,
+    blames + evicts the member, re-elects, and completes bit-identical
+    to the honest sim trajectory with exact commitment traffic."""
+    flats = _flats()
+    rounds = 2 if mode == "replay" else 1
+    tamper_round = rounds - 1
+    # the final live member runs the verification; tamper a non-final
+    # member (chain order == committee order when nobody drops) of the
+    # tamper round's committee
+    victim = committee_mod.elect(N, M, B, 1 + tamper_round).committee[0]
+    if mode == "replay":
+        # the wire replay hook re-sends the member's cached r-1 row
+        assert victim in committee_mod.elect(N, M, B, 1).committee
+    honest = _honest_sim(flats, rounds=rounds + 1,
+                         reelect_each_round=True)
+
+    # the same adversary through the sim transport, for outcome parity
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True,
+                         reelect_each_round=True)
+    for r in range(rounds):
+        kw = ({"committee_tamper": {victim: mode}}
+              if r == tamper_round else {})
+        sim.aggregate(flats, round_index=r, **kw)
+    sim_outcome = sim.last_outcome
+    sim.aggregate(flats, round_index=rounds)
+    sim_next_committee = sim.committee
+
+    # deadline_s=None: the battery tests tampering, not stragglers —
+    # the fixed-base exponentiation JIT in each party process can
+    # outlast the default 30s stage deadline on a loaded CI machine,
+    # which would inject straggler noise into the RoundOutcome parity
+    # (EOF dropout detection stays on regardless)
+    with make_transport(
+            "two_phase", N, backend="wire", m=M, scheme="shamir",
+            shamir_degree=DEG, seed=1, vss=True, deadline_s=None,
+            reelect_each_round=True, log_dir=net_log_dir,
+            party_extra_args={victim: ["--tamper", mode,
+                                       "--tamper-round",
+                                       str(tamper_round)]}) as tr:
+        for r in range(rounds):
+            got = np.asarray(tr.aggregate(flats, round_index=r))
+            # tampering must not perturb the mean by a single bit
+            np.testing.assert_array_equal(got, honest[r])
+        # ... and the wire resolves the SAME RoundOutcome the sim does
+        assert tr.last_outcome == sim_outcome
+        assert tr.last_outcome.blamed == {victim}
+        assert tr.evicted == {victim}
+        # the next round re-elects without the evicted member, still
+        # bit-identical to the honest trajectory
+        got = np.asarray(tr.aggregate(flats, round_index=rounds))
+        np.testing.assert_array_equal(got, honest[rounds])
+        assert victim not in tr.committee
+        assert tr.committee == sim_next_committee
+        # measured commitment traffic == the extended cost model
+        p = CostParams(n=N, e=rounds + 1, s=S, m=M, b=B)
+        st = tr.net.stats("phase2_commit")
+        assert st.msg_num == costmodel.phase2_commit_msg_num(p)
+        assert st.msg_size == costmodel.phase2_commit_msg_size(p, DEG)
+
+
+@wire
+@pytest.mark.adversarial
+def test_wire_honest_vss_round_bit_identical_counters_exact(
+        net_log_dir):
+    """No adversary: the VSS wire round stays bit-identical to the sim
+    and every counter (incl. phase2_commit) matches phase by phase."""
+    flats = _flats()
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True)
+    sim.elect()
+    want = np.asarray(sim.aggregate(flats, round_index=0))
+    with make_transport("two_phase", N, backend="wire", m=M,
+                        scheme="shamir", shamir_degree=DEG, seed=1,
+                        vss=True, deadline_s=None,
+                        log_dir=net_log_dir) as tr:
+        assert tr.elect() == sim.committee
+        got = np.asarray(tr.aggregate(flats, round_index=0))
+        np.testing.assert_array_equal(got, want)
+        assert tr.last_outcome == RoundOutcome(
+            alive=set(range(N)), dropped=set(), straggled=set())
+        for ph in ("phase1", "phase2_upload", "phase2_commit",
+                   "phase2_exchange", "phase2_broadcast"):
+            assert tr.net.stats(ph) == sim.net.stats(ph), ph

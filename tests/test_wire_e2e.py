@@ -11,9 +11,11 @@ upload`` worker hook — the process exits abruptly right after its
 uploads, the coordinator sees EOF (no wall-clock timers involved), and
 the round reconstructs through the Shamir sub-threshold path with the
 same ``RoundOutcome`` the fault module reports for that pattern.
+Port/log hygiene: every transport binds port 0 (the OS assigns an
+ephemeral port, surfaced to party workers through the coordinator
+handshake) and each test logs into its own ``net_log_dir`` — no shared
+files, no bind races — so ``-m net`` runs cleanly under pytest-xdist.
 """
-
-import os
 
 import numpy as np
 import jax.numpy as jnp
@@ -37,12 +39,6 @@ def _flats(n, s, seed=0):
     return jnp.asarray(rng.randn(n, s).astype(np.float32))
 
 
-def _log_dir(tmp_path) -> str:
-    """CI sets REPRO_NET_LOG_DIR so failing runs upload coordinator/
-    party logs as artifacts; locally logs land in pytest's tmp dir."""
-    return os.environ.get("REPRO_NET_LOG_DIR") or str(tmp_path)
-
-
 def _phase2(net):
     num = sum(net.stats(ph).msg_num for ph in
               ("phase2_upload", "phase2_exchange", "phase2_broadcast"))
@@ -52,7 +48,7 @@ def _phase2(net):
 
 
 @pytest.mark.parametrize("n", [3, 4])
-def test_wire_round_bit_identical_and_eqs_exact(n, tmp_path):
+def test_wire_round_bit_identical_and_eqs_exact(n, net_log_dir):
     """Differential: wire == sim bit-for-bit; counters == Eqs. 3-6."""
     s, m = 242, 3
     flats = _flats(n, s)
@@ -62,7 +58,7 @@ def test_wire_round_bit_identical_and_eqs_exact(n, tmp_path):
                  for r in range(EPOCHS)]
 
     with make_transport("two_phase", n, backend="wire", m=m, seed=1,
-                        log_dir=_log_dir(tmp_path)) as wire:
+                        log_dir=net_log_dir) as wire:
         assert wire.elect() == sim.committee
         for r in range(EPOCHS):
             got = np.asarray(wire.aggregate(flats, round_index=r))
@@ -84,7 +80,7 @@ def test_wire_round_bit_identical_and_eqs_exact(n, tmp_path):
             assert wire.net.stats(ph) == sim.net.stats(ph), ph
 
 
-def test_wire_shamir_round_bit_identical(tmp_path):
+def test_wire_shamir_round_bit_identical(net_log_dir):
     n, s, m, deg = 4, 242, 3, 1
     flats = _flats(n, s)
     sim = make_transport("two_phase", n, m=m, scheme="shamir",
@@ -93,12 +89,12 @@ def test_wire_shamir_round_bit_identical(tmp_path):
     want = np.asarray(sim.aggregate(flats, round_index=0))
     with make_transport("two_phase", n, backend="wire", m=m,
                         scheme="shamir", shamir_degree=deg, seed=1,
-                        log_dir=_log_dir(tmp_path)) as wire:
+                        log_dir=net_log_dir) as wire:
         got = np.asarray(wire.aggregate(flats, round_index=0))
         np.testing.assert_array_equal(got, want)
 
 
-def test_wire_member_killed_midround_subthreshold(tmp_path):
+def test_wire_member_killed_midround_subthreshold(net_log_dir):
     """Kill a committee member right after its uploads (deterministic
     EOF): the coordinator reconstructs via the Shamir sub-threshold
     path, bit-identical to the sim's committee_dropout round, and
@@ -117,7 +113,7 @@ def test_wire_member_killed_midround_subthreshold(tmp_path):
 
     with make_transport(
             "two_phase", n, backend="wire", m=m, scheme="shamir",
-            shamir_degree=deg, seed=1, log_dir=_log_dir(tmp_path),
+            shamir_degree=deg, seed=1, log_dir=net_log_dir,
             party_extra_args={victim: ["--die-after-upload", "0"]}
     ) as wire:
         wire.elect()
@@ -134,7 +130,7 @@ def test_wire_member_killed_midround_subthreshold(tmp_path):
         assert wire.net.stats("phase2_upload").msg_num == n * m
 
 
-def test_wire_additive_member_death_fails_loudly(tmp_path):
+def test_wire_additive_member_death_fails_loudly(net_log_dir):
     """Additive sharing cannot reconstruct without all m member sums —
     a dead member must abort the round, not return garbage."""
     n, m = 4, 3
@@ -142,7 +138,7 @@ def test_wire_additive_member_death_fails_loudly(tmp_path):
     victim = committee_mod.elect(n, m, B, 1).committee[0]
     with make_transport(
             "two_phase", n, backend="wire", m=m, seed=1,
-            log_dir=_log_dir(tmp_path),
+            log_dir=net_log_dir,
             party_extra_args={victim: ["--die-after-upload", "0"]}
     ) as wire:
         wire.elect()
@@ -151,7 +147,7 @@ def test_wire_additive_member_death_fails_loudly(tmp_path):
             wire.aggregate(flats, round_index=0)
 
 
-def test_run_fedavg_drives_wire_backend_unchanged(tmp_path):
+def test_run_fedavg_drives_wire_backend_unchanged(net_log_dir):
     """FLSimulation/run_fedavg work over the wire via agg_kwargs only,
     and produce bit-identical training trajectories to the sim."""
     def step(params, batch):
@@ -165,7 +161,7 @@ def test_run_fedavg_drives_wire_backend_unchanged(tmp_path):
 
     def cfg(backend):
         extra = ({"backend": "wire",
-                  "wire_kwargs": {"log_dir": _log_dir(tmp_path)}}
+                  "wire_kwargs": {"log_dir": net_log_dir}}
                  if backend == "wire" else None)
         return FedAvgConfig(n_parties=3, epochs=2, local_steps=2,
                             committee=3, seed=1, agg_kwargs=extra)
@@ -178,13 +174,13 @@ def test_run_fedavg_drives_wire_backend_unchanged(tmp_path):
         [o.alive for o in res_sim.outcomes]
 
 
-def test_simulation_facade_wire_backend(tmp_path):
+def test_simulation_facade_wire_backend(net_log_dir):
     """FLSimulation(backend='wire') routes two_phase over sockets and
     keeps the same Network the Eq cross-checks read."""
     n, s = 3, 128
     flats = [jnp.asarray(f) for f in np.asarray(_flats(n, s))]
     with FLSimulation(n=n, m=3, seed=1, backend="wire",
-                      wire_kwargs={"log_dir": _log_dir(tmp_path)}) as sim:
+                      wire_kwargs={"log_dir": net_log_dir}) as sim:
         sim.elect_committee()
         assert sim.committee == committee_mod.elect(n, 3, B, 1).committee
         mean, stats = sim.aggregate_two_phase(flats)

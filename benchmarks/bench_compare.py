@@ -34,6 +34,8 @@ THRESHOLD = 1.5
 #: jitter by milliseconds on shared runners — a pure ratio threshold
 #: on them is noise, not signal
 NOISE_FLOOR_S = 0.01
+#: the scenario battery is gated by its own CI job (``scenarios``) via
+#: ``--benches scenarios`` — not part of the default perf matrix
 BENCHES = ("msg_cost", "kernels_bench", "stream_bench")
 
 
@@ -72,6 +74,29 @@ def _fresh(name: str, quick: bool) -> dict:
             json.dump(disk, f, indent=2)
             f.write("\n")
         return out
+    if name == "scenarios":
+        from benchmarks import scenarios
+        if not quick:
+            return scenarios.write_bench_json("BENCH_scenarios.json")
+        # quick mode re-runs the sim-backend scenarios only; the
+        # committed wire records ride along unchanged (same carry
+        # pattern as stream_bench's paper-scale rows)
+        out = scenarios.write_bench_json(path=None, quick=True)
+        try:
+            with open("BENCH_scenarios.json") as f:
+                out["scenarios"] += [{**r, "carried": True}
+                                     for r in
+                                     json.load(f).get("scenarios", [])
+                                     if r.get("backend") == "wire"]
+        except FileNotFoundError:
+            pass
+        disk = {**out, "scenarios": [{k: v for k, v in r.items()
+                                      if k != "carried"}
+                                     for r in out["scenarios"]]}
+        with open("BENCH_scenarios.json", "w") as f:
+            json.dump(disk, f, indent=2)
+            f.write("\n")
+        return out
     raise ValueError(f"unknown bench {name!r}")
 
 
@@ -92,13 +117,55 @@ def walls(name: str, bench: dict) -> dict[str, float]:
             out[f"stream_{tag}"] = row["stream_wall_s"]
             out[f"whole_{tag}"] = row["whole_wall_s"]
         return out
+    if name == "scenarios":
+        return {f"{r['name']}_round_wall_s": r["round_wall_s"]
+                for r in bench.get("scenarios", [])
+                if not r.get("carried") and not r.get("aborted")}
     raise ValueError(f"unknown bench {name!r}")
+
+
+#: scenario-record fields gated by *exact* match on regeneration — the
+#: whole battery is seeded end-to-end, so any drift in who survived,
+#: who got blamed, or whether the counters hit their closed forms is a
+#: behavioural regression, not noise (accuracy alone gets a committed
+#: floor instead: float jitter across BLAS builds is real)
+SCENARIO_EXACT_FIELDS = ("backend", "aborted", "counters_match",
+                         "banned", "dealers", "outcomes")
+
+
+def compare_scenario_outcomes(baseline: dict, fresh: dict) -> list:
+    """Exact-match diff of the scenario outcome records (by name)."""
+    fresh_by_name = {r["name"]: r for r in fresh.get("scenarios", [])
+                     if not r.get("carried")}
+    failures = []
+    for base_r in baseline.get("scenarios", []):
+        got = fresh_by_name.get(base_r["name"])
+        if got is None:
+            continue  # e.g. a wire record in a --quick regeneration
+        for field in SCENARIO_EXACT_FIELDS:
+            if got.get(field) != base_r.get(field):
+                failures.append(
+                    ("scenarios", f"{base_r['name']}.{field}",
+                     base_r.get(field), got.get(field), "exact"))
+        floor = base_r.get("accuracy_floor")
+        if floor is not None \
+                and got.get("final_accuracy", 0.0) < floor:
+            failures.append(
+                ("scenarios", f"{base_r['name']}.final_accuracy",
+                 floor, got.get("final_accuracy"), "floor"))
+    for name, key, want, got_v, kind in failures:
+        print(f"{name}:{key}: MISMATCH ({kind}) "
+              f"baseline={want!r} got={got_v!r}")
+    if not failures:
+        print("scenarios: all outcome records match the baseline")
+    return failures
 
 
 BASELINE_PATH = {
     "msg_cost": "BENCH_msgcost.json",
     "kernels_bench": "BENCH_kernels.json",
     "stream_bench": "BENCH_stream.json",
+    "scenarios": "BENCH_scenarios.json",
 }
 
 
@@ -134,6 +201,9 @@ def compare(name: str, baseline: dict, quick: bool, repeats: int) -> list:
               f"allowed={allowed:.4f}s got={got:.4f}s {status}")
         if status == "REGRESSED":
             failures.append((name, key, base_v, got, allowed))
+    if name == "scenarios":
+        # outcome fields are gated exactly, on top of the wall times
+        failures += compare_scenario_outcomes(baseline, fresh)
     return failures
 
 
@@ -166,9 +236,13 @@ def main() -> None:
 
     if failures:
         for name, key, base_v, got, allowed in failures:
-            print(f"::error::bench regression {name}:{key}: "
-                  f"{got:.4f}s > allowed {allowed:.4f}s "
-                  f"(baseline {base_v:.4f}s, threshold {THRESHOLD}x)")
+            if isinstance(allowed, str):  # scenario outcome mismatch
+                print(f"::error::scenario mismatch {name}:{key} "
+                      f"({allowed}): baseline={base_v!r} got={got!r}")
+            else:
+                print(f"::error::bench regression {name}:{key}: "
+                      f"{got:.4f}s > allowed {allowed:.4f}s "
+                      f"(baseline {base_v:.4f}s, threshold {THRESHOLD}x)")
         sys.exit(1)
     print("bench-regression: all wall-times within threshold")
 

@@ -186,6 +186,35 @@ def vss_overhead_factor(p: CostParams, degree: int | None = None) -> float:
     return twophase_msg_size_vss(p, degree) / twophase_msg_size(p)
 
 
+# -- Norm-bound dealer audit (scenario-harness extension of Eqs. 5-6) --------
+#
+# With a norm bound configured (``norm_bound`` — DESIGN.md §11) each
+# non-final live committee member forwards its *per-dealer* share rows
+# to the round's final member so it can reconstruct every dealer's
+# decoded update individually and blame the ones whose L2 norm exceeds
+# the bound.  That is one logical message per (non-final member, epoch)
+# of ``n * s`` elements (n dealer rows of s codeword elements,
+# concatenated — the wire layer keys logical messages by
+# (src, dst, type), so the rows ride one metered message).  The final
+# member's own rows never travel; verification and blame are local.
+# The counting transports meter the leg under ``phase2_audit`` and the
+# scenario harness cross-checks these forms exactly.
+
+
+def phase2_audit_elems(p: CostParams) -> int:
+    """Elements per audit message: n dealer rows of s elements."""
+    return p.n * p.s
+
+
+def phase2_audit_msg_num(p: CostParams) -> int:
+    """One audit message per non-final live member per epoch."""
+    return (p.m - 1) * p.e
+
+
+def phase2_audit_msg_size(p: CostParams) -> int:
+    return phase2_audit_msg_num(p) * phase2_audit_elems(p)
+
+
 # -- Per-round committee re-election (Eq. 3-4 run every epoch) ---------------
 #
 # The paper amortizes Phase I over all e epochs; running Alg. 2 every

@@ -49,6 +49,30 @@ TAMPER_FLIP_MASK = 0x00FF00FF
 TAMPER_SEED_XOR = 0xBADBAD
 TAMPER_MODES = ("flip", "wrong_poly", "replay")
 
+#: Dealer-side adversary of the scenario harness (DESIGN.md §11) —
+#: again one definition for both injection sites (the sim transport's
+#: ``dealer_tamper=`` and the wire worker's ``--poison`` hook).
+#: ``scale``/``sign_flip`` are the classic model-replacement poisons
+#: (honest shares of a boosted update — caught by the norm-bound audit
+#: on the decoded per-dealer sums); ``malformed`` breaks the share
+#: stream itself while broadcasting honest commitments (caught by the
+#: per-dealer VSS verify, a fatal protocol violation).
+#:
+#: POISON_SCALE stays inside the Q15.16 clip (±64, §5): the poison must
+#: survive encoding unsaturated so detection is the *norm audit's* job,
+#: not a side effect of fixed-point clamping.
+POISON_SCALE = 32.0
+DEALER_TAMPER_MODES = ("scale", "sign_flip", "malformed")
+
+
+def update_norm(decoded) -> float:
+    """L2 norm of a decoded per-dealer update, as *both* backends
+    compute it (float64 accumulation over the float32 decode) — the
+    norm-bound blame decision must be bit-identical between the sim
+    transport and the wire's final member, so the comparison lives
+    exactly once."""
+    return float(np.linalg.norm(np.asarray(decoded, dtype=np.float64)))
+
 
 @dataclasses.dataclass
 class RoundOutcome:
@@ -60,6 +84,12 @@ class RoundOutcome:
     #: election) — empty for every honest/crash-only round, so all
     #: pre-VSS comparisons are unchanged
     blamed: set = dataclasses.field(default_factory=set)
+    #: *dealers* caught submitting poisoned updates this round (norm
+    #: bound exceeded on their decoded per-dealer sum — DESIGN.md §11).
+    #: Their updates are excluded from the round's mean and the driver
+    #: bans them from future rounds; like ``blamed`` the default keeps
+    #: every pre-scenario equality comparison unchanged.
+    blamed_dealers: set = dataclasses.field(default_factory=set)
 
 
 def round_rng(seed: int, round_index: int) -> np.random.RandomState:
@@ -100,7 +130,8 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
                     committee: Sequence[int] | None = None,
                     reconstruct_threshold: int | None = None,
                     resurrect: bool = True,
-                    blamed: Iterable[int] = ()) -> RoundOutcome:
+                    blamed: Iterable[int] = (),
+                    blamed_dealers: Iterable[int] = ()) -> RoundOutcome:
     """Fold *observed* fault sets into a quorum-checked ``RoundOutcome``.
 
     The shared tail of the fault model: ``apply_faults`` feeds it the
@@ -125,21 +156,31 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
         resurrected (it is malicious, not slow) and it is reported in
         its own ``RoundOutcome.blamed`` set so the driver evicts it
         from the next election.
+      blamed_dealers: parties whose *updates* the norm-bound audit (or
+        per-dealer VSS verify) rejected this round.  Same exclusion
+        semantics as ``blamed`` — out of the round, never resurrected,
+        barred from carrying a quorum-floor round — but reported in
+        ``RoundOutcome.blamed_dealers`` because the remedy differs:
+        the driver bans the dealer from future *rounds* (its data is
+        poisoned), not just from committee elections.
     """
     latency_s = latency_s or {}
     blamed = set(blamed) & set(members)
-    dropped = set(dropped) & set(members) - blamed
-    straggled = set(straggled) & set(members) - dropped - blamed
-    alive = set(members) - dropped - straggled - blamed
+    blamed_dealers = set(blamed_dealers) & set(members) - blamed
+    malicious = blamed | blamed_dealers
+    dropped = set(dropped) & set(members) - malicious
+    straggled = set(straggled) & set(members) - dropped - malicious
+    alive = set(members) - dropped - straggled - malicious
 
     if committee is not None and reconstruct_threshold is not None:
-        # blamed members are barred from resurrection by shrinking the
-        # committee the quorum logic may draw from; the threshold is
-        # unchanged (reconstruction still needs degree+1 honest rows)
-        com = [w for w in committee if w not in blamed]
+        # blamed members/dealers are barred from resurrection by
+        # shrinking the committee the quorum logic may draw from; the
+        # threshold is unchanged (reconstruction still needs degree+1
+        # honest rows)
+        com = [w for w in committee if w not in malicious]
         alive, dropped, straggled = _enforce_committee_quorum(
-            alive, dropped, straggled, set(members) - blamed, latency_s,
-            com, reconstruct_threshold, resurrect=resurrect)
+            alive, dropped, straggled, set(members) - malicious,
+            latency_s, com, reconstruct_threshold, resurrect=resurrect)
 
     if not alive:
         # quorum floor: never lose the round entirely; keep the fastest
@@ -148,7 +189,7 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
         # left to resurrect and the round must fail loudly rather than
         # seat a known-malicious survivor (and silently erase its
         # blame on the way).
-        pool = set(members) - blamed
+        pool = set(members) - malicious
         if not pool:
             raise ValueError(
                 f"every member of {sorted(members)} was blamed by the "
@@ -158,7 +199,7 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
         dropped.discard(fastest)
         straggled.discard(fastest)
     return RoundOutcome(alive=alive, dropped=dropped, straggled=straggled,
-                        blamed=blamed)
+                        blamed=blamed, blamed_dealers=blamed_dealers)
 
 
 def _enforce_committee_quorum(alive, dropped, straggled, members,

@@ -66,6 +66,15 @@ class FedAvgResult:
     msg_size: int
     wall_s: float
     outcomes: list
+    #: parties banned mid-run by the transport's blame paths (tampering
+    #: committee members and poisoned dealers alike — DESIGN.md §11);
+    #: once banned a party never rejoins, even if the membership
+    #: schedule re-lists it
+    banned: set = dataclasses.field(default_factory=set)
+    #: per-phase ``(msg_num, msg_size)`` wire accounting — the same
+    #: ``Network`` counters msg_num/msg_size total, broken out so the
+    #: scenario harness can diff each phase against its closed form
+    phases: dict = dataclasses.field(default_factory=dict)
 
 
 def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
@@ -104,10 +113,14 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
     history, outcomes = [], []
     t0 = time.perf_counter()
     members = set(range(cfg.n_parties))
+    banned: set[int] = set()
 
     for epoch in range(cfg.epochs):
         if membership_schedule is not None:
-            new_members = set(membership_schedule(epoch))
+            # a banned party never rejoins: blame (member tampering or
+            # dealer poisoning) is sticky across the whole run even if
+            # the churn schedule re-lists the id
+            new_members = set(membership_schedule(epoch)) - banned
             if new_members != members:
                 members = new_members
                 if cfg.protocol == "two_phase":
@@ -152,6 +165,24 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
         # party-i's Philox stream regardless of who else dropped
         mean, _ = sim.aggregate(cfg.protocol, locals_flat, party_ids=live)
 
+        if cfg.protocol == "two_phase":
+            # fold transport-observed blame (VSS member tampering,
+            # norm-audited dealer poisoning) into the recorded outcome
+            # and ban the offenders from all remaining rounds; the
+            # transport already evicted them from future elections, so
+            # the immediate re-election seats an honest committee
+            t_out = getattr(sim.transports["two_phase"],
+                            "last_outcome", None)
+            newly = (set() if t_out is None
+                     else (t_out.blamed | t_out.blamed_dealers) & members)
+            if newly:
+                outcome.blamed |= t_out.blamed & members
+                outcome.blamed_dealers |= t_out.blamed_dealers & members
+                outcome.alive -= newly
+                banned |= newly
+                members = members - newly
+                sim.elect_committee()
+
         params = unflatten(mean)
         if eval_fn is not None:
             history.append(eval_fn(params, epoch))
@@ -159,4 +190,7 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
     stats = sim.net.stats()
     return FedAvgResult(params=params, history=history,
                         msg_num=stats.msg_num, msg_size=stats.msg_size,
-                        wall_s=time.perf_counter() - t0, outcomes=outcomes)
+                        wall_s=time.perf_counter() - t0, outcomes=outcomes,
+                        banned=banned,
+                        phases={k: (st.msg_num, st.msg_size)
+                                for k, st in sim.net.phases.items()})

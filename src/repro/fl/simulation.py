@@ -32,7 +32,19 @@ from repro.core.fixed_point import FixedPointConfig
 from .transport import (Network, P2PTransport, PhaseStats, PlainTransport,
                         Transport, TwoPhaseTransport)
 
-__all__ = ["FLSimulation", "Network", "PhaseStats"]
+__all__ = ["FLSimulation", "Network", "PhaseStats", "UnknownPartyError"]
+
+
+class UnknownPartyError(ValueError):
+    """``aggregate`` was handed a ``party_ids`` entry outside the
+    registered population ``range(n)``.
+
+    Raised loudly because the failure mode is otherwise silent and
+    *wrong twice*: the Philox mask stream is keyed by party id, so an
+    unknown id masks with a stream no other party unmasks, and the
+    ``Network`` counters attribute its messages to a party the cost
+    model (Eqs. 3–6) does not know about — the counter cross-check
+    tests would then fail far from the actual bug."""
 
 
 class FLSimulation:
@@ -59,6 +71,8 @@ class FLSimulation:
                  wire_kwargs: dict | None = None,
                  vss: bool = False,
                  reelect_each_round: bool = False,
+                 norm_bound: float | None = None,
+                 dealer_tamper: dict | None = None,
                  **unknown):
         if unknown:
             # catch typos (chunk_elms, compresion, ...) loudly instead
@@ -110,7 +124,10 @@ class FLSimulation:
             # re-election is the committee's Phase I (DESIGN.md §10)
             "two_phase": TwoPhaseTransport(n, m=m, b=b, vss=vss,
                                            reelect_each_round=
-                                           reelect_each_round, **kw),
+                                           reelect_each_round,
+                                           norm_bound=norm_bound,
+                                           dealer_tamper=dealer_tamper,
+                                           **kw),
         }
         if backend == "wire":
             # real multi-process deployment for the paper's protocol;
@@ -125,6 +142,7 @@ class FLSimulation:
                 fp=fp, shamir_degree=shamir_degree,
                 chunk_elems=chunk_elems, vss=vss,
                 reelect_each_round=reelect_each_round,
+                norm_bound=norm_bound, dealer_tamper=dealer_tamper,
                 **(wire_kwargs or {}))
 
     @property
@@ -146,10 +164,31 @@ class FLSimulation:
         are their original ids (party i always masks with party-i's
         Philox stream).  Returns ``(mean, total network stats)``.
         """
+        if party_ids is not None:
+            self._check_party_ids(party_ids)
         mean = self.transports[protocol].aggregate(
             flats, party_ids, round_index=self.round, **kw)
         self.round += 1
         return mean, self.net.stats()
+
+    def _check_party_ids(self, party_ids) -> None:
+        """Reject ids outside ``range(n)`` with a did-you-mean hint
+        (mirrors the unknown-kwargs check above — loud, typed, early)."""
+        bad = sorted({int(i) for i in party_ids} - set(range(self.n)))
+        if not bad:
+            return
+        hints = []
+        for i in bad:
+            near = min(max(i, 0), self.n - 1)
+            hints.append(f"{i}" + (f" (did you mean {near}?)"
+                                   if near != i else ""))
+        raise UnknownPartyError(
+            f"party_ids contains ids not registered with this "
+            f"FLSimulation(n={self.n}): {', '.join(hints)}; valid ids "
+            f"are 0..{self.n - 1}.  An unknown id would mask with a "
+            "Philox stream nobody unmasks and mis-attribute Network "
+            "counter traffic, so it is rejected before any message is "
+            "counted")
 
     # -- P2P aggregation (baseline framework) ------------------------------
 

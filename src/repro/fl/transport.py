@@ -44,8 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import committee as committee_mod
-from repro.fl.faults import (TAMPER_FLIP_MASK, TAMPER_SEED_XOR,
-                             resolve_outcome)
+from repro.fl.faults import (DEALER_TAMPER_MODES, POISON_SCALE,
+                             TAMPER_FLIP_MASK, TAMPER_SEED_XOR,
+                             resolve_outcome, update_norm)
 from repro.core.aggregation import (DEFAULT_CHUNK_ELEMS, SecureAggregator,
                                     _check_chunk_elems)
 from repro.core.compression import (CompressionConfig, compress_topk_batch,
@@ -337,7 +338,9 @@ class TwoPhaseTransport(_SimTransport):
     protocol = "two_phase"
 
     def __init__(self, n: int, *, vss: bool = False,
-                 reelect_each_round: bool = False, **kw):
+                 reelect_each_round: bool = False,
+                 norm_bound: float | None = None,
+                 dealer_tamper: dict | None = None, **kw):
         super().__init__(n, **kw)
         if vss and self.scheme != "shamir":
             raise ValueError(
@@ -349,6 +352,34 @@ class TwoPhaseTransport(_SimTransport):
             raise ValueError(
                 "vss=True with top-k compression is not supported yet "
                 "— commitments would bind the densified update")
+        if norm_bound is not None:
+            norm_bound = float(norm_bound)
+            if norm_bound <= 0:
+                raise ValueError(
+                    f"norm_bound must be positive, got {norm_bound}")
+            if not vss:
+                raise ValueError(
+                    "norm_bound needs vss=True — the dealer audit rides "
+                    "the VSS trust infrastructure (per-dealer rows are "
+                    "bound to verified commitments; DESIGN.md §11)")
+        self.norm_bound = norm_bound
+        self.dealer_tamper: dict[int, tuple[str, int]] = {}
+        for pid, (mode, rnd) in (dealer_tamper or {}).items():
+            if mode not in DEALER_TAMPER_MODES:
+                raise ValueError(
+                    f"unknown dealer tamper mode {mode!r}; expected one "
+                    f"of {DEALER_TAMPER_MODES}")
+            if mode == "malformed" and not vss:
+                raise ValueError(
+                    "dealer_tamper mode 'malformed' needs vss=True — "
+                    "without commitments a corrupted share stream is "
+                    "undetectable and the round would silently return "
+                    "garbage")
+            if not 0 <= int(pid) < n:
+                raise ValueError(
+                    f"dealer_tamper names out-of-range party {pid} "
+                    f"(valid ids are 0..{n - 1})")
+            self.dealer_tamper[int(pid)] = (str(mode), int(rnd))
         self.vss = vss
         self.reelect_each_round = reelect_each_round
         self.committee: tuple[int, ...] | None = None
@@ -433,6 +464,12 @@ class TwoPhaseTransport(_SimTransport):
                     f"committee_tamper targets {sorted(bad_targets)} that "
                     f"are not live members of committee {com}")
 
+        # the dealer adversary poisons its update BEFORE encoding: the
+        # shares/commitments it produces are honest shares of the
+        # poisoned value (same float32 multiply the wire worker's
+        # --poison hook applies to its received INPUT — bit-identical
+        # trajectories)
+        flats = self._poison_flats(flats, ids, round_index)
         flats, wire_s = self._compress(flats, ids)
         # 1) every live party uploads one (possibly sparsified) share to
         #    each live member — the only leg top-k shrinks (Eq. 6 topk)
@@ -447,6 +484,12 @@ class TwoPhaseTransport(_SimTransport):
         #    term); sums over differently-supported sparse updates live
         #    on the union support -> dense size s
         self.net.send_batch(m_live - 1, s, "phase2_exchange")
+        if self.norm_bound is not None:
+            # 2b) norm-bound dealer audit: each non-final live member
+            #     forwards its per-dealer share rows to the final
+            #     member as one concatenated logical message of l·s
+            #     elements (costmodel.phase2_audit_* closed forms)
+            self.net.send_batch(m_live - 1, l * s, "phase2_audit")
         # 3) committee broadcasts the dense aggregate G to every party
         self.net.send_batch(self.n, s, "phase2_broadcast")
 
@@ -459,6 +502,25 @@ class TwoPhaseTransport(_SimTransport):
                                      member_rows=live_pos, points=points)
         return self._vss_aggregate(flats, ids, round_index, live_pos,
                                    dropped, tamper)
+
+    def _poison_flats(self, flats, ids, round_index):
+        """Apply the dealer adversary's scale/sign_flip poison.
+
+        One float32 multiply per poisoned row — the identical IEEE
+        operation the wire worker applies to its received INPUT, so the
+        poisoned trajectories are bit-identical across backends.
+        """
+        active = {p: mode for p, (mode, rnd) in self.dealer_tamper.items()
+                  if rnd == round_index and p in ids
+                  and mode in ("scale", "sign_flip")}
+        if not active:
+            return flats
+        row = {p: k for k, p in enumerate(ids)}
+        for p, mode in sorted(active.items()):
+            factor = jnp.float32(POISON_SCALE if mode == "scale"
+                                 else -POISON_SCALE)
+            flats = flats.at[row[p]].set(flats[row[p]] * factor)
+        return flats
 
     # -- malicious-secure epilogue (verify -> blame -> reconstruct) -------
 
@@ -525,7 +587,8 @@ class TwoPhaseTransport(_SimTransport):
             rows = rows.at[w].set(bad)
         return rows
 
-    def _finish_outcome(self, ids, dropped, blamed):
+    def _finish_outcome(self, ids, dropped, blamed,
+                        blamed_dealers=frozenset()):
         """Fold the observed fault/blame sets through the shared quorum
         brain (same call shape as the wire coordinator) and update the
         eviction/reputation state the next election reads."""
@@ -537,10 +600,17 @@ class TwoPhaseTransport(_SimTransport):
             reconstruct_threshold=(
                 self.degree + 1 if self.scheme == "shamir" else self.m)
             if set(self.committee) <= members else None,
-            resurrect=False, blamed=blamed)
+            resurrect=False, blamed=blamed,
+            blamed_dealers=blamed_dealers)
         for w in blamed:
             self.evicted.add(int(w))
             self.reputation[int(w)] = 0.0
+        for p in blamed_dealers:
+            # a poisoning dealer is evicted from future elections too —
+            # mirrored by the wire coordinator so the election oracle
+            # cross-check stays consistent across backends
+            self.evicted.add(int(p))
+            self.reputation[int(p)] = 0.0
         if self.reelect_each_round:
             # reputation only steers the per-round re-election; leaving
             # it untouched otherwise keeps the historical single-shot
@@ -553,6 +623,13 @@ class TwoPhaseTransport(_SimTransport):
                        tamper):
         """Verify member rows chunk-by-chunk, blame, reconstruct."""
         from repro.kernels.verify_shares import verify_shares
+        malformed = sorted(
+            p for p, (mode, rnd) in self.dealer_tamper.items()
+            if mode == "malformed" and rnd == round_index and p in ids)
+        if self.norm_bound is not None or malformed:
+            return self._audited_vss_aggregate(
+                flats, ids, round_index, live_pos, dropped, tamper,
+                malformed)
         l, d = int(flats.shape[0]), int(flats.shape[1])
         com = self.committee
         member_sums = self._member_sums(flats, ids, round_index, d)
@@ -591,6 +668,124 @@ class TwoPhaseTransport(_SimTransport):
         if len(good) == self.m:
             good_points = None
         return self.agg.reconstruct_mean(good_rows, l, points=good_points)
+
+    def _audited_vss_aggregate(self, flats, ids, round_index, live_pos,
+                               dropped, tamper, malformed):
+        """Per-dealer epilogue of the scenario harness (DESIGN.md §11).
+
+        Three stages replace the fold-first epilogue whenever the
+        norm-bound audit is on (or a malformed dealer is injected):
+
+        1. every dealer's live share rows are verified against its
+           *own* commitments (the wire's ``_verify_dealer_shares``) —
+           a mismatch is protocol-fatal on both backends;
+        2. each dealer's decoded update is reconstructed from the live
+           member rows and its L2 norm checked against ``norm_bound``
+           — violators are blamed (``RoundOutcome.blamed_dealers``)
+           and their stacks excluded from the member sums;
+        3. the member-row verification of ``_vss_aggregate`` runs on
+           the cleaned sums against the honest dealers' aggregate
+           commitments, and the mean reconstructs over the honest
+           count.
+
+        The cleaned member sums are order-independent modular adds, so
+        an all-honest audited round is bit-identical to the un-audited
+        path (and to the wire's final member folding the same subset).
+        """
+        from repro.core import philox, vss
+        from repro.kernels.verify_shares import verify_shares
+        l, d = int(flats.shape[0]), int(flats.shape[1])
+        com = self.committee
+        k_live = len(live_pos)
+        points_live = tuple(w + 1 for w in live_pos)
+
+        # whole-vector per-dealer stacks [l, m, d] — bit-identical to
+        # the chunked stream by the §8 counter invariant
+        stacks = jnp.asarray(self.agg.make_shares_batch(
+            flats, seed=self.seed, party_ids=ids,
+            round_index=round_index), dtype=jnp.uint32)
+        row = {p: k for k, p in enumerate(ids)}
+        for p in malformed:
+            # the malformed dealer corrupts its share stream while
+            # broadcasting honest commitments (same corruption the wire
+            # worker's --poison malformed hook applies)
+            stacks = stacks.at[row[p]].set(
+                stacks[row[p]] ^ jnp.uint32(TAMPER_FLIP_MASK))
+
+        # each dealer's own commitment broadcast [l, d, deg+1, 2] —
+        # re-derived exactly as _aggregate_commits derives the streams
+        stream_hi = (round_index << 24) >> 32
+        lo_words = [((round_index << 24) & 0xFFFFFFFF) | int(i)
+                    for i in ids]
+
+        def _one(block, lo):
+            k0, k1 = philox.derive_key(self.seed, (lo, stream_hi))
+            return vss.feldman_commit(self.agg.encode(block), k0, k1,
+                                      degree=self.degree)
+
+        commits = jax.vmap(_one)(flats, jnp.asarray(lo_words, jnp.uint32))
+
+        # 1) per-dealer share verification — dealers concatenate on the
+        # element axis (one batched kernel call, like the wire member)
+        sel = stacks[:, jnp.asarray(live_pos), :]            # [l, k, d]
+        rows_cat = jnp.transpose(sel, (1, 0, 2)).reshape(k_live, l * d)
+        commits_cat = commits.reshape(l * d, self.degree + 1, 2)
+        ok = np.asarray(verify_shares(rows_cat, commits_cat, points_live,
+                                      forced=self.kernel_backend))
+        dealer_ok = ok.reshape(k_live, l, d).all(axis=(0, 2))
+        bad = sorted(ids[k] for k in range(l) if not dealer_ok[k])
+        if bad:
+            # protocol-fatal on both backends: members cannot shrink
+            # the included set unilaterally (the wire party BLAMEs
+            # kind="dealer" and aborts the round loudly)
+            raise ValueError(
+                f"dealer share verification failed for parties {bad} — "
+                "shares do not match the dealer's own commitments")
+
+        # 2) norm-bound audit on the decoded per-dealer updates
+        blamed_dealers: set[int] = set()
+        if self.norm_bound is not None:
+            pts = None if k_live == self.m else points_live
+            for k in range(l):
+                code = self.agg.reconstruct_sum(sel[k], points=pts)
+                decoded = self.agg.fp.decode_mean(code, 1)
+                if update_norm(decoded) > self.norm_bound:
+                    blamed_dealers.add(ids[k])
+        honest = [k for k in range(l) if ids[k] not in blamed_dealers]
+        if not honest:
+            raise ValueError(
+                f"the norm audit blamed every dealer {sorted(ids)} — "
+                "no honest update left to aggregate")
+        l_eff = len(honest)
+        member_sums = self.agg.reduce_party_shares(
+            stacks[jnp.asarray(honest)])
+
+        # 3) member-row verification on the cleaned sums (the
+        # _vss_aggregate detector against the honest dealers' aggregate
+        # commitments), then reconstruct over the honest count
+        rows = self._tampered_rows(member_sums, flats, ids, round_index,
+                                   d, tamper)
+        live_rows = rows[jnp.asarray(live_pos)]
+        agg_commits = vss.aggregate_commits(commits[jnp.asarray(honest)])
+        ok = np.asarray(verify_shares(live_rows, agg_commits, points_live,
+                                      forced=self.kernel_backend))
+        row_ok = ok.all(axis=1)
+        blamed = {com[live_pos[i]] for i in range(k_live) if not row_ok[i]}
+        good = [i for i in range(k_live) if row_ok[i]]
+        if len(good) < self.degree + 1:
+            raise ValueError(
+                f"only {len(good)} committee rows verified but Shamir "
+                f"degree {self.degree} needs {self.degree + 1}; blamed "
+                f"members: {sorted(blamed)}")
+        self._finish_outcome(ids, dropped, blamed,
+                             blamed_dealers=blamed_dealers)
+
+        good_points = tuple(points_live[i] for i in good)
+        good_rows = live_rows[jnp.asarray(good)]
+        if len(good) == self.m:
+            good_points = None
+        return self.agg.reconstruct_mean(good_rows, l_eff,
+                                         points=good_points)
 
 
 class SPMDTransport(Transport):

@@ -48,6 +48,12 @@ class WireConfig:
     #: re-run Alg. 2 at the start of every aggregation round, evicting
     #: blamed members and down-weighting faulted ones
     reelect_each_round: bool = False
+    #: L2 norm bound of the per-dealer audit (DESIGN.md §11): non-final
+    #: members forward their per-dealer rows to the final member, which
+    #: reconstructs each dealer's decoded update and blames the ones
+    #: whose norm exceeds the bound.  Requires vss (the rows must be
+    #: commitment-verified before they can carry blame).
+    norm_bound: float | None = None
 
     def __post_init__(self):
         _check_chunk_elems(self.chunk_elems)
@@ -59,6 +65,14 @@ class WireConfig:
             raise ValueError(
                 "vss=True needs scheme='shamir' (Feldman commitments "
                 "verify polynomial evaluations)")
+        if self.norm_bound is not None:
+            if not self.vss:
+                raise ValueError(
+                    "norm_bound needs vss=True: unverified per-dealer "
+                    "rows cannot carry a blame decision")
+            if not self.norm_bound > 0:
+                raise ValueError(
+                    f"norm_bound={self.norm_bound} must be positive")
 
     def fp(self) -> FixedPointConfig:
         return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
@@ -105,7 +119,8 @@ class WireConfig:
                                 chunk_elems: int | None = None,
                                 deadline_s: float | None = 30.0,
                                 vss: bool = False,
-                                reelect_each_round: bool = False
+                                reelect_each_round: bool = False,
+                                norm_bound: float | None = None
                                 ) -> "WireConfig":
         """Build from the simulation transports' kwarg vocabulary."""
         if fp is None:
@@ -119,4 +134,5 @@ class WireConfig:
                    chunk_elems=(DEFAULT_CHUNK_ELEMS if chunk_elems is None
                                 else chunk_elems),
                    deadline_s=deadline_s, vss=vss,
-                   reelect_each_round=reelect_each_round)
+                   reelect_each_round=reelect_each_round,
+                   norm_bound=norm_bound)

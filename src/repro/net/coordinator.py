@@ -84,6 +84,12 @@ class Coordinator:
         self.reputation: dict[int, float] = {}
         self._elected_round: int | None = None
         self._round_blamed: set[int] = set()
+        #: dealers the final member's norm-bound audit blamed this
+        #: round (kind="poison" BLAME — DESIGN.md §11)
+        self._round_blamed_dealers: set[int] = set()
+        #: the round's included (upload-complete) party set — the only
+        #: parties a poison BLAME may legitimately name
+        self._round_included: list[int] = []
         #: the only party whose member-BLAME is accepted this round
         #: (the final live member — it runs the row verification)
         self._verifier: int | None = None
@@ -254,7 +260,7 @@ class Coordinator:
             raise ProtocolError(
                 f"malformed BLAME payload from party {pid}: {e}")
         committee = set(self.committee or ())
-        if kind not in ("member", "dealer") or not blamed:
+        if kind not in ("member", "dealer", "poison") or not blamed:
             raise ProtocolError(
                 f"BLAME from party {pid} with kind={kind!r} and "
                 f"blamed={sorted(blamed)}")
@@ -277,6 +283,23 @@ class Coordinator:
             self._round_blamed |= blamed
             self.log(f"member {pid} blames members {sorted(blamed)} "
                      f"(round {frame.round})")
+        elif kind == "poison":
+            # only the round's verifier (the final member — it alone
+            # reconstructs the per-dealer sums) may blame poisoned
+            # dealers, and only included dealers can be blamed; unlike
+            # kind="dealer" this is non-fatal — the verifier excludes
+            # the poisoned updates and the round completes clean
+            if pid != self._verifier:
+                raise ProtocolError(
+                    f"party {pid} sent a poison BLAME but the round's "
+                    f"verifier is {self._verifier}")
+            if not blamed <= set(self._round_included):
+                raise ProtocolError(
+                    f"poison BLAME names non-included parties "
+                    f"{sorted(blamed - set(self._round_included))}")
+            self._round_blamed_dealers |= blamed
+            self.log(f"member {pid} blames dealers {sorted(blamed)} "
+                     f"for poisoned updates (round {frame.round})")
         else:
             # a dealer whose share fails its own commitments is
             # protocol-fatal: members cannot unilaterally shrink the
@@ -493,6 +516,8 @@ class Coordinator:
         members = set(ids)
         self._round_dropped = set()
         self._round_blamed = set()
+        self._round_blamed_dealers = set()
+        self._round_included = []
         self._verifier = None
         self._ready = set()
         self._upload_done = {}
@@ -578,6 +603,7 @@ class Coordinator:
                           key=row.get)
         if not included:
             raise WireTimeoutError("no party completed its upload")
+        self._round_included = list(included)
 
         # 5) COMMIT: members fold exactly this set, then chain
         commit_body = codec.encode_json({
@@ -599,11 +625,11 @@ class Coordinator:
                 f"{sorted(chain_mon.straggled)}")
         mean = self._result_mean
 
-        if self._round_blamed:
+        if self._round_blamed or self._round_blamed_dealers:
             # the verifier's BLAME landed before its RESULT (same
-            # socket, FIFO): re-fold the outcome with the blamed set —
-            # blamed members are out of the round, never resurrected,
-            # and evicted from every future election
+            # socket, FIFO): re-fold the outcome with the blamed sets —
+            # blamed members/dealers are out of the round, never
+            # resurrected, and evicted from every future election
             blamed = self._round_blamed & members
             outcome = resolve_outcome(
                 members, dropped, straggled,
@@ -611,8 +637,9 @@ class Coordinator:
                 reconstruct_threshold=(cfg.reconstruct_threshold()
                                        if set(self.committee) <= members
                                        else None),
-                resurrect=False, blamed=blamed)
-        for w in self._round_blamed:
+                resurrect=False, blamed=blamed,
+                blamed_dealers=self._round_blamed_dealers & members)
+        for w in self._round_blamed | self._round_blamed_dealers:
             self.evicted.add(w)
             self.reputation[w] = 0.0
         if cfg.reelect_each_round:

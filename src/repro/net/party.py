@@ -63,8 +63,9 @@ from repro.core.additive import share as additive_share
 from repro.core.field import MERSENNE_P_INT
 # the sim and the wire inject the same adversary: single definition of
 # the corruption constants in fl.faults (numpy-only, cycle-free)
-from repro.fl.faults import (TAMPER_FLIP_MASK, TAMPER_MODES,
-                             TAMPER_SEED_XOR)
+from repro.fl.faults import (DEALER_TAMPER_MODES, POISON_SCALE,
+                             TAMPER_FLIP_MASK, TAMPER_MODES,
+                             TAMPER_SEED_XOR, update_norm)
 
 from . import codec
 from .config import WireConfig
@@ -85,7 +86,9 @@ class PartyWorker:
     def __init__(self, host: str, port: int, party_id: int, *,
                  die_after_upload: int | None = None,
                  tamper: str | None = None,
-                 tamper_round: int | None = None, log=None):
+                 tamper_round: int | None = None,
+                 poison: str | None = None,
+                 poison_round: int | None = None, log=None):
         self.host = host
         self.port = port
         self.pid = int(party_id)
@@ -96,6 +99,12 @@ class PartyWorker:
                 f"{TAMPER_MODES}")
         self.tamper = tamper
         self.tamper_round = tamper_round
+        if poison is not None and poison not in DEALER_TAMPER_MODES:
+            raise ValueError(
+                f"unknown poison mode {poison!r}; expected one of "
+                f"{DEALER_TAMPER_MODES}")
+        self.poison = poison
+        self.poison_round = poison_round
         self.log = log or (lambda msg: None)
         self.cfg: WireConfig | None = None
         self.agg = None
@@ -240,6 +249,20 @@ class PartyWorker:
                 raise ProtocolError(
                     f"INPUT carried {flat.shape[0]} elements, "
                     f"ROUND_START promised {d}")
+            poisoning = self.poison_round == round_index
+            if poisoning and self.poison in ("scale", "sign_flip"):
+                # TEST HOOK: model-replacement poison — the dealer
+                # deals *honestly* (shares AND commitments) over a
+                # boosted update; only the norm audit can catch it
+                factor = np.float32(POISON_SCALE if self.poison == "scale"
+                                    else -POISON_SCALE)
+                flat = (flat * factor).astype(np.float32)
+                self.log(f"test hook: poisoning round {round_index} "
+                         f"input ({self.poison})")
+            malformed = poisoning and self.poison == "malformed"
+            if malformed:
+                self.log(f"test hook: malforming round {round_index} "
+                         "share stream (honest commitments)")
             # stream shares chunk-by-chunk: elem_base keeps the Philox
             # counters exactly where the whole-vector call would put
             # them, so no [m, d] stack ever materializes per frame
@@ -249,6 +272,11 @@ class PartyWorker:
                     flat[None, e_lo:e_hi], seed=cfg.seed,
                     party_ids=[self.pid], round_index=round_index,
                     elem_base=e_lo))[0]                # [m, chunk]
+                if malformed:
+                    # corrupt the share stream while the commitment
+                    # stream below stays honest — the per-dealer VSS
+                    # verify at every member catches exactly this
+                    stack = stack ^ np.uint32(TAMPER_FLIP_MASK)
                 if cfg.vss:
                     # commitments for this chunk go out BEFORE its
                     # uploads: the coordinator's relay-before-meter
@@ -366,6 +394,77 @@ class PartyWorker:
         ok_per_dealer = ok.reshape(len(included), d).all(axis=1)
         return [p for k, p in enumerate(included) if not ok_per_dealer[k]]
 
+    async def _audit_dealers(self, round_index: int, rows, order,
+                             committee, included, buffers,
+                             asm: MessageAssembler, d: int):
+        """Final-member norm-bound audit (DESIGN.md §11).
+
+        Collects every non-final member's per-dealer rows (DEALER_ROWS),
+        checks each matrix refolds to the member's partial-sum row
+        (protocol integrity — a member cannot tell the audit one story
+        and the reconstruction another), reconstructs each dealer's
+        decoded update, and blames dealers whose L2 norm exceeds
+        ``cfg.norm_bound`` (BLAME kind="poison", non-fatal).  Returns
+        ``(honest_dealers, cleaned_rows)`` — the member rows refolded
+        over honest dealers only, bit-identical to the sim transport's
+        cleaned ``reduce_party_shares`` (modular adds are
+        order-independent).
+        """
+        cfg = self.cfg
+        l = len(included)
+        matrices = {self.pid: np.concatenate(
+            [buffers[p] for p in included])}
+        if len(order) > 1:
+            matrices.update(await self._collect(
+                asm, MsgType.DEALER_ROWS, set(order[:-1])))
+        per_member: dict[int, np.ndarray] = {}
+        for w in order:
+            mat = matrices[w].astype(np.uint32, copy=False)
+            if mat.shape[0] != l * d:
+                raise ProtocolError(
+                    f"member {w} audit rows carry {mat.shape[0]} "
+                    f"words, expected {l * d}")
+            per_member[w] = mat.reshape(l, d)
+            refold = np.zeros(d, dtype=np.uint32)
+            for k_i in range(l):
+                refold = self._fold(refold, per_member[w][k_i])
+            if not np.array_equal(refold, rows[w]):
+                raise ProtocolError(
+                    f"member {w} audit rows do not refold to its "
+                    "partial-sum row (inconsistent audit evidence)")
+        pts = (None if len(order) == len(committee) else
+               tuple(committee.index(w) + 1 for w in order))
+        blamed = []
+        for k_i, p in enumerate(included):
+            stack = np.stack([per_member[w][k_i] for w in order])
+            code = self.agg.reconstruct_sum(stack, points=pts)
+            decoded = self.agg.fp.decode_mean(code, 1)
+            if update_norm(decoded) > cfg.norm_bound:
+                blamed.append(p)
+        if blamed:
+            self.log(f"round {round_index}: blaming dealers {blamed} "
+                     f"(norm bound {cfg.norm_bound} exceeded)")
+            await self._send(Frame(
+                MsgType.BLAME, round=round_index, src=self.pid,
+                payload=codec.encode_json(
+                    {"kind": "poison", "blamed": blamed,
+                     "round": round_index})))
+        honest = [p for p in included if p not in blamed]
+        if not honest:
+            raise ProtocolError(
+                f"the norm audit blamed every dealer {included} — no "
+                "honest update left to aggregate")
+        if not blamed:
+            return honest, rows
+        cleaned = {}
+        for w in order:
+            acc = np.zeros(d, dtype=np.uint32)
+            for k_i, p in enumerate(included):
+                if p not in blamed:
+                    acc = self._fold(acc, per_member[w][k_i])
+            cleaned[w] = acc
+        return honest, cleaned
+
     async def _member_duties(self, round_index: int, ids, committee, d,
                              asm: MessageAssembler) -> None:
         cfg = self.cfg
@@ -444,6 +543,7 @@ class PartyWorker:
         order = live_members
         my_idx = order.index(self.pid)
         k = len(order)
+        l_eff = l
         if cfg.scheme == "additive":
             # Alg. 3 chain: each member adds its local sum and passes on
             if my_idx > 0:
@@ -461,7 +561,20 @@ class PartyWorker:
         else:
             # Shamir rows must stay distinct: non-final members send
             # their sum row to the final live member (same m−1 count)
+            audit = cfg.norm_bound is not None
             if my_idx < k - 1:
+                if audit:
+                    # per-dealer rows ride ahead of the sum row so the
+                    # final member can reconstruct each dealer's update
+                    # individually (one logical l·d message per member
+                    # — costmodel.phase2_audit_*)
+                    await self._send_chunked(
+                        MsgType.DEALER_ROWS, order[-1],
+                        round_index=round_index,
+                        phase=Phase.PHASE2_AUDIT,
+                        arr=np.concatenate(
+                            [buffers[p] for p in included]),
+                        dtype_code=Wiredtype.UINT32)
                 await self._send_chunked(
                     MsgType.CHAIN_SUM, order[-1],
                     round_index=round_index, phase=Phase.PHASE2_EXCHANGE,
@@ -471,17 +584,23 @@ class PartyWorker:
             if k > 1:
                 rows.update(await self._collect(
                     asm, MsgType.CHAIN_SUM, set(order[:-1])))
+            honest = list(included)
+            if audit:
+                honest, rows = await self._audit_dealers(
+                    round_index, rows, order, committee, included,
+                    buffers, asm, d)
+                l_eff = len(honest)
             use_order = list(order)
             if cfg.vss:
                 use_order = await self._verify_member_rows(
-                    round_index, rows, order, committee, included,
+                    round_index, rows, order, committee, honest,
                     commit_bufs, d)
             member_sums = np.stack([rows[w] for w in use_order])
             points = (None if len(use_order) == len(committee) else
                       tuple(committee.index(w) + 1 for w in use_order))
 
         mean = np.asarray(self.agg.reconstruct_mean(
-            member_sums, l, points=points), dtype=np.float32)
+            member_sums, l_eff, points=points), dtype=np.float32)
         await self._send_chunked(
             MsgType.RESULT, -1, round_index=round_index,
             phase=Phase.WIRE_RESULT, arr=mean,
@@ -589,12 +708,20 @@ def main(argv=None) -> int:
                          "(the VSS adversary)")
     ap.add_argument("--tamper-round", type=int, default=None,
                     help="round index the --tamper hook fires on")
+    ap.add_argument("--poison", choices=DEALER_TAMPER_MODES, default=None,
+                    help="TEST HOOK: poison this dealer's round input "
+                         "(scale/sign_flip) or malform its share "
+                         "stream (the scenario-harness adversary)")
+    ap.add_argument("--poison-round", type=int, default=None,
+                    help="round index the --poison hook fires on")
     args = ap.parse_args(argv)
     log, fh = _open_log(args.party_id, args.log_file)
     worker = PartyWorker(args.host, args.port, args.party_id,
                          die_after_upload=args.die_after_upload,
                          tamper=args.tamper,
-                         tamper_round=args.tamper_round, log=log)
+                         tamper_round=args.tamper_round,
+                         poison=args.poison,
+                         poison_round=args.poison_round, log=log)
 
     async def _run():
         try:

@@ -61,6 +61,8 @@ class WireTransport(Transport):
                  chunk_elems: int | None = None,
                  deadline_s: float | None = 30.0,
                  vss: bool = False, reelect_each_round: bool = False,
+                 norm_bound: float | None = None,
+                 dealer_tamper: dict | None = None,
                  round_timeout_s: float = 120.0,
                  host: str = "127.0.0.1", port: int = 0,
                  spawn: bool = True,
@@ -71,7 +73,20 @@ class WireTransport(Transport):
             n, m=m, b=b, seed=seed, scheme=scheme, fp=fp,
             shamir_degree=shamir_degree, chunk_elems=chunk_elems,
             deadline_s=deadline_s, vss=vss,
-            reelect_each_round=reelect_each_round)
+            reelect_each_round=reelect_each_round,
+            norm_bound=norm_bound)
+        # dealer_tamper {pid: (mode, round)} becomes per-party --poison
+        # CLI flags: on the wire the adversary is the *worker process*
+        # poisoning its own input, not a coordinator-side mutation
+        party_extra_args = dict(party_extra_args or {})
+        for pid, (mode, rnd) in (dealer_tamper or {}).items():
+            pid = int(pid)
+            if not 0 <= pid < n:
+                raise ValueError(
+                    f"dealer_tamper party {pid} outside range({n})")
+            party_extra_args[pid] = (list(party_extra_args.get(pid, []))
+                                     + ["--poison", str(mode),
+                                        "--poison-round", str(int(rnd))])
         self.n = n
         self.m = m
         self.b = b
@@ -83,7 +98,7 @@ class WireTransport(Transport):
         self.host = host
         self._requested_port = port
         self.spawn = spawn
-        self.party_extra_args = party_extra_args or {}
+        self.party_extra_args = party_extra_args
         self.log_dir = log_dir or os.environ.get("REPRO_NET_LOG_DIR")
         self.startup_timeout_s = startup_timeout_s
         self.port: int | None = None

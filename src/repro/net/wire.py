@@ -121,6 +121,9 @@ class MsgType:
                         # commitment chunk (VSS; DESIGN.md §10)
     BLAME = 18          # member -> coordinator: verification-failure
                         # report JSON {kind, blamed, round}
+    DEALER_ROWS = 19    # non-final member -> final member (relayed):
+                        # per-dealer share rows for the norm-bound
+                        # audit (DESIGN.md §11)
 
     _NAMES = {}  # filled below
 
@@ -141,6 +144,9 @@ class Phase:
     WIRE_RESULT = 6         # final member -> coordinator (hub artifact)
     PHASE2_COMMIT = 7       # Feldman commitment broadcasts (VSS — the
                             # Eq. 5-6 extension, costmodel cross-check)
+    PHASE2_AUDIT = 8        # per-dealer rows forwarded to the final
+                            # member for the norm-bound audit (scenario
+                            # harness — costmodel.phase2_audit_*)
 
     #: Network counter name per phase code; WIRE_* phases are physical
     #: hub artifacts outside the paper's Eqs. 1-8 and are counted under
@@ -153,6 +159,7 @@ class Phase:
         WIRE_INPUT: "wire_input",
         WIRE_RESULT: "wire_result",
         PHASE2_COMMIT: "phase2_commit",
+        PHASE2_AUDIT: "phase2_audit",
     }
 
 

@@ -34,8 +34,9 @@ THRESHOLD = 1.5
 #: jitter by milliseconds on shared runners — a pure ratio threshold
 #: on them is noise, not signal
 NOISE_FLOOR_S = 0.01
-#: the scenario battery is gated by its own CI job (``scenarios``) via
-#: ``--benches scenarios`` — not part of the default perf matrix
+#: the scenario battery and the 100k/1k cohort row are gated by their
+#: own CI jobs (``scenarios`` / ``cohort-bench``) via ``--benches`` —
+#: not part of the default perf matrix
 BENCHES = ("msg_cost", "kernels_bench", "stream_bench")
 
 
@@ -97,6 +98,12 @@ def _fresh(name: str, quick: bool) -> dict:
             json.dump(disk, f, indent=2)
             f.write("\n")
         return out
+    if name == "cohort_bench":
+        from benchmarks import cohort_bench
+        # quick keeps the 100k-registry/1k-cohort scale (that scale IS
+        # the claim) and only trims the model dimension
+        return cohort_bench.write_bench_json("BENCH_cohort.json",
+                                             quick=quick)
     raise ValueError(f"unknown bench {name!r}")
 
 
@@ -121,6 +128,14 @@ def walls(name: str, bench: dict) -> dict[str, float]:
         return {f"{r['name']}_round_wall_s": r["round_wall_s"]
                 for r in bench.get("scenarios", [])
                 if not r.get("carried") and not r.get("aborted")}
+    if name == "cohort_bench":
+        out = {}
+        for row in bench.get("rows", []):
+            tag = f"n{row['n']}_c{row['cohort']}"
+            for key in ("register_wall_s", "sample_wall_s",
+                        "round_wall_s"):
+                out[f"{tag}_{key}"] = row[key]
+        return out
     raise ValueError(f"unknown bench {name!r}")
 
 
@@ -166,6 +181,7 @@ BASELINE_PATH = {
     "kernels_bench": "BENCH_kernels.json",
     "stream_bench": "BENCH_stream.json",
     "scenarios": "BENCH_scenarios.json",
+    "cohort_bench": "BENCH_cohort.json",
 }
 
 
@@ -204,6 +220,24 @@ def compare(name: str, baseline: dict, quick: bool, repeats: int) -> list:
     if name == "scenarios":
         # outcome fields are gated exactly, on top of the wall times
         failures += compare_scenario_outcomes(baseline, fresh)
+    if name == "cohort_bench":
+        # the Eq. 3–6 cross-check and the (seeded, s-independent)
+        # message counts are exact-match fields, like the scenario
+        # outcome records
+        fresh_rows = {(r["n"], r["cohort"]): r
+                      for r in fresh.get("rows", [])}
+        for base_r in baseline.get("rows", []):
+            got_r = fresh_rows.get((base_r["n"], base_r["cohort"]))
+            if got_r is None:
+                continue
+            for field in ("counters_match", "election_subrounds",
+                          "phase1_msg_num", "phase2_msg_num"):
+                if got_r.get(field) != base_r.get(field):
+                    failures.append((name, field, base_r.get(field),
+                                     got_r.get(field), "exact"))
+                    print(f"{name}:{field}: MISMATCH (exact) "
+                          f"baseline={base_r.get(field)!r} "
+                          f"got={got_r.get(field)!r}")
     return failures
 
 

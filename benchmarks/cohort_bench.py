@@ -1,0 +1,149 @@
+"""Cohort-scale benchmark -> ``BENCH_cohort.json`` (DESIGN.md §12).
+
+The acceptance row for cohort-sampled rounds: a **100k-party registry**
+drives a **1k-party cohort** through one full two-phase round on the
+counting simulation, and every wire counter must equal the per-cohort
+closed forms (Eqs. 3–6 with c substituted for n, broadcast still
+reaching the full registry) *exactly* — the decoupling of registry
+size from per-round cost is the point of the cohort layer, and this
+bench is where that claim is priced:
+
+* ``register_wall_s`` — minting 100k leases (``PartyRegistry``);
+* ``sample_wall_s``   — one Philox cohort draw over the 100k pool;
+* ``round_wall_s``    — Phase I election among the 1k cohort plus the
+  Phase II share round (upload/chain/broadcast) at ``s`` model elems;
+* ``counters_match``  — exact Eq. 3–6 per-cohort cross-check (gated as
+  an exact field by ``bench_compare``, like the scenario outcomes).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.cohort_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+__all__ = ["bench_row", "write_bench_json"]
+
+
+def bench_row(n: int = 100_000, c: int = 1_000, m: int = 3, b: int = 10,
+              s: int = 256, seed: int = 0) -> dict:
+    from repro.core import costmodel
+    from repro.core.committee import elect_among
+    from repro.core.costmodel import CostParams
+    from repro.fl.cohort import sample_cohort
+    from repro.fl.simulation import FLSimulation
+    from repro.net import PartyRegistry
+
+    # -- the registry at scale: 100k leases, one eligibility sweep ----
+    t0 = time.perf_counter()
+    reg = PartyRegistry(n, lease_s=30.0)
+    for pid in range(n):
+        reg.register(pid, now=0.0)
+    register_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pool = reg.eligible(now=0.0)
+    eligible_wall = time.perf_counter() - t0
+    assert len(pool) == n
+
+    # -- one seeded cohort draw over the full pool --------------------
+    t0 = time.perf_counter()
+    cohort = sample_cohort(pool, c, seed, round_index=0)
+    sample_wall = time.perf_counter() - t0
+    assert len(cohort) == c
+
+    # -- one full two-phase round over the cohort ---------------------
+    # default codec headroom (clip=64, frac_bits=16) caps out at 511
+    # summands; a 1k cohort needs a wider ring share per element
+    from repro.core.fixed_point import FixedPointConfig
+    fp = FixedPointConfig(frac_bits=15, clip=32.0)
+    sim = FLSimulation(n, m=m, b=b, seed=seed, cohort=c, fp=fp)
+    tr = sim.transports["two_phase"]
+    rng = np.random.RandomState(seed)
+    flats = rng.randn(c, s).astype(np.float32)
+    t0 = time.perf_counter()
+    sim.elect_committee()
+    assert tr.cohort_ids == cohort
+    mean, _ = sim.aggregate("two_phase", flats, party_ids=cohort)
+    round_wall = time.perf_counter() - t0
+    np.testing.assert_allclose(np.asarray(mean), flats.mean(0),
+                               atol=2e-4)
+
+    # -- exact Eq. 3–6 per-cohort cross-check -------------------------
+    subrounds = elect_among(cohort, m, b, seed).rounds
+    p = CostParams(n=n, e=1, s=s, m=m, b=b)
+    st1 = sim.net.stats("phase1")
+    p2_num = sum(sim.net.stats(ph).msg_num for ph in
+                 ("phase2_upload", "phase2_exchange",
+                  "phase2_broadcast"))
+    p2_size = sum(sim.net.stats(ph).msg_size for ph in
+                  ("phase2_upload", "phase2_exchange",
+                   "phase2_broadcast"))
+    checks = {
+        "phase1_msg_num": (st1.msg_num, subrounds * 2 * c * (c - 1)),
+        "phase1_msg_size": (st1.msg_size,
+                            subrounds * 2 * c * (c - 1) * b),
+        "phase2_msg_num": (p2_num, costmodel.phase2_cohort_msg_num(p, c)),
+        "phase2_msg_size": (p2_size,
+                            costmodel.phase2_cohort_msg_size(p, c)),
+    }
+    mismatches = {k: v for k, v in checks.items() if v[0] != v[1]}
+    if mismatches:
+        raise AssertionError(
+            f"cohort counters diverged from the closed forms: "
+            f"{mismatches} (got, expected)")
+    if subrounds == 1:
+        assert st1.msg_num == costmodel.phase1_cohort_msg_num(p, c)
+        assert st1.msg_size == costmodel.phase1_cohort_msg_size(p, c)
+
+    return {
+        "n": n, "cohort": c, "m": m, "b": b, "s": s, "seed": seed,
+        "election_subrounds": subrounds,
+        "register_wall_s": round(register_wall, 4),
+        "eligible_wall_s": round(eligible_wall, 4),
+        "sample_wall_s": round(sample_wall, 4),
+        "round_wall_s": round(round_wall, 4),
+        "phase1_msg_num": st1.msg_num,
+        "phase2_msg_num": p2_num,
+        "phase2_msg_size": p2_size,
+        "counters_match": True,
+    }
+
+
+def write_bench_json(path: str | None = "BENCH_cohort.json",
+                     quick: bool = False) -> dict:
+    from benchmarks.calib import calib_wall_s
+    # quick trims the model size, never the 100k/1k row itself — the
+    # registry/cohort scale IS the claim under test
+    row = bench_row(s=64 if quick else 256)
+    out = {
+        "generated_by": "benchmarks/cohort_bench.py",
+        "schema_version": 1,
+        "calib_wall_s": round(calib_wall_s(), 4),
+        "rows": [row],
+    }
+    if path:
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_cohort.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller model dim (same 100k/1k scale)")
+    args = ap.parse_args()
+    out = write_bench_json(args.out, quick=args.quick)
+    print(json.dumps(out["rows"][0], indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""``repro.api`` — the single typed entry point for experiments.
+
+One frozen :class:`ExperimentSpec` names everything an experiment is:
+aggregation scheme, fixed-point codec, compression, malicious-security
+(VSS + norm audit), per-round cohort sampling, pipelining, backend
+(counting sim or the real wire), and optionally a named adversarial
+scenario.  Every driver accepts it directly:
+
+    from repro.api import ExperimentSpec, make_transport
+
+    spec = ExperimentSpec(n=100, m=3, scheme="shamir", vss=True,
+                          cohort=10, backend="sim")
+    result = run_fedavg(spec, init_params, step_fn, batches)   # driver
+    sim = FLSimulation(spec)                                   # harness
+    record = run_scenario(spec_with_scenario)                  # battery
+    tr = make_transport(spec)                                  # factory
+
+The spec *composes* the existing config types — it converts to
+``fl.rounds.FedAvgConfig`` (:meth:`fedavg_config`),
+``net.config.WireConfig`` (:meth:`wire_config`),
+``core.compression.CompressionConfig`` (:meth:`compression`) and
+``fl.scenarios.ScenarioConfig`` (:meth:`scenario_config`) — so the old
+per-layer configs stay the protocol-level truth and the spec stays a
+thin, serializable description.  The pre-spec kwarg paths
+(``FedAvgConfig.agg_kwargs`` dicts) keep working behind
+``repro.deprecation`` shims with bit-identical behaviour.
+
+JSON round-trip: :meth:`to_json` / :meth:`from_json`, with the same
+loud did-you-mean rejection of unknown keys the rest of the repo uses
+— a typo'd experiment file fails at load time, not as a silently
+default-configured run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+
+from repro.core.compression import CompressionConfig
+from repro.core.fixed_point import FixedPointConfig
+
+__all__ = ["ExperimentSpec", "make_transport"]
+
+_PROTOCOLS = ("two_phase", "p2p", "plain")
+
+
+def _reject_unknown(cls, obj: dict, what: str) -> None:
+    """Loud typed rejection of unknown keys, with a did-you-mean hint
+    (same policy as ``FLSimulation``'s unknown-kwargs check)."""
+    known = tuple(f.name for f in dataclasses.fields(cls))
+    unknown = sorted(set(obj) - set(known))
+    if not unknown:
+        return
+    hints = []
+    for k in unknown:
+        close = difflib.get_close_matches(k, known, n=1)
+        hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                 if close else ""))
+    raise ValueError(
+        f"{what} carries unknown keys: {', '.join(hints)}; known keys "
+        f"are {known}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything one experiment is, in one frozen value.
+
+    Field groups mirror the per-layer configs they convert to; see the
+    module docstring for the conversion map.
+    """
+
+    # -- federation shape -------------------------------------------------
+    n: int
+    m: int = 3
+    epochs: int = 15
+    local_steps: int = 3
+    protocol: str = "two_phase"    # two_phase | p2p | plain
+    scheme: str = "additive"       # additive | shamir
+    vote_batch: int = 10
+    seed: int = 0
+    #: driver-level round deadline (straggler resolution; None = off)
+    deadline_s: float | None = None
+    # -- fixed-point codec (None = the scheme's default codec) ------------
+    frac_bits: int | None = None
+    clip: float | None = None
+    # -- compression ------------------------------------------------------
+    compress_topk: float | None = None
+    error_feedback: bool = True
+    chunk_elems: int | None = None
+    # -- malicious security (DESIGN.md §10-11) ----------------------------
+    vss: bool = False
+    shamir_degree: int | None = None
+    norm_bound: float | None = None
+    reelect_each_round: bool = False
+    #: injected dealer adversary {party: (mode, round)}
+    dealer_tamper: dict | None = None
+    # -- cohort sampling + session pipelining (DESIGN.md §12) -------------
+    cohort: int | None = None
+    pipeline: bool = False
+    lease_s: float | None = 30.0
+    # -- backend ----------------------------------------------------------
+    backend: str = "sim"           # sim | wire
+    kernel_backend: str | None = None
+    #: extra ``WireTransport`` options (wire backend only)
+    wire_kwargs: dict | None = None
+    # -- adversarial scenario (fl.scenarios) ------------------------------
+    scenario: object | None = None
+
+    def __post_init__(self):
+        if self.protocol not in _PROTOCOLS:
+            raise ValueError(f"protocol {self.protocol!r} not one of "
+                             f"{_PROTOCOLS}")
+        if self.backend not in ("sim", "wire"):
+            raise ValueError(f"backend {self.backend!r} not sim|wire")
+        if self.scheme not in ("additive", "shamir"):
+            raise ValueError(f"scheme {self.scheme!r} not "
+                             "additive|shamir")
+        if self.cohort is not None and not 1 <= self.cohort <= self.n:
+            raise ValueError(f"cohort={self.cohort} must be in "
+                             f"1..n={self.n}")
+        if self.pipeline and self.cohort is None:
+            raise ValueError("pipeline=True needs cohort mode (only "
+                             "per-round cohort elections can overlap "
+                             "the previous round's Phase II)")
+        if (self.frac_bits is None) != (self.clip is None):
+            raise ValueError("frac_bits and clip come as a pair (both "
+                             "set = custom codec, both None = the "
+                             "scheme's default)")
+
+    # -- per-layer conversions --------------------------------------------
+
+    def fp(self) -> FixedPointConfig | None:
+        """Custom fixed-point codec, or None for the scheme default."""
+        if self.frac_bits is None:
+            return None
+        return FixedPointConfig(
+            frac_bits=self.frac_bits, clip=self.clip,
+            algebra="field" if self.scheme == "shamir" else "ring")
+
+    def compression(self) -> CompressionConfig | None:
+        if not self.compress_topk:
+            return None
+        return CompressionConfig(enabled=True,
+                                 top_k_ratio=self.compress_topk,
+                                 error_feedback=self.error_feedback)
+
+    def _wire_kwargs(self) -> dict | None:
+        """``WireTransport`` extras with the spec's session/pipelining
+        fields folded in (explicit ``wire_kwargs`` entries win)."""
+        if self.backend != "wire":
+            return self.wire_kwargs
+        return {"pipeline": self.pipeline, "lease_s": self.lease_s,
+                **(self.wire_kwargs or {})}
+
+    def fedavg_config(self):
+        """The ``fl.rounds.FedAvgConfig`` this spec describes
+        (``run_fedavg`` calls this itself when handed a spec)."""
+        from repro.fl.rounds import FedAvgConfig
+        return FedAvgConfig(
+            n_parties=self.n, epochs=self.epochs,
+            local_steps=self.local_steps, committee=self.m,
+            scheme=self.scheme, protocol=self.protocol,
+            vote_batch=self.vote_batch, seed=self.seed,
+            deadline_s=self.deadline_s,
+            compress_topk=self.compress_topk,
+            error_feedback=self.error_feedback,
+            chunk_elems=self.chunk_elems, backend=self.backend,
+            vss=self.vss, shamir_degree=self.shamir_degree,
+            fp=self.fp(), kernel_backend=self.kernel_backend,
+            norm_bound=self.norm_bound,
+            dealer_tamper=self.dealer_tamper,
+            reelect_each_round=self.reelect_each_round,
+            wire_kwargs=self._wire_kwargs(), cohort=self.cohort)
+
+    def flsim_kwargs(self) -> dict:
+        """Constructor kwargs for ``fl.simulation.FLSimulation``
+        (whose ``__init__`` calls this when handed a spec)."""
+        return dict(
+            n=self.n, m=self.m, scheme=self.scheme, seed=self.seed,
+            b=self.vote_batch, fp=self.fp(),
+            shamir_degree=self.shamir_degree,
+            kernel_backend=self.kernel_backend,
+            chunk_elems=self.chunk_elems,
+            compression=self.compression(), backend=self.backend,
+            wire_kwargs=self._wire_kwargs(), vss=self.vss,
+            reelect_each_round=self.reelect_each_round,
+            norm_bound=self.norm_bound,
+            dealer_tamper=self.dealer_tamper, cohort=self.cohort)
+
+    def wire_config(self):
+        """The ``net.config.WireConfig`` a WELCOME frame would carry."""
+        from repro.net.config import WireConfig
+        return WireConfig.from_aggregation_kwargs(
+            self.n, m=self.m, b=self.vote_batch, seed=self.seed,
+            scheme=self.scheme, fp=self.fp(),
+            shamir_degree=self.shamir_degree,
+            chunk_elems=self.chunk_elems, vss=self.vss,
+            reelect_each_round=self.reelect_each_round,
+            norm_bound=self.norm_bound, cohort=self.cohort,
+            pipeline=self.pipeline, lease_s=self.lease_s)
+
+    def wire_transport_kwargs(self) -> dict:
+        """Constructor kwargs for ``repro.net.WireTransport`` (used by
+        ``launch.serve_fl`` to deploy a spec directly)."""
+        return dict(
+            n=self.n, m=self.m, scheme=self.scheme, seed=self.seed,
+            b=self.vote_batch, fp=self.fp(),
+            shamir_degree=self.shamir_degree,
+            chunk_elems=self.chunk_elems, vss=self.vss,
+            reelect_each_round=self.reelect_each_round,
+            norm_bound=self.norm_bound, cohort=self.cohort,
+            pipeline=self.pipeline, lease_s=self.lease_s,
+            dealer_tamper=self.dealer_tamper,
+            **(self.wire_kwargs or {}))
+
+    def scenario_config(self):
+        """The spec's scenario with the shared fields (n, m, scheme,
+        seed, backend, cohort, ...) overridden by the spec — the spec
+        is the single source of truth (``run_scenario`` calls this
+        itself when handed a spec)."""
+        if self.scenario is None:
+            raise ValueError(
+                "this ExperimentSpec has no scenario= — set one (an "
+                "fl.scenarios.ScenarioConfig) to run it through "
+                "run_scenario")
+        return dataclasses.replace(
+            self.scenario, n=self.n, m=self.m, epochs=self.epochs,
+            local_steps=self.local_steps, seed=self.seed,
+            scheme=self.scheme, shamir_degree=self.shamir_degree,
+            vss=self.vss, vote_batch=self.vote_batch,
+            norm_bound=self.norm_bound, cohort=self.cohort,
+            backend=self.backend, wire_kwargs=self._wire_kwargs())
+
+    def simulation(self):
+        """A ready ``FLSimulation`` over this spec."""
+        from repro.fl.simulation import FLSimulation
+        return FLSimulation(self)
+
+    # -- JSON round-trip ---------------------------------------------------
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "ExperimentSpec":
+        _reject_unknown(cls, obj, "ExperimentSpec JSON")
+        obj = dict(obj)
+        if isinstance(obj.get("scenario"), dict):
+            obj["scenario"] = _scenario_from_json(obj["scenario"])
+        if isinstance(obj.get("dealer_tamper"), dict):
+            obj["dealer_tamper"] = {
+                int(k): (str(mode), int(rnd))
+                for k, (mode, rnd) in obj["dealer_tamper"].items()}
+        return cls(**obj)
+
+
+def _scenario_from_json(obj: dict):
+    """Rebuild a ``ScenarioConfig`` (and its nested churn/straggler/
+    dealer configs) from plain JSON, rejecting unknown keys loudly."""
+    from repro.fl.scenarios import (ChurnConfig, DealerConfig,
+                                    ScenarioConfig, StragglerConfig)
+    _reject_unknown(ScenarioConfig, obj, "ExperimentSpec scenario")
+    obj = dict(obj)
+    if isinstance(obj.get("churn"), dict):
+        _reject_unknown(ChurnConfig, obj["churn"], "scenario churn")
+        obj["churn"] = ChurnConfig(**obj["churn"])
+    if isinstance(obj.get("straggler"), dict):
+        _reject_unknown(StragglerConfig, obj["straggler"],
+                        "scenario straggler")
+        obj["straggler"] = StragglerConfig(**obj["straggler"])
+    dealers = []
+    for d in obj.get("dealers") or ():
+        if isinstance(d, dict):
+            _reject_unknown(DealerConfig, d, "scenario dealer")
+            d = DealerConfig(**d)
+        dealers.append(d)
+    obj["dealers"] = tuple(dealers)
+    return ScenarioConfig(**obj)
+
+
+def make_transport(spec: ExperimentSpec, *, net=None, **overrides):
+    """Transport factory over a spec — the typed replacement for the
+    old ``agg_kwargs["backend"]`` dict plumbing.
+
+    Delegates to ``fl.transport.make_transport`` (sim) or constructs a
+    ``repro.net.WireTransport`` (wire) with the spec's fields;
+    ``overrides`` pass extra backend kwargs through (e.g. ``start=``,
+    ``log_dir=`` on the wire).  Unknown override keys fail with the
+    backends' existing typed errors.
+    """
+    if not isinstance(spec, ExperimentSpec):
+        raise TypeError(
+            f"make_transport wants an ExperimentSpec, got "
+            f"{type(spec).__name__} — build one (or use "
+            "fl.transport.make_transport for raw kwargs)")
+    from repro.fl.transport import make_transport as _factory
+    if spec.backend == "wire":
+        kw = spec.wire_transport_kwargs()
+        n = kw.pop("n")
+        if net is not None:
+            kw["net"] = net
+        kw.update(overrides)
+        return _factory(spec.protocol, n, backend="wire", **kw)
+    kw = dict(m=spec.m, b=spec.vote_batch, scheme=spec.scheme,
+              seed=spec.seed, fp=spec.fp(),
+              shamir_degree=spec.shamir_degree,
+              chunk_elems=spec.chunk_elems,
+              kernel_backend=spec.kernel_backend,
+              compression=spec.compression())
+    if net is not None:
+        kw["net"] = net
+    if spec.protocol == "two_phase":
+        kw.update(vss=spec.vss,
+                  reelect_each_round=spec.reelect_each_round,
+                  norm_bound=spec.norm_bound, cohort=spec.cohort,
+                  dealer_tamper=spec.dealer_tamper)
+    kw.update(overrides)
+    return _factory(spec.protocol, spec.n, backend="sim", **kw)

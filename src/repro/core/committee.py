@@ -101,29 +101,57 @@ def elect(n: int, m: int, b: int, seed: int, max_rounds: int = 8,
     faulted ones; defaults are bit-identical to the historical
     single-shot election.
     """
-    if m > n:
-        raise ValueError(f"committee m={m} larger than parties n={n}")
-    if n - len(set(int(i) for i in exclude)) < m:
+    return elect_among(range(n), m, b, seed, max_rounds=max_rounds,
+                       exclude=exclude, reputation=reputation)
+
+
+def elect_among(ids, m: int, b: int, seed: int, max_rounds: int = 8,
+                exclude=(),
+                reputation: dict[int, float] | None = None
+                ) -> ElectionResult:
+    """Alg. 2 over an arbitrary voter set (a sampled cohort).
+
+    ``ids`` are *global* party ids: each voter draws from the same
+    Philox stream ``(r << 20) | id`` it would use in a full election,
+    votes land in ``[0, c)`` with ``c = len(ids)`` and are tallied over
+    positions in ``sorted(ids)``; the winning positions map back to
+    global ids.  ``exclude``/``reputation`` stay keyed by global id.
+    Bit-identical to :func:`elect` when ``ids == range(n)`` (positions
+    coincide with ids), which keeps every existing election — and its
+    wire-party/oracle cross-checks — unchanged.
+    """
+    ids = sorted({int(i) for i in ids})
+    c = len(ids)
+    excluded = set(int(i) for i in exclude)
+    if m > c:
+        raise ValueError(f"committee m={m} larger than parties n={c}")
+    if c - len(excluded & set(ids)) < m:
         raise ValueError(
-            f"cannot elect a committee of {m} from {n} parties with "
-            f"{sorted(set(int(i) for i in exclude))} evicted")
+            f"cannot elect a committee of {m} from {c} parties with "
+            f"{sorted(excluded)} evicted")
+    pos_exclude = [p for p, i in enumerate(ids) if i in excluded]
+    pos_reputation = None
+    if reputation is not None:
+        pos_reputation = {p: float(reputation.get(i, 1.0))
+                          for p, i in enumerate(ids)}
     committee: list[int] = []
-    tally = np.zeros(n, dtype=np.int64)
-    ids = jnp.arange(n, dtype=jnp.uint32)
+    tally = np.zeros(c, dtype=np.int64)
+    streams = jnp.asarray(ids, dtype=jnp.uint32)
     for r in range(max_rounds):
         # all parties' draws in one vmap (the wraparound uint32 sum is
         # order-independent, so this is bit-identical to the party loop)
         def _draw(stream):
             k0, k1 = philox.derive_key(seed, stream)
-            return draw_votes(n, b, k0, k1, round_index=r)
+            return draw_votes(c, b, k0, k1, round_index=r)
 
-        votes = jax.vmap(_draw)(jnp.uint32(r << 20) | ids)     # [n, b]
+        votes = jax.vmap(_draw)(jnp.uint32(r << 20) | streams)  # [c, b]
         total = jnp.sum(votes, axis=0, dtype=jnp.uint32)
-        tally = tally + tally_votes(total, n)
-        committee = select_committee(tally, m, exclude=exclude,
-                                     reputation=reputation)
+        tally = tally + tally_votes(total, c)
+        committee = select_committee(tally, m, exclude=pos_exclude,
+                                     reputation=pos_reputation)
         if len(committee) == m:
-            return ElectionResult(tuple(committee), r + 1, tally)
+            return ElectionResult(tuple(ids[p] for p in committee),
+                                  r + 1, tally)
     raise RuntimeError(
         f"election failed to fill committee of {m} in {max_rounds} rounds "
-        f"(n={n}, b={b}) — increase b")
+        f"(n={c}, b={b}) — increase b")

@@ -247,6 +247,67 @@ def summary_vss(p: CostParams, degree: int | None = None) -> dict:
     }
 
 
+# -- Cohort-sampled rounds (Eqs. 3-6 per cohort) -----------------------------
+#
+# With a registry of ``n`` parties and a sampled per-round cohort of
+# ``c`` (DESIGN.md §12) the election and the upload legs run over the
+# cohort while the aggregate broadcast still reaches the full registry
+# (every registered party receives the new model).  Cohort mode implies
+# per-round election — each round has its own cohort, so Alg. 2 runs
+# every epoch over that round's ``c`` voters (the single-subround fill
+# assumption of the reelect forms; the counting transports use the
+# actual subround count).  Legs, per epoch:
+#
+# * Phase I   — ``2·c·(c−1)`` messages of ``b``   (Eqs. 3-4 at n=c)
+# * uploads   — ``c·m``       messages of ``s``
+# * exchange  — ``m−1``       messages of ``s``
+# * broadcast — ``n``         messages of ``s``   (full registry)
+
+
+def phase1_cohort_msg_num(p: CostParams, c: int) -> int:
+    return p.e * 2 * c * (c - 1)
+
+
+def phase1_cohort_msg_size(p: CostParams, c: int) -> int:
+    return phase1_cohort_msg_num(p, c) * p.b
+
+
+def phase2_cohort_msg_num(p: CostParams, c: int) -> int:
+    return (c * p.m + (p.m - 1) + p.n) * p.e
+
+
+def phase2_cohort_msg_size(p: CostParams, c: int) -> int:
+    return phase2_cohort_msg_num(p, c) * p.s
+
+
+def twophase_cohort_msg_num(p: CostParams, c: int) -> int:
+    return phase1_cohort_msg_num(p, c) + phase2_cohort_msg_num(p, c)
+
+
+def twophase_cohort_msg_size(p: CostParams, c: int) -> int:
+    return phase1_cohort_msg_size(p, c) + phase2_cohort_msg_size(p, c)
+
+
+def cohort_reduction_factor(p: CostParams, c: int) -> float:
+    """Scalability of sampling: full-registry two-phase bytes (with
+    per-round election, the apples-to-apples baseline) / cohort bytes."""
+    full = (p.e * phase1_msg_size(p)) + phase2_msg_size(p)
+    return full / twophase_cohort_msg_size(p, c)
+
+
+def summary_cohort(p: CostParams, c: int) -> dict:
+    return {
+        "n": p.n, "m": p.m, "e": p.e, "s": p.s, "b": p.b, "c": c,
+        "phase1_cohort_msg_num": phase1_cohort_msg_num(p, c),
+        "phase1_cohort_msg_size": phase1_cohort_msg_size(p, c),
+        "phase2_cohort_msg_num": phase2_cohort_msg_num(p, c),
+        "phase2_cohort_msg_size": phase2_cohort_msg_size(p, c),
+        "twophase_cohort_msg_num": twophase_cohort_msg_num(p, c),
+        "twophase_cohort_msg_size": twophase_cohort_msg_size(p, c),
+        "cohort_reduction_factor": cohort_reduction_factor(p, c),
+    }
+
+
 def summary(p: CostParams) -> dict:
     return {
         "n": p.n, "m": p.m, "e": p.e, "s": p.s, "b": p.b,

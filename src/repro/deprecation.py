@@ -1,0 +1,29 @@
+"""Deprecation policy for the public ``repro`` surface.
+
+Old configuration paths (``FedAvgConfig.agg_kwargs`` dicts, stringly
+backend selection) keep working behind shims that emit
+:class:`ReproDeprecationWarning`.  CI runs a dedicated lane with
+``-W error::repro.deprecation.ReproDeprecationWarning`` so the shims
+cannot rot silently: internal call sites must use the typed
+`repro.api.ExperimentSpec` surface, and only tests that *pin* the shim
+behaviour (via ``pytest.warns``) may trigger the warning.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["ReproDeprecationWarning", "warn_deprecated"]
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A deprecated ``repro`` configuration path was used.
+
+    Subclasses ``DeprecationWarning`` so standard filters apply, but is
+    distinct so CI can escalate exactly the repro shims to errors
+    without tripping over third-party deprecations.
+    """
+
+
+def warn_deprecated(message: str) -> None:
+    warnings.warn(message, ReproDeprecationWarning, stacklevel=3)

@@ -1,0 +1,89 @@
+"""Seeded per-round cohort sampling over a large party registry.
+
+Production FL samples a per-round *cohort* from a huge registered
+population instead of driving every registered party through every
+round (IBM FL white paper; the GDPR-era survey in PAPERS.md).  This
+module is the single source of that schedule: the sim transport, the
+FedAvg driver, the wire coordinator, and the Eq. 3–6 per-cohort
+counter mirror all call :func:`sample_cohort` with the same arguments,
+which is what keeps sim and wire bit-identical per cohort.
+
+The draw is Philox-derived and keyed per *party id*, not per position:
+party ``i``'s rank for round ``r`` is ``random_bits[i]`` from the
+stream ``derive_key(seed, COHORT_STREAM)`` with
+``counter_hi = COHORT_COUNTER_HI + r``.  Ranks therefore do not shift
+when the eligible set churns — registering, deregistering, or banning
+*other* parties never changes whether party ``i`` would rank into the
+cohort, so registry churn between rounds keeps the schedule (and the
+closed-form mirror) exact on both backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import philox
+
+__all__ = ["CohortConfig", "CohortExhaustedError", "sample_cohort",
+           "COHORT_STREAM", "COHORT_COUNTER_HI"]
+
+#: Philox stream id of the cohort schedule — disjoint by key derivation
+#: from the election streams ``(r << 20) | id`` (different ``stream``
+#: argument to ``derive_key`` → unrelated key pair).
+COHORT_STREAM = 0xC0_4057
+#: counter_hi tag; the per-round offset rides on top of it.
+COHORT_COUNTER_HI = 0x11_0000
+
+
+class CohortExhaustedError(RuntimeError):
+    """No eligible party remains to sample a cohort from.
+
+    Raised when the eligible pool is empty — e.g. every registered
+    party has been banned by the blame paths or every lease expired.
+    Callers must let this propagate (a round cannot run without a
+    cohort); it is re-raised cleanly through the transport layers.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Per-round cohort sampling parameters.
+
+    ``size`` — target cohort size ``c``; when fewer than ``c`` parties
+    are eligible the cohort shrinks to the whole eligible set (an empty
+    eligible set raises :class:`CohortExhaustedError`).
+    """
+    size: int
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"cohort size={self.size} must be >= 1")
+
+
+def sample_cohort(eligible_ids, size: int, seed: int,
+                  round_index: int) -> tuple[int, ...]:
+    """Sample the round's cohort: ``size`` eligible ids, sorted.
+
+    Every eligible id draws one uint32 rank from the round's cohort
+    stream; the ``size`` lowest ranks (ties broken by id) form the
+    cohort.  Deterministic in ``(seed, round_index, eligible set)`` and
+    stable per id under churn of the rest of the pool.
+    """
+    ids = sorted({int(i) for i in eligible_ids})
+    if not ids:
+        raise CohortExhaustedError(
+            f"round {round_index}: no eligible parties to sample a "
+            f"cohort of {size} from (all registered parties banned, "
+            f"evicted, or expired)")
+    if any(i < 0 for i in ids):
+        raise ValueError(f"negative party id in eligible set: {ids[0]}")
+    if len(ids) <= size:
+        return tuple(ids)
+    k0, k1 = philox.derive_key(seed, COHORT_STREAM)
+    bits = np.asarray(philox.random_bits(
+        ids[-1] + 1, k0, k1,
+        counter_hi=COHORT_COUNTER_HI + round_index))
+    ranked = sorted(ids, key=lambda i: (int(bits[i]), i))
+    return tuple(sorted(ranked[:size]))

@@ -16,6 +16,9 @@ from typing import Callable
 
 from repro.core.aggregation import flatten_pytree
 from repro.core.compression import CompressionConfig
+from repro.core.fixed_point import FixedPointConfig
+from repro.deprecation import warn_deprecated
+from .cohort import sample_cohort
 from .faults import RoundOutcome, apply_faults
 from .simulation import FLSimulation
 
@@ -39,9 +42,31 @@ class FedAvgConfig:
     #: element-chunk size of the streaming aggregation pipeline
     #: (None = whole-vector; bit-identical either way)
     chunk_elems: int | None = None
-    #: extra aggregation kwargs forwarded verbatim to ``FLSimulation``
-    #: (e.g. fp=, shamir_degree=, kernel_backend=); unknown keys raise
-    #: there with a did-you-mean hint instead of being dropped
+    # -- typed aggregation fields (formerly agg_kwargs dict entries) ------
+    #: transport backend: "sim" (counting simulation) or "wire" (real
+    #: multi-process TCP deployment — DESIGN.md §9)
+    backend: str = "sim"
+    #: Feldman verifiable secret sharing (Shamir only — DESIGN.md §10)
+    vss: bool = False
+    shamir_degree: int | None = None
+    fp: FixedPointConfig | None = None
+    kernel_backend: str | None = None
+    #: L2 norm bound of the dealer audit (needs vss — DESIGN.md §11)
+    norm_bound: float | None = None
+    #: injected dealer adversary {party: (mode, round)} (DESIGN.md §11)
+    dealer_tamper: dict | None = None
+    #: re-run Alg. 2 every epoch (implied by ``cohort``)
+    reelect_each_round: bool = False
+    #: extra ``WireTransport`` options for ``backend="wire"``
+    wire_kwargs: dict | None = None
+    #: per-round cohort size: ``n_parties`` becomes the registry and
+    #: each round runs over a seeded sampled cohort (DESIGN.md §12)
+    cohort: int | None = None
+    #: DEPRECATED — extra aggregation kwargs forwarded to
+    #: ``FLSimulation``; use the typed fields above (or
+    #: ``repro.api.ExperimentSpec``).  Kept working behind a
+    #: ``ReproDeprecationWarning`` shim with bit-identical behaviour;
+    #: unknown keys still raise there with a did-you-mean hint
     agg_kwargs: dict | None = None
 
     def __post_init__(self):
@@ -56,6 +81,26 @@ class FedAvgConfig:
         return CompressionConfig(enabled=True,
                                  top_k_ratio=self.compress_topk,
                                  error_feedback=self.error_feedback)
+
+    def simulation_kwargs(self) -> dict:
+        """Aggregation kwargs for ``FLSimulation`` from the typed
+        fields, with the deprecated ``agg_kwargs`` dict overlaid last —
+        old call sites keep their exact semantics (every key they set
+        wins), they just warn."""
+        kw = dict(backend=self.backend, vss=self.vss,
+                  shamir_degree=self.shamir_degree, fp=self.fp,
+                  kernel_backend=self.kernel_backend,
+                  norm_bound=self.norm_bound,
+                  dealer_tamper=self.dealer_tamper,
+                  reelect_each_round=self.reelect_each_round,
+                  wire_kwargs=self.wire_kwargs, cohort=self.cohort)
+        if self.agg_kwargs:
+            warn_deprecated(
+                "FedAvgConfig.agg_kwargs is deprecated: use the typed "
+                "FedAvgConfig fields (backend=, vss=, wire_kwargs=, ...) "
+                "or repro.api.ExperimentSpec")
+            kw.update(self.agg_kwargs)
+        return kw
 
 
 @dataclasses.dataclass
@@ -86,13 +131,18 @@ def run_fedavg(cfg: FedAvgConfig, init_params, local_train_step: Callable,
     local_train_step(params, batch) -> params (one local iteration)
     party_batches(party, epoch, it) -> batch
     membership_schedule(epoch) -> set of live party ids (elastic)
+
+    ``cfg`` may also be anything exposing ``fedavg_config()`` — e.g.
+    ``repro.api.ExperimentSpec`` — which is resolved first.
     """
+    if hasattr(cfg, "fedavg_config"):
+        cfg = cfg.fedavg_config()
     sim = FLSimulation(cfg.n_parties, m=cfg.committee, scheme=cfg.scheme,
                        seed=cfg.seed, b=cfg.vote_batch,
                        latency_s=latency_s,
                        chunk_elems=cfg.chunk_elems,
                        compression=cfg.compression(),
-                       **(cfg.agg_kwargs or {}))
+                       **cfg.simulation_kwargs())
     try:
         return _run_fedavg(cfg, sim, init_params, local_train_step,
                            party_batches, eval_fn, latency_s,
@@ -108,7 +158,13 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
                 membership_schedule):
     params = init_params
     _, unflatten = flatten_pytree(params)
-    if cfg.protocol == "two_phase":
+    # cohort mode (read off the transport so the deprecated agg_kwargs
+    # path configures it identically): per-round election over each
+    # round's sampled cohort replaces the single-shot/elastic elections
+    cohort_size = (getattr(sim.transports.get("two_phase"), "cohort",
+                           None)
+                   if cfg.protocol == "two_phase" else None)
+    if cfg.protocol == "two_phase" and not cohort_size:
         sim.elect_committee()
     history, outcomes = [], []
     t0 = time.perf_counter()
@@ -123,8 +179,19 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
             new_members = set(membership_schedule(epoch)) - banned
             if new_members != members:
                 members = new_members
-                if cfg.protocol == "two_phase":
+                if cfg.protocol == "two_phase" and not cohort_size:
                     sim.elect_committee()  # elastic re-election (Phase I)
+
+        round_members = members
+        if cohort_size:
+            # sample this round's cohort from the current membership —
+            # the same sample_cohort schedule the transport (sim or
+            # wire) draws from, so driver and transport always agree
+            sim.elect_committee(eligible=members)
+            round_members = set(
+                sim.transports["two_phase"].cohort_ids)
+            assert round_members == set(sample_cohort(
+                members, cohort_size, cfg.seed, epoch))
 
         committee = sim.committee if cfg.protocol == "two_phase" else None
         # reconstruction quorum: all m shares for additive, degree+1
@@ -138,8 +205,8 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
             threshold = degree + 1
         try:
             outcome: RoundOutcome = apply_faults(
-                members, latency_s or {}, cfg.deadline_s, seed=cfg.seed,
-                round_index=epoch,
+                round_members, latency_s or {}, cfg.deadline_s,
+                seed=cfg.seed, round_index=epoch,
                 committee=committee,
                 reconstruct_threshold=threshold if committee else None)
         except ValueError:
@@ -149,8 +216,8 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
             # this sim (member sums are computed regardless), so the
             # round proceeds without the committee-quorum floor
             outcome = apply_faults(
-                members, latency_s or {}, cfg.deadline_s, seed=cfg.seed,
-                round_index=epoch)
+                round_members, latency_s or {}, cfg.deadline_s,
+                seed=cfg.seed, round_index=epoch)
         outcomes.append(outcome)
 
         live = sorted(outcome.alive)
@@ -163,7 +230,21 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
 
         # survivors keep their original ids: party i always masks with
         # party-i's Philox stream regardless of who else dropped
-        mean, _ = sim.aggregate(cfg.protocol, locals_flat, party_ids=live)
+        agg_kw = {}
+        if cohort_size and epoch < cfg.epochs - 1:
+            tr = sim.transports["two_phase"]
+            if getattr(getattr(tr, "cfg", None), "pipeline", False):
+                # pipelined wire coordinator: hand it round r+1's
+                # expected membership so Phase I(r+1) overlaps this
+                # round's Phase II.  Never passed on the final round —
+                # a speculative election with no round to adopt it
+                # would corrupt the Eq. 3 closed-form counters
+                nxt = members
+                if membership_schedule is not None:
+                    nxt = set(membership_schedule(epoch + 1)) - banned
+                agg_kw["pipeline_next_eligible"] = nxt
+        mean, _ = sim.aggregate(cfg.protocol, locals_flat,
+                                party_ids=live, **agg_kw)
 
         if cfg.protocol == "two_phase":
             # fold transport-observed blame (VSS member tampering,
@@ -181,7 +262,10 @@ def _run_fedavg(cfg: FedAvgConfig, sim: FLSimulation, init_params,
                 outcome.alive -= newly
                 banned |= newly
                 members = members - newly
-                sim.elect_committee()
+                if not cohort_size:
+                    # cohort mode re-elects at the top of every round
+                    # anyway (over the next sampled cohort)
+                    sim.elect_committee()
 
         params = unflatten(mean)
         if eval_fn is not None:

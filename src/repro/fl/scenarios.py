@@ -36,6 +36,7 @@ from repro.core.aggregation import flatten_pytree
 from repro.data import dirichlet_partition, fault_detection_party
 from repro.models import simple_nn
 
+from .cohort import sample_cohort
 from .faults import DEALER_TAMPER_MODES
 from .rounds import FedAvgConfig, run_fedavg
 
@@ -136,6 +137,10 @@ class ScenarioConfig:
     #: L2 bound of the dealer audit (DESIGN.md §11 derives the default
     #: from the Q15.16 headroom); None disables the audit leg
     norm_bound: float | None = None
+    #: per-round cohort size (DESIGN.md §12): ``n`` becomes the
+    #: registry, each round samples ``cohort`` parties from the current
+    #: membership; None keeps full participation
+    cohort: int | None = None
     backend: str = "sim"           # sim | wire
     #: extra WireTransport kwargs (wire backend only)
     wire_kwargs: dict | None = None
@@ -260,6 +265,15 @@ def expected_counters(scn: ScenarioConfig, d: int, outcomes,
     event (Eq. 3), with election rounds taken from the same Alg. 2
     oracle the transports call — including the eviction/reputation
     state blame builds up.
+
+    With ``scn.cohort = c`` the mirror replays the cohort schedule
+    instead (DESIGN.md §12): every epoch samples its cohort from the
+    surviving membership via the same ``sample_cohort`` draw the
+    transports use, elects over it via ``elect_among``
+    (``rounds·2·c·(c−1)`` of ``b``), uploads come from live cohort
+    members only, and the broadcast still reaches all ``n`` registered
+    parties — the per-cohort Eq. 3–6 forms, kept exact under registry
+    churn because cohort ranks are keyed per party id.
     """
     n, m, b = scn.n, scn.m, scn.vote_batch
     degree = (scn.shamir_degree if scn.shamir_degree is not None
@@ -279,7 +293,17 @@ def expected_counters(scn: ScenarioConfig, d: int, outcomes,
                                      reputation=reputation or None)
         _bump("phase1", result.rounds * 2 * n * (n - 1), b)
 
-    _elect(0)                                   # initial election
+    def _elect_cohort(round_index, eligible):
+        pool = set(eligible) - evicted
+        ids = sample_cohort(pool, scn.cohort, scn.seed, round_index)
+        result = committee_mod.elect_among(
+            ids, m, b, scn.seed + round_index, exclude=evicted,
+            reputation=reputation or None)
+        c = len(ids)
+        _bump("phase1", result.rounds * 2 * c * (c - 1), b)
+
+    if not scn.cohort:
+        _elect(0)                               # initial election
     members = set(range(n))
     banned: set[int] = set()
     for epoch, out in enumerate(outcomes):
@@ -287,7 +311,10 @@ def expected_counters(scn: ScenarioConfig, d: int, outcomes,
             new_members = set(memberships[epoch]) - banned
             if new_members != members:
                 members = new_members
-                _elect(epoch)                   # elastic re-election
+                if not scn.cohort:
+                    _elect(epoch)               # elastic re-election
+        if scn.cohort:
+            _elect_cohort(epoch, members)       # per-round cohort
         # the driver merges transport blame into the outcome post-hoc
         # (alive -= blamed), so the dealer count at aggregate time is
         # the union of the final alive set and both blame sets
@@ -306,7 +333,8 @@ def expected_counters(scn: ScenarioConfig, d: int, outcomes,
                 reputation[int(w)] = 0.0
             banned |= newly
             members -= newly
-            _elect(epoch + 1)                   # post-ban re-election
+            if not scn.cohort:
+                _elect(epoch + 1)               # post-ban re-election
     return {k: tuple(v) for k, v in phases.items() if v[0]}
 
 
@@ -314,8 +342,15 @@ def expected_counters(scn: ScenarioConfig, d: int, outcomes,
 # Runner
 # ---------------------------------------------------------------------------
 
-def run_scenario(scn: ScenarioConfig) -> dict:
-    """Execute one scenario and return its structured record."""
+def run_scenario(scn) -> dict:
+    """Execute one scenario and return its structured record.
+
+    Accepts a :class:`ScenarioConfig`, or a ``repro.api.ExperimentSpec``
+    whose ``scenario`` field is set (the spec's shared fields — n, m,
+    scheme, seed, backend, cohort, ... — override the scenario's).
+    """
+    if hasattr(scn, "scenario_config"):         # an ExperimentSpec
+        scn = scn.scenario_config()
     x, y, shards = _build_shards(scn)
     ex, ey = _eval_set(scn)
     init, fwd = simple_nn.make_model(scn.model)
@@ -333,23 +368,16 @@ def run_scenario(scn: ScenarioConfig) -> dict:
     latency = (straggler_latencies(scn.n, scn.straggler)
                if scn.straggler is not None else None)
 
-    agg_kwargs: dict = {"vss": scn.vss}
-    if scn.scheme == "shamir":
-        agg_kwargs["shamir_degree"] = scn.shamir_degree
-    if scn.norm_bound is not None:
-        agg_kwargs["norm_bound"] = scn.norm_bound
-    if scn.dealers:
-        agg_kwargs["dealer_tamper"] = {
-            d.party: (d.mode, d.round_index) for d in scn.dealers}
+    wire_kwargs = None
     if scn.backend == "wire":
-        agg_kwargs["backend"] = "wire"
         # patient wire defaults: spawned workers JIT the Feldman
-        # fixed-base exponentiation on first use, which can outlast the
-        # 120 s default on slow machines; the protocol's own EOF
-        # dropout detection stays on
-        wk = {"deadline_s": None, "round_timeout_s": 600.0}
-        wk.update(scn.wire_kwargs or {})
-        agg_kwargs["wire_kwargs"] = wk
+        # fixed-base exponentiation on first use; the persistent
+        # compilation cache (WireTransport._spawn_parties) makes that a
+        # one-time cost per machine, but a cold cache still compiles,
+        # so the generous timeout stays.  The protocol's own EOF
+        # dropout detection stays on.
+        wire_kwargs = {"deadline_s": None, "round_timeout_s": 600.0}
+        wire_kwargs.update(scn.wire_kwargs or {})
 
     cfg = FedAvgConfig(
         n_parties=scn.n, epochs=scn.epochs, local_steps=scn.local_steps,
@@ -357,7 +385,13 @@ def run_scenario(scn: ScenarioConfig) -> dict:
         vote_batch=scn.vote_batch, seed=scn.seed,
         deadline_s=(scn.straggler.deadline_s
                     if scn.straggler is not None else None),
-        agg_kwargs=agg_kwargs)
+        backend=scn.backend, vss=scn.vss,
+        shamir_degree=(scn.shamir_degree if scn.scheme == "shamir"
+                       else None),
+        norm_bound=scn.norm_bound,
+        dealer_tamper=({d.party: (d.mode, d.round_index)
+                        for d in scn.dealers} if scn.dealers else None),
+        wire_kwargs=wire_kwargs, cohort=scn.cohort)
 
     params0 = init(jax.random.PRNGKey(scn.seed))
     d = int(flatten_pytree(params0)[0].shape[0])
@@ -374,6 +408,7 @@ def run_scenario(scn: ScenarioConfig) -> dict:
         "dealers": [{"party": dl.party, "mode": dl.mode,
                      "round": dl.round_index} for dl in scn.dealers],
         "norm_bound": scn.norm_bound,
+        "cohort": scn.cohort,
         "aborted": False,
         "error": None,
     }

@@ -73,7 +73,13 @@ class FLSimulation:
                  reelect_each_round: bool = False,
                  norm_bound: float | None = None,
                  dealer_tamper: dict | None = None,
+                 cohort: int | None = None,
                  **unknown):
+        if hasattr(n, "flsim_kwargs"):
+            # a repro.api.ExperimentSpec (or anything spec-shaped) as
+            # the sole argument: re-dispatch on its typed kwargs
+            self.__init__(**n.flsim_kwargs())
+            return
         if unknown:
             # catch typos (chunk_elms, compresion, ...) loudly instead
             # of silently dropping an aggregation knob; derive the
@@ -127,6 +133,7 @@ class FLSimulation:
                                            reelect_each_round,
                                            norm_bound=norm_bound,
                                            dealer_tamper=dealer_tamper,
+                                           cohort=cohort,
                                            **kw),
         }
         if backend == "wire":
@@ -143,6 +150,7 @@ class FLSimulation:
                 chunk_elems=chunk_elems, vss=vss,
                 reelect_each_round=reelect_each_round,
                 norm_bound=norm_bound, dealer_tamper=dealer_tamper,
+                cohort=cohort,
                 **(wire_kwargs or {}))
 
     @property
@@ -151,9 +159,16 @@ class FLSimulation:
 
     # -- Phase I ----------------------------------------------------------
 
-    def elect_committee(self) -> tuple[int, ...]:
-        """Alg. 2 with counted messages (P2P MPC on b-vectors)."""
-        return self.transports["two_phase"].elect(self.round)
+    def elect_committee(self, eligible=None) -> tuple[int, ...]:
+        """Alg. 2 with counted messages (P2P MPC on b-vectors).
+
+        ``eligible`` (cohort mode) restricts the sampling pool to the
+        driver's current membership; ignored otherwise.
+        """
+        if eligible is None:
+            return self.transports["two_phase"].elect(self.round)
+        return self.transports["two_phase"].elect(self.round,
+                                                  eligible=eligible)
 
     # -- protocol dispatch -------------------------------------------------
 
@@ -240,9 +255,12 @@ class FLSimulation:
 
     # -- paper-equation cross-check -----------------------------------------
 
-    def expected_costs(self, s: int, e: int) -> dict:
+    def expected_costs(self, s: int, e: int,
+                       cohort: int | None = None) -> dict:
         p = CostParams(n=self.n, e=e, s=s, m=self.m, b=self.b)
         from repro.core import costmodel
+        if cohort is not None:
+            return costmodel.summary_cohort(p, cohort)
         return costmodel.summary(p)
 
     def phase2_stats(self):

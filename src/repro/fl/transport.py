@@ -333,6 +333,18 @@ class TwoPhaseTransport(_SimTransport):
     aggregation round (seed + round_index — the paper's Algorithm 2 as
     a *per-epoch* phase), excluding evicted members and down-weighting
     faulted ones by their reputation.
+
+    ``cohort=c`` turns on cohort-sampled rounds (DESIGN.md §12): ``n``
+    becomes the *registry* size and each round runs over a seeded
+    cohort of ``c`` parties drawn by ``fl.cohort.sample_cohort`` from
+    the eligible pool (registry minus evicted, further restricted by
+    the driver's ``eligible=`` pass-through).  Cohort mode implies
+    per-round election — Alg. 2 runs over each round's cohort via
+    ``committee_mod.elect_among`` (2·c·(c−1) messages of b per
+    subround) — and the aggregate broadcast still reaches all ``n``
+    registered parties, matching ``costmodel.summary_cohort`` exactly.
+    The wire backend samples from the identical Philox schedule, so
+    sim and wire stay bit-identical per cohort.
     """
 
     protocol = "two_phase"
@@ -340,8 +352,22 @@ class TwoPhaseTransport(_SimTransport):
     def __init__(self, n: int, *, vss: bool = False,
                  reelect_each_round: bool = False,
                  norm_bound: float | None = None,
-                 dealer_tamper: dict | None = None, **kw):
+                 dealer_tamper: dict | None = None,
+                 cohort: int | None = None, **kw):
         super().__init__(n, **kw)
+        if cohort is not None:
+            cohort = int(cohort)
+            if not 1 <= cohort <= n:
+                raise ValueError(
+                    f"cohort={cohort} must be in 1..n={n} (the cohort "
+                    "is sampled from the registered population)")
+            if cohort < self.m:
+                raise ValueError(
+                    f"cohort={cohort} cannot seat a committee of "
+                    f"m={self.m}")
+        self.cohort = cohort
+        #: the current round's sampled cohort (global ids, sorted)
+        self.cohort_ids: tuple[int, ...] | None = None
         if vss and self.scheme != "shamir":
             raise ValueError(
                 "verifiable secret sharing needs the Shamir scheme "
@@ -401,16 +427,39 @@ class TwoPhaseTransport(_SimTransport):
 
     # -- Phase I ----------------------------------------------------------
 
-    def elect(self, round_index: int = 0) -> tuple[int, ...]:
-        """Alg. 2 with counted messages (P2P MPC on b-vectors)."""
-        result = committee_mod.elect(
-            self.n, self.m, self.b, self.seed + round_index,
-            exclude=self.evicted,
-            reputation=self.reputation or None)
-        # wire accounting: each election round is one P2P additive MPC
-        # exchange of b-element messages (shares + partial sums)
-        self.net.send_batch(result.rounds * 2 * self.n * (self.n - 1),
-                            self.b, "phase1")
+    def elect(self, round_index: int = 0,
+              eligible=None) -> tuple[int, ...]:
+        """Alg. 2 with counted messages (P2P MPC on b-vectors).
+
+        ``eligible`` (cohort mode only) restricts the sampling pool to
+        the driver's current membership — registry churn between rounds
+        changes *which* parties can rank into the cohort without
+        shifting anyone else's rank, which is what keeps the Eq. 3–6
+        per-cohort mirror exact across backends.
+        """
+        if self.cohort is not None:
+            from .cohort import sample_cohort
+            pool = (set(range(self.n)) if eligible is None
+                    else {int(i) for i in eligible})
+            pool -= self.evicted
+            self.cohort_ids = sample_cohort(pool, self.cohort,
+                                            self.seed, round_index)
+            result = committee_mod.elect_among(
+                self.cohort_ids, self.m, self.b, self.seed + round_index,
+                exclude=self.evicted,
+                reputation=self.reputation or None)
+            c = len(self.cohort_ids)
+            self.net.send_batch(result.rounds * 2 * c * (c - 1),
+                                self.b, "phase1")
+        else:
+            result = committee_mod.elect(
+                self.n, self.m, self.b, self.seed + round_index,
+                exclude=self.evicted,
+                reputation=self.reputation or None)
+            # wire accounting: each election round is one P2P additive
+            # MPC exchange of b-element messages (shares + partial sums)
+            self.net.send_batch(result.rounds * 2 * self.n * (self.n - 1),
+                                self.b, "phase1")
         self.committee = result.committee
         self._elected_round = round_index
         return result.committee
@@ -419,8 +468,14 @@ class TwoPhaseTransport(_SimTransport):
 
     def aggregate(self, flats, party_ids=None, *, round_index: int = 0,
                   committee_dropout: Sequence[int] = (),
-                  committee_tamper: dict | None = None):
-        if self.reelect_each_round \
+                  committee_tamper: dict | None = None,
+                  eligible=None):
+        if self.cohort is not None:
+            # cohort mode implies per-round election: each round runs
+            # over its own sampled cohort
+            if self._elected_round != round_index:
+                self.elect(round_index, eligible=eligible)
+        elif self.reelect_each_round \
                 and self._elected_round != round_index:
             # per-epoch re-election: Alg. 2 re-run with evicted members
             # excluded and reputation-weighted scoring
@@ -434,7 +489,16 @@ class TwoPhaseTransport(_SimTransport):
                 "would silently return garbage")
         flats = self._as_batch(flats)
         l, s = int(flats.shape[0]), int(flats.shape[1])
+        if party_ids is None and self.cohort is not None:
+            party_ids = self.cohort_ids
         ids = self._ids(party_ids, l)
+        if self.cohort is not None:
+            stray = set(ids) - set(self.cohort_ids)
+            if stray:
+                raise ValueError(
+                    f"party_ids {sorted(stray)} are not in round "
+                    f"{round_index}'s sampled cohort "
+                    f"{self.cohort_ids} — only cohort members upload")
         # the committee sums l encodings — same headroom bound as P2P
         self.agg.fp.validate_for_parties(l)
         com = self.committee

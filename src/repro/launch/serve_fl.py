@@ -26,6 +26,7 @@ run.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import numpy as np
@@ -34,24 +35,57 @@ from repro.core import costmodel
 from repro.core.costmodel import CostParams
 
 
+def _load_spec(arg: str):
+    """``--spec``: a path to an ExperimentSpec JSON file, or the JSON
+    itself (starts with ``{``)."""
+    from repro.api import ExperimentSpec
+    if arg.lstrip().startswith("{"):
+        return ExperimentSpec.from_json(json.loads(arg))
+    with open(arg) as fh:
+        return ExperimentSpec.from_json(json.load(fh))
+
+
 def _coordinator(args) -> int:
     from repro.net import WireTransport
-    tr = WireTransport(
-        args.n, m=args.m, scheme=args.scheme, seed=args.seed, b=args.b,
-        shamir_degree=args.shamir_degree, host=args.host, port=args.port,
-        spawn=args.spawn_local, deadline_s=args.deadline_s,
-        log_dir=args.log_dir, start=False)
+    if args.spec:
+        spec = _load_spec(args.spec)
+        kw = spec.wire_transport_kwargs()
+        # deployment knobs stay on the CLI; the spec owns the protocol
+        args.n, args.m, args.b = spec.n, spec.m, spec.vote_batch
+        args.seed, args.scheme = spec.seed, spec.scheme
+        tr = WireTransport(
+            kw.pop("n"), host=args.host, port=args.port,
+            spawn=args.spawn_local, log_dir=args.log_dir, start=False,
+            **kw)
+    else:
+        tr = WireTransport(
+            args.n, m=args.m, scheme=args.scheme, seed=args.seed,
+            b=args.b, shamir_degree=args.shamir_degree, host=args.host,
+            port=args.port, spawn=args.spawn_local,
+            deadline_s=args.deadline_s, log_dir=args.log_dir,
+            start=False)
     tr.start()
     print(f"coordinator on {args.host}:{tr.port} — federation of "
           f"{args.n} parties, committee size {args.m}")
     try:
         committee = tr.elect()
         print(f"Phase I committee: {committee}")
+        cohort = getattr(tr, "cohort", None)
         rng = np.random.RandomState(args.seed)
         for r in range(args.rounds):
             flats = rng.randn(args.n, args.model_dim).astype(np.float32)
-            mean = np.asarray(tr.aggregate(flats, round_index=r))
-            err = float(np.abs(mean - flats.mean(0)).max())
+            if cohort:
+                if r:
+                    tr.elect(r)         # per-round cohort election
+                cids = sorted(tr.cohort_ids)
+                print(f"round {r} cohort: {cids}")
+                mean = np.asarray(tr.aggregate(
+                    flats[cids], party_ids=cids, round_index=r))
+                base = flats[cids].mean(0)
+            else:
+                mean = np.asarray(tr.aggregate(flats, round_index=r))
+                base = flats.mean(0)
+            err = float(np.abs(mean - base).max())
             print(f"round {r}: |G|={np.linalg.norm(mean):.4f} "
                   f"max|G - plain mean|={err:.2e} "
                   f"outcome={tr.last_outcome}")
@@ -64,12 +98,20 @@ def _coordinator(args) -> int:
         p2_size = sum(tr.net.stats(ph).msg_size for ph in
                       ("phase2_upload", "phase2_exchange",
                        "phase2_broadcast"))
+        if cohort:
+            exp1n = costmodel.phase1_cohort_msg_num(p, cohort)
+            exp1s = costmodel.phase1_cohort_msg_size(p, cohort)
+            exp2n = costmodel.phase2_cohort_msg_num(p, cohort)
+            exp2s = costmodel.phase2_cohort_msg_size(p, cohort)
+        else:
+            exp1n, exp1s = (costmodel.phase1_msg_num(p),
+                            costmodel.phase1_msg_size(p))
+            exp2n, exp2s = (costmodel.phase2_msg_num(p),
+                            costmodel.phase2_msg_size(p))
         print(f"phase1 wire: {st1.msg_num} msgs / {st1.msg_size} elems "
-              f"(Eqs. 3-4: {costmodel.phase1_msg_num(p)} / "
-              f"{costmodel.phase1_msg_size(p)})")
+              f"(Eqs. 3-4: {exp1n} / {exp1s})")
         print(f"phase2 wire: {p2_num} msgs / {p2_size} elems "
-              f"(Eqs. 5-6: {costmodel.phase2_msg_num(p)} / "
-              f"{costmodel.phase2_msg_size(p)})")
+              f"(Eqs. 5-6: {exp2n} / {exp2s})")
         print(f"raw socket bytes: in={tr.coordinator.raw_bytes_in} "
               f"out={tr.coordinator.raw_bytes_out} "
               "(frame headers + relay transit; see DESIGN.md §9)")
@@ -110,6 +152,11 @@ def main(argv=None) -> int:
                     help="spawn the n party workers as local "
                          "subprocesses instead of waiting for them")
     co.add_argument("--log-dir", default=None)
+    co.add_argument("--spec", default=None,
+                    help="repro.api.ExperimentSpec JSON (a file path "
+                         "or inline JSON); overrides the per-field "
+                         "protocol flags above — only host/port/"
+                         "spawn/log/round knobs stay on the CLI")
 
     pa = sub.add_parser("party", help="run one party worker")
     pa.add_argument("--host", default="127.0.0.1")

@@ -63,7 +63,27 @@ def main():
     ap.add_argument("--production-mesh", action="store_true",
                     help="use make_production_mesh() (real pods)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--spec", default="",
+                    help="repro.api.ExperimentSpec JSON (file path or "
+                         "inline JSON): sets protocol/scheme/committee/"
+                         "seed/compress-topk/chunk-elems from the spec; "
+                         "mesh and training-loop knobs stay on the CLI")
     args = ap.parse_args()
+    if args.spec:
+        import json
+
+        from repro.api import ExperimentSpec
+        if args.spec.lstrip().startswith("{"):
+            spec = ExperimentSpec.from_json(json.loads(args.spec))
+        else:
+            with open(args.spec) as fh:
+                spec = ExperimentSpec.from_json(json.load(fh))
+        args.protocol = spec.protocol
+        args.scheme = spec.scheme
+        args.committee = spec.m
+        args.seed = spec.seed
+        args.compress_topk = spec.compress_topk or 0.0
+        args.chunk_elems = spec.chunk_elems or 0
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = get_api(cfg)

@@ -11,17 +11,20 @@ accounting (``messages``), injectable-clock dropout detection
 
 from .config import WireConfig
 from .messages import MessageAssembler, MessageMeter
+from .registry import PartyLease, PartyRegistry
 from .timeouts import ManualClock, StageMonitor, SystemClock
 from .transport import WireTransport
 from .wire import (BadMagicError, Frame, FrameReader, MsgType,
                    OversizedFrameError, PartyFailedError, Phase,
-                   ProtocolError, Scheme, TruncatedFrameError,
-                   VersionError, WireError, WireTimeoutError, Wiredtype)
+                   ProtocolError, Scheme, StaleSessionError,
+                   TruncatedFrameError, VersionError, WireError,
+                   WireTimeoutError, Wiredtype)
 
 __all__ = [
     "BadMagicError", "Frame", "FrameReader", "ManualClock",
     "MessageAssembler", "MessageMeter", "MsgType", "OversizedFrameError",
-    "PartyFailedError", "Phase", "ProtocolError", "Scheme", "StageMonitor",
+    "PartyFailedError", "PartyLease", "PartyRegistry", "Phase",
+    "ProtocolError", "Scheme", "StageMonitor", "StaleSessionError",
     "SystemClock", "TruncatedFrameError", "VersionError", "WireConfig",
     "WireError", "WireTimeoutError", "WireTransport", "Wiredtype",
 ]

@@ -54,6 +54,18 @@ class WireConfig:
     #: whose norm exceeds the bound.  Requires vss (the rows must be
     #: commitment-verified before they can carry blame).
     norm_bound: float | None = None
+    #: per-round cohort size (DESIGN.md §12): ``n`` becomes the
+    #: registry and each round elects over / uploads from a seeded
+    #: sampled cohort (``fl.cohort.sample_cohort``); None keeps full
+    #: participation
+    cohort: int | None = None
+    #: overlap Phase I of round r+1 with Phase II of round r (cohort
+    #: mode only): the coordinator kicks off the next round's election
+    #: while this round's uploads are still streaming (DESIGN.md §12)
+    pipeline: bool = False
+    #: registration-lease duration; a party whose lease lapses must
+    #: re-register (None = leases never expire)
+    lease_s: float | None = 30.0
 
     def __post_init__(self):
         _check_chunk_elems(self.chunk_elems)
@@ -73,6 +85,22 @@ class WireConfig:
             if not self.norm_bound > 0:
                 raise ValueError(
                     f"norm_bound={self.norm_bound} must be positive")
+        if self.cohort is not None:
+            if not 1 <= self.cohort <= self.n:
+                raise ValueError(
+                    f"cohort={self.cohort} must be in 1..n={self.n} "
+                    "(the cohort samples from the registry)")
+            if self.cohort < self.m:
+                raise ValueError(
+                    f"cohort={self.cohort} cannot seat a committee of "
+                    f"m={self.m}")
+        if self.pipeline and self.cohort is None:
+            raise ValueError(
+                "pipeline=True needs cohort mode: only per-round cohort "
+                "elections can overlap the previous round's Phase II")
+        if self.lease_s is not None and not self.lease_s > 0:
+            raise ValueError(
+                f"lease_s={self.lease_s} must be positive (or None)")
 
     def fp(self) -> FixedPointConfig:
         return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
@@ -120,7 +148,10 @@ class WireConfig:
                                 deadline_s: float | None = 30.0,
                                 vss: bool = False,
                                 reelect_each_round: bool = False,
-                                norm_bound: float | None = None
+                                norm_bound: float | None = None,
+                                cohort: int | None = None,
+                                pipeline: bool = False,
+                                lease_s: float | None = 30.0
                                 ) -> "WireConfig":
         """Build from the simulation transports' kwarg vocabulary."""
         if fp is None:
@@ -135,4 +166,5 @@ class WireConfig:
                                 else chunk_elems),
                    deadline_s=deadline_s, vss=vss,
                    reelect_each_round=reelect_each_round,
-                   norm_bound=norm_bound)
+                   norm_bound=norm_bound, cohort=cohort,
+                   pipeline=pipeline, lease_s=lease_s)

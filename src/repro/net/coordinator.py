@@ -33,20 +33,23 @@ from __future__ import annotations
 
 import asyncio
 import contextlib
+import dataclasses
 
 import numpy as np
 
 from repro.core import committee as committee_mod
+from repro.fl.cohort import sample_cohort
 from repro.fl.faults import resolve_outcome
 from repro.fl.transport import Network
 
 from . import codec
 from .config import WireConfig
 from .messages import MessageAssembler, MessageMeter
+from .registry import PartyRegistry
 from .timeouts import StageMonitor, SystemClock
-from .wire import (Frame, MsgType, PartyFailedError, Phase, ProtocolError,
-                   Scheme, WireError, WireTimeoutError, Wiredtype,
-                   read_frame, write_frame)
+from .wire import (HEADER_SIZE, Frame, MsgType, PartyFailedError, Phase,
+                   ProtocolError, Scheme, StaleSessionError, WireError,
+                   WireTimeoutError, Wiredtype, read_frame, write_frame)
 
 __all__ = ["Coordinator"]
 
@@ -76,8 +79,21 @@ class Coordinator:
         self.net = net if net is not None else Network()
         self.clock = clock if clock is not None else SystemClock()
         self.log = log or (lambda msg: None)
+        #: registration leases + session ids (DESIGN.md §12); session
+        #: ids are minted at HELLO/WELCOME and validated on every frame
+        self.registry = PartyRegistry(cfg.n, lease_s=cfg.lease_s)
         self.committee: tuple[int, ...] | None = None
         self.election_rounds: int | None = None
+        #: the current round's sampled cohort (cohort mode; global ids)
+        self.cohort_ids: tuple[int, ...] | None = None
+        #: ``(stage, round) -> (start, end)`` clock times — the
+        #: pipelining proof: phase1[r+1] must start before phase2[r]
+        #: ends (asserted by the overlap tests)
+        self.stage_times: dict[tuple[str, int], tuple[float, float]] = {}
+        #: in-flight speculative election for the next round:
+        #: ``(round_index, cohort_ids, task)``
+        self._pipelined: tuple[int, tuple[int, ...],
+                               asyncio.Task] | None = None
         #: members caught tampering by the VSS layer (never re-elected)
         self.evicted: set[int] = set()
         #: per-party election weight for the per-round re-election
@@ -98,7 +114,9 @@ class Coordinator:
         self._server: asyncio.Server | None = None
         self._conns: dict[int, _Conn] = {}
         self._event = asyncio.Event()
-        self._meter: MessageMeter | None = None
+        #: one meter per in-flight round (the pipelined election for
+        #: round r+1 meters concurrently with round r's Phase II)
+        self._meters: dict[int, MessageMeter] = {}
         self._result: MessageAssembler | None = None
         self._result_mean: np.ndarray | None = None
         self._committee_reports: dict[int, list | None] = {}
@@ -122,6 +140,11 @@ class Coordinator:
         return self.port
 
     async def stop(self) -> None:
+        if self._pipelined is not None:
+            self._pipelined[2].cancel()
+            with contextlib.suppress(asyncio.CancelledError, Exception):
+                await self._pipelined[2]
+            self._pipelined = None
         for conn in list(self._conns.values()):
             if conn.alive:
                 with contextlib.suppress(Exception):
@@ -158,18 +181,41 @@ class Coordinator:
             writer.close()
             return
         pid = hello.src
-        if not 0 <= pid < self.cfg.n or pid in self._conns:
+        prev = self._conns.get(pid)
+        if not 0 <= pid < self.cfg.n or (prev is not None and prev.alive):
             self.log(f"rejecting HELLO from invalid/duplicate party {pid}")
             writer.close()
             return
+        now = self.clock.monotonic()
+        if hello.session:
+            # reconnect: resume the existing lease mid-federation — the
+            # party keeps its session id and logical identity; meter/
+            # assembler progress is keyed by (src, dst, type), so an
+            # interrupted logical message continues where the old
+            # socket broke.  A stale session is a typed, *reported*
+            # rejection: the party learns it must re-register fresh.
+            try:
+                session = self.registry.resume(pid, hello.session, now)
+            except StaleSessionError as e:
+                self.log(f"party {pid} resume rejected: {e}")
+                with contextlib.suppress(Exception):
+                    await write_frame(writer, Frame(
+                        MsgType.ERROR, dst=pid,
+                        payload=codec.encode_json({"error": str(e)})))
+                    writer.close()
+                return
+            verb = "resumed"
+        else:
+            session = self.registry.register(pid, now)
+            verb = "registered"
         conn = _Conn(pid, reader, writer)
         self._conns[pid] = conn
         await write_frame(writer, Frame(
-            MsgType.WELCOME, dst=pid,
+            MsgType.WELCOME, dst=pid, session=session,
             payload=codec.encode_json(self.cfg.to_json())), conn.lock)
         conn.task = asyncio.ensure_future(self._serve(conn))
-        self.log(f"party {pid} registered "
-                 f"({len(self._conns)}/{self.cfg.n})")
+        self.log(f"party {pid} {verb} (session {session:#x}, "
+                 f"{len(self._conns)}/{self.cfg.n})")
         self._pulse()
 
     async def _serve(self, conn: _Conn) -> None:
@@ -179,28 +225,43 @@ class Coordinator:
                 frame = await read_frame(conn.reader)
                 if frame is None:
                     break
-                self.raw_bytes_in += 4 + 28 + len(frame.payload)
+                self.raw_bytes_in += 4 + HEADER_SIZE + len(frame.payload)
                 await self._on_frame(conn, frame)
         except (WireError, ConnectionError, asyncio.IncompleteReadError,
                 OSError) as e:
             self.log(f"party {conn.pid} stream error: {e!r}")
         finally:
-            self._mark_dead(conn.pid)
+            self._mark_dead(conn)
 
-    def _mark_dead(self, pid: int) -> None:
-        conn = self._conns.get(pid)
-        if conn is not None and conn.alive:
-            conn.alive = False
-            self._round_dropped.add(pid)
+    def _mark_dead(self, conn: "_Conn | None") -> None:
+        """EOF/error on ``conn``; a superseded connection (its pid
+        resumed or re-registered on a fresh socket) dies silently —
+        only the *current* connection's death is a party dropout."""
+        if conn is None or not conn.alive:
+            return
+        conn.alive = False
+        if self._conns.get(conn.pid) is conn:
+            self._round_dropped.add(conn.pid)
             for mon in self._monitors:
-                mon.eof(pid)
-            self.log(f"party {pid} disconnected (EOF)")
-            self._pulse()
+                mon.eof(conn.pid)
+            self.log(f"party {conn.pid} disconnected (EOF)")
+        self._pulse()
 
     async def _on_frame(self, conn: _Conn, frame: Frame) -> None:
         if frame.src != conn.pid:
             raise ProtocolError(
                 f"party {conn.pid} spoofed src={frame.src}")
+        # session gate: every post-HELLO frame must carry the party's
+        # current lease; a superseded session is typed
+        # (StaleSessionError) and costs the sender its connection,
+        # never the round it no longer belongs to.  Expiry is NOT
+        # enforced here — a frame on the live socket is liveness
+        # evidence (a party mid-JIT can be silent past lease_s), so the
+        # frame renews the lease instead of tripping over it
+        now = self.clock.monotonic()
+        self.registry.validate(conn.pid, frame.session, now,
+                               enforce_expiry=False)
+        self.registry.renew(conn.pid, now)
         if frame.dst >= 0:
             # party->party data: relay FIRST, then meter — the ordering
             # invariant every COMMIT/chain decision depends on
@@ -208,10 +269,11 @@ class Coordinator:
                 raise ProtocolError(
                     f"relay to out-of-range party {frame.dst}")
             await self._relay(frame)
-            if self._meter is None:
+            meter = self._meters.get(frame.round)
+            if meter is None:
                 raise ProtocolError(
                     f"{frame.type_name()} data frame outside any round")
-            if self._meter.feed(frame):
+            if meter.feed(frame):
                 self._note_completion(frame)
             self._pulse()
             return
@@ -222,10 +284,11 @@ class Coordinator:
         elif frame.msg_type == MsgType.READY:
             self._ready.add(conn.pid)
         elif frame.msg_type == MsgType.RESULT:
-            if self._result is None or self._meter is None:
+            meter = self._meters.get(frame.round)
+            if self._result is None or meter is None:
                 raise ProtocolError("RESULT outside an aggregation round")
             done = self._result.feed(frame)
-            self._meter.feed(frame)
+            meter.feed(frame)
             if done is not None:
                 self._result_mean = done
         elif frame.msg_type == MsgType.BLAME:
@@ -332,17 +395,23 @@ class Coordinator:
             self.raw_bytes_out += await write_frame(dst.writer, frame,
                                                     dst.lock)
         except (ConnectionError, OSError):
-            self._mark_dead(frame.dst)
+            self._mark_dead(dst)
 
     async def _send(self, pid: int, frame: Frame) -> None:
         conn = self._conns.get(pid)
         if conn is None or not conn.alive:
             return
+        if frame.session == 0:
+            # stamp the destination's current lease so parties can see
+            # which registration epoch a coordinator frame belongs to
+            session = self.registry.session_of(pid)
+            if session is not None:
+                frame = dataclasses.replace(frame, session=session)
         try:
             self.raw_bytes_out += await write_frame(conn.writer, frame,
                                                     conn.lock)
         except (ConnectionError, OSError):
-            self._mark_dead(pid)
+            self._mark_dead(conn)
 
     async def _send_chunked(self, pid: int, msg_type: int, *, round_index,
                             phase: int, dtype: int, arr: np.ndarray,
@@ -404,15 +473,91 @@ class Coordinator:
 
     # -- Phase I: committee election (Alg. 2) -----------------------------
 
-    async def elect(self, round_index: int = 0) -> tuple[int, ...]:
-        """Run the election over the wire; all parties must be alive."""
+    def _round_cohort(self, round_index: int,
+                      eligible=None) -> tuple[int, ...]:
+        """Sample the round's cohort from the eligible pool (cohort
+        mode) — the *same* ``sample_cohort`` draw the sim transport,
+        the FedAvg driver, and the Eq. 3–6 mirror compute, which is
+        what keeps sim and wire bit-identical per cohort."""
+        pool = (self.registry.eligible(self.clock.monotonic())
+                if eligible is None else {int(i) for i in eligible})
+        pool -= self.evicted
+        return sample_cohort(pool, self.cfg.cohort, self.cfg.seed,
+                             round_index)
+
+    async def elect(self, round_index: int = 0,
+                    eligible=None) -> tuple[int, ...]:
+        """Run Phase I over the wire and commit its result.
+
+        Full-registry mode: every registered party votes.  Cohort mode
+        (``cfg.cohort``): the round's cohort is sampled from
+        ``eligible`` (default: the registry's live leases) minus
+        evicted parties and the election runs among cohort members
+        only.  A speculative election started by the previous round's
+        pipelining is adopted here iff it ran over the identical
+        cohort — its vote traffic is already on the Eq. 3 counters, so
+        a membership change that invalidates the speculation is a loud
+        ``ProtocolError`` instead of a silent double-count.
+        """
+        voters = None
+        if self.cfg.cohort is not None:
+            voters = self._round_cohort(round_index, eligible)
+        if self._pipelined is not None:
+            pipe_round, pipe_voters, task = self._pipelined
+            self._pipelined = None
+            if pipe_round == round_index and pipe_voters == voters:
+                committee, subrounds = await task
+            else:
+                task.cancel()
+                with contextlib.suppress(asyncio.CancelledError,
+                                         Exception):
+                    await task
+                raise ProtocolError(
+                    f"pipelined election for round {pipe_round} ran "
+                    f"over cohort {pipe_voters} but round "
+                    f"{round_index} needs {voters}: membership changed "
+                    "mid-round (ban/eviction/churn) — its Phase I "
+                    "traffic is already counted, so pipelining "
+                    "requires round-stable membership (disable "
+                    "pipeline= under adversarial churn)")
+        else:
+            committee, subrounds = await self._elect_wire(round_index,
+                                                          voters)
+        self.committee = tuple(committee)
+        self.election_rounds = subrounds
+        self.cohort_ids = voters
+        self._elected_round = round_index
+        self.log(f"committee elected: {self.committee} "
+                 f"({subrounds} subround(s)"
+                 + (f", cohort {voters}" if voters is not None else "")
+                 + ")")
+        return self.committee
+
+    async def _elect_wire(self, round_index: int, voters) -> tuple:
+        """One wire election over ``voters`` (None = full registry);
+        returns ``(committee, subrounds)`` without committing state —
+        the pipelined path runs this concurrently with the previous
+        round's Phase II and commits only on adoption."""
         cfg = self.cfg
-        live = self._live(range(cfg.n))
-        if len(live) < cfg.n:
-            raise WireError(
-                f"election needs all {cfg.n} parties connected, have "
-                f"{len(live)} (Alg. 2 elects over the full membership)")
-        self._meter = MessageMeter(self.net, round_index=round_index)
+        if voters is None:
+            live = self._live(range(cfg.n))
+            if len(live) < cfg.n:
+                raise WireError(
+                    f"election needs all {cfg.n} parties connected, "
+                    f"have {len(live)} (Alg. 2 elects over the full "
+                    "membership)")
+        else:
+            live = self._live(voters)
+            if len(live) < len(voters):
+                raise WireError(
+                    f"election needs every cohort member connected: "
+                    f"cohort {tuple(voters)}, missing "
+                    f"{sorted(set(voters) - set(live))} (Alg. 2 has "
+                    "no quorum path)")
+            live = sorted(voters)
+        self._meters.setdefault(
+            round_index, MessageMeter(self.net, round_index=round_index))
+        t0 = self.clock.monotonic()
         subround = 0
         # eviction/reputation state rides the ELECT body so every party
         # applies the identical filter/weighting (unanimity check below)
@@ -422,10 +567,14 @@ class Coordinator:
         if self.reputation:
             elect_state["weights"] = {str(k): v for k, v
                                       in sorted(self.reputation.items())}
+        if voters is not None:
+            elect_state["cohort"] = list(voters)
+        created = []
         try:
             while True:
                 self._committee_reports = {}
                 mon = self._new_monitor(live)
+                created.append(mon)
                 for pid in live:
                     await self._send(pid, Frame(
                         MsgType.ELECT, round=round_index, dst=pid,
@@ -450,7 +599,8 @@ class Coordinator:
                         "quorum path (Alg. 2 needs every party's votes)")
                 reports = set(
                     tuple(r or ())
-                    for r in self._committee_reports.values())
+                    for r in (self._committee_reports[pid]
+                              for pid in live))
                 if len(reports) != 1:
                     raise ProtocolError(
                         f"parties disagree on the committee: {reports}")
@@ -463,14 +613,24 @@ class Coordinator:
                         f"election failed to fill a committee of "
                         f"{cfg.m} in {subround} subrounds")
         finally:
-            self._monitors = []
-            self._meter = None
+            for mon in created:
+                if mon in self._monitors:
+                    self._monitors.remove(mon)
+        self.stage_times[("phase1", round_index)] = (
+            t0, self.clock.monotonic())
         # conformance cross-check: the wire election must agree with the
         # in-sim oracle (same seeds => same draws => same committee)
-        oracle = committee_mod.elect(cfg.n, cfg.m, cfg.b,
-                                     cfg.seed + round_index,
-                                     exclude=self.evicted,
-                                     reputation=self.reputation or None)
+        if voters is None:
+            oracle = committee_mod.elect(cfg.n, cfg.m, cfg.b,
+                                         cfg.seed + round_index,
+                                         exclude=self.evicted,
+                                         reputation=self.reputation
+                                         or None)
+        else:
+            oracle = committee_mod.elect_among(
+                voters, cfg.m, cfg.b, cfg.seed + round_index,
+                exclude=self.evicted,
+                reputation=self.reputation or None)
         if tuple(committee) != oracle.committee:
             raise ProtocolError(
                 f"wire election produced {committee}, oracle says "
@@ -479,28 +639,45 @@ class Coordinator:
             raise ProtocolError(
                 f"wire election used {subround} subrounds, oracle used "
                 f"{oracle.rounds}")
-        self.committee = tuple(committee)
-        self.election_rounds = subround
-        self._elected_round = round_index
-        self.log(f"committee elected: {self.committee} "
-                 f"({subround} subround(s))")
-        return self.committee
+        return tuple(committee), subround
 
     # -- Phase II: committee aggregation (Alg. 3) -------------------------
 
     async def aggregate(self, round_index: int, flats: np.ndarray,
-                        party_ids: list[int]):
-        """One aggregation round; returns ``(mean [d], RoundOutcome)``."""
+                        party_ids: list[int], *, eligible=None,
+                        pipeline_next_eligible=None):
+        """One aggregation round; returns ``(mean [d], RoundOutcome)``.
+
+        Cohort mode: the round runs over ``round_index``'s sampled
+        cohort (electing it first if the driver has not already);
+        ``party_ids`` must be cohort members.  With ``cfg.pipeline``,
+        ``pipeline_next_eligible`` (the membership expected for round
+        ``round_index + 1``) kicks off the next round's Phase I while
+        this round's Phase II uploads are still streaming — the
+        speculative result is adopted by the next ``elect()`` call.
+        """
         cfg = self.cfg
-        if self.committee is None or (cfg.reelect_each_round
-                                      and self._elected_round
-                                      != round_index):
+        if cfg.cohort is not None:
+            # cohort mode implies per-round election over the round's
+            # sampled cohort (mirrors TwoPhaseTransport exactly)
+            if self._elected_round != round_index:
+                await self.elect(round_index, eligible=eligible)
+        elif self.committee is None or (cfg.reelect_each_round
+                                        and self._elected_round
+                                        != round_index):
             # per-epoch re-election (Alg. 2 re-run): evicted members
             # are excluded, faulted ones reputation-weighted — mirrors
             # TwoPhaseTransport.reelect_each_round exactly
             await self.elect(round_index)
         flats = np.ascontiguousarray(np.asarray(flats, dtype=np.float32))
         ids = [int(i) for i in party_ids]
+        if cfg.cohort is not None:
+            stray = set(ids) - set(self.cohort_ids or ())
+            if stray:
+                raise ValueError(
+                    f"party_ids {sorted(stray)} are not in round "
+                    f"{round_index}'s sampled cohort {self.cohort_ids} "
+                    "— only cohort members upload")
         if flats.shape[0] != len(ids):
             raise ValueError(
                 f"{flats.shape[0]} updates but {len(ids)} party ids")
@@ -522,9 +699,15 @@ class Coordinator:
         self._ready = set()
         self._upload_done = {}
         self._result_mean = None
-        self._monitors = []
-        self._meter = MessageMeter(self.net, round_index=round_index)
+        self._meters.setdefault(
+            round_index, MessageMeter(self.net, round_index=round_index))
         self._result = MessageAssembler(round_index=round_index)
+        if self._pipelined is None:
+            # stale-monitor hygiene between rounds; skipped while a
+            # pipelined election's own monitor is still registered
+            self._monitors = []
+        t0_phase2 = self.clock.monotonic()
+        round_monitors = []
 
         participants = self._live(ids)
         pre_dead = sorted(set(ids) - set(participants))
@@ -536,6 +719,7 @@ class Coordinator:
         # a mid-stage EOF is never missed
         upload_mon = self._upload_mon = self._new_monitor(participants)
         member_mon = self._new_monitor(self._live(self.committee))
+        round_monitors += [upload_mon, member_mon]
 
         # 1) ROUND_START to every connected party (members must take
         #    part even when the driver excluded them as data parties)
@@ -555,6 +739,20 @@ class Coordinator:
                 phase=Phase.WIRE_INPUT, dtype=Wiredtype.FLOAT32,
                 arr=flats[row[pid]])
             self.net.send_batch(1, d, "wire_input")
+
+        if (cfg.pipeline and cfg.cohort is not None
+                and pipeline_next_eligible is not None):
+            # pipelining (DESIGN.md §12): round r+1's Phase I election
+            # starts NOW, while round r's Phase II uploads are still
+            # streaming; the next elect() call adopts the result iff
+            # the cohort it sampled matches (round-stable membership)
+            next_voters = self._round_cohort(round_index + 1,
+                                             pipeline_next_eligible)
+            task = asyncio.ensure_future(
+                self._elect_wire(round_index + 1, next_voters))
+            self._pipelined = (round_index + 1, next_voters, task)
+            self.log(f"pipelined Phase I for round {round_index + 1} "
+                     f"over cohort {next_voters}")
 
         # 3) wait for uploads (n·m logical messages) + member READY
         await self._wait(lambda: False, None, what="share uploads",
@@ -610,6 +808,7 @@ class Coordinator:
             "included": included, "live_members": live_members,
             "l": len(included)})
         chain_mon = self._new_monitor(live_members)
+        round_monitors.append(chain_mon)
         for w in live_members:
             await self._send(w, Frame(
                 MsgType.COMMIT, round=round_index, dst=w,
@@ -660,10 +859,17 @@ class Coordinator:
                     phase=Phase.PHASE2_BROADCAST, dtype=Wiredtype.FLOAT32,
                     arr=mean, src=serving)
 
-        self._monitors = []
+        # scoped cleanup: only THIS round's monitors/meter go away (a
+        # pipelined election for round r+1 may still be running with
+        # its own monitor + meter registered)
+        for mon in round_monitors:
+            if mon in self._monitors:
+                self._monitors.remove(mon)
         self._upload_mon = None
-        self._meter = None
+        self._meters.pop(round_index, None)
         self._result = None
+        self.stage_times[("phase2", round_index)] = (
+            t0_phase2, self.clock.monotonic())
         self.log(f"round {round_index}: l={len(included)} "
                  f"live_members={live_members} outcome={outcome}")
         return mean, outcome

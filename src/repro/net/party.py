@@ -50,6 +50,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import collections
+import dataclasses
 import os
 import sys
 import traceback
@@ -112,6 +113,10 @@ class PartyWorker:
         self.writer: asyncio.StreamWriter | None = None
         self._pending: dict[int, collections.deque] = (
             collections.defaultdict(collections.deque))
+        #: registration-lease session id (WELCOME header, DESIGN.md §12);
+        #: stamped into every outbound frame so the coordinator can
+        #: reject frames from superseded/expired leases
+        self.session = 0
         self._tally: np.ndarray | None = None
         self._prev_acc: np.ndarray | None = None
         self.last_mean: np.ndarray | None = None
@@ -138,6 +143,8 @@ class PartyWorker:
             self._pending[frame.msg_type].append(frame)
 
     async def _send(self, frame: Frame) -> None:
+        if self.session and frame.session == 0:
+            frame = dataclasses.replace(frame, session=self.session)
         await write_frame(self.writer, frame)
 
     async def _send_chunked(self, msg_type: int, dst: int, *, round_index,
@@ -184,23 +191,33 @@ class PartyWorker:
         body = codec.decode_json(elect.payload)
         subround = int(body["subround"])
         round_index = elect.round
+        # cohort mode (DESIGN.md §12): the ELECT body names the round's
+        # sampled voter set; votes land in [0, c) and are tallied over
+        # positions in sorted(ids) — the exact mirror of
+        # committee.elect_among (full participation when absent)
+        ids = sorted(int(i) for i in body.get("cohort")
+                     or range(cfg.n))
+        c = len(ids)
+        my_pos = ids.index(self.pid)
         if subround == 0:
-            self._tally = np.zeros(cfg.n, dtype=np.int64)
+            self._tally = np.zeros(c, dtype=np.int64)
         elect_seed = cfg.seed + round_index
         k0, k1 = philox.derive_key(elect_seed, (subround << 20) | self.pid)
-        votes = committee_mod.draw_votes(cfg.n, cfg.b, k0, k1,
+        votes = committee_mod.draw_votes(c, cfg.b, k0, k1,
                                          round_index=subround)
-        shares = np.asarray(additive_share(votes, cfg.n, k0, k1),
-                            dtype=np.uint32)            # [n, b]
-        peers = {j for j in range(cfg.n) if j != self.pid}
-        for j in peers:
+        shares = np.asarray(additive_share(votes, c, k0, k1),
+                            dtype=np.uint32)            # [c, b]
+        peers = {j for j in ids if j != self.pid}
+        for p, j in enumerate(ids):
+            if j == self.pid:
+                continue
             await self._send_chunked(
                 MsgType.VOTE_SHARE, j, round_index=round_index,
-                phase=Phase.PHASE1, arr=shares[j],
+                phase=Phase.PHASE1, arr=shares[p],
                 dtype_code=Wiredtype.UINT32)
         asm = MessageAssembler(round_index=round_index)
         got = await self._collect(asm, MsgType.VOTE_SHARE, peers)
-        partial = shares[self.pid]
+        partial = shares[my_pos]
         for arr in got.values():              # wraparound: order-free
             partial = (partial + arr.astype(np.uint32)).astype(np.uint32)
         for j in peers:
@@ -212,17 +229,25 @@ class PartyWorker:
         total = partial
         for arr in got.values():
             total = (total + arr.astype(np.uint32)).astype(np.uint32)
-        self._tally += committee_mod.tally_votes(total, cfg.n)
+        self._tally += committee_mod.tally_votes(total, c)
         # eviction/reputation state is coordinator-broadcast in the
         # ELECT body so every party applies the identical filter and
-        # weighting — the conformance check requires unanimity
-        exclude = body.get("exclude") or ()
+        # weighting — the conformance check requires unanimity.  Both
+        # stay keyed by *global* id on the wire; map to tally positions
+        # exactly as elect_among does
+        excluded = set(int(i) for i in body.get("exclude") or ())
         weights = body.get("weights") or None
+        pos_exclude = [p for p, i in enumerate(ids) if i in excluded]
+        pos_weights = None
         if weights is not None:
             weights = {int(k): float(v) for k, v in weights.items()}
+            pos_weights = {p: weights.get(i, 1.0)
+                           for p, i in enumerate(ids)}
         committee = committee_mod.select_committee(
-            self._tally, cfg.m, exclude=exclude, reputation=weights)
-        report = committee if len(committee) == cfg.m else None
+            self._tally, cfg.m, exclude=pos_exclude,
+            reputation=pos_weights)
+        report = ([ids[p] for p in committee]
+                  if len(committee) == cfg.m else None)
         await self._send(Frame(
             MsgType.COMMITTEE, round=round_index, src=self.pid,
             payload=codec.encode_json({"committee": report})))
@@ -308,10 +333,23 @@ class PartyWorker:
                                    src=self.pid))
             await self._member_duties(round_index, ids, committee, d, asm)
 
-        # every connected party receives the aggregate (Alg. 3 l.22)
-        got = await self._collect(asm, MsgType.BROADCAST,
-                                  {committee[self.pid % len(committee)]})
-        self.last_mean = next(iter(got.values()))
+        # every connected party receives the aggregate (Alg. 3 l.22).
+        # A pipelined coordinator may interleave round r+1's Phase I
+        # here — ELECT frames are served inline so the next election
+        # genuinely overlaps this round's tail at the parties too
+        serving = committee[self.pid % len(committee)]
+        mean = None
+        while mean is None:
+            frame = await self._next(MsgType.BROADCAST, MsgType.ELECT)
+            if frame.msg_type == MsgType.ELECT:
+                await self._election_subround(frame)
+                continue
+            if frame.src != serving:
+                raise ProtocolError(
+                    f"BROADCAST from unexpected member {frame.src} "
+                    f"(expecting {serving})")
+            mean = asm.feed(frame)
+        self.last_mean = mean
         self.log(f"round {round_index} done "
                  f"(|G|={np.linalg.norm(self.last_mean):.4f})")
 
@@ -650,6 +688,7 @@ class PartyWorker:
             self.host, self.port)
         await self._send(Frame(MsgType.HELLO, src=self.pid))
         welcome = await self._next(MsgType.WELCOME)
+        self.session = welcome.session
         self.cfg = WireConfig.from_json(codec.decode_json(welcome.payload))
         self.agg = self.cfg.aggregator()
         self.log(f"party {self.pid} joined federation "

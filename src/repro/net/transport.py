@@ -25,6 +25,7 @@ import atexit
 import os
 import subprocess
 import sys
+import tempfile
 import threading
 
 import jax.numpy as jnp
@@ -62,6 +63,8 @@ class WireTransport(Transport):
                  deadline_s: float | None = 30.0,
                  vss: bool = False, reelect_each_round: bool = False,
                  norm_bound: float | None = None,
+                 cohort: int | None = None, pipeline: bool = False,
+                 lease_s: float | None = 30.0,
                  dealer_tamper: dict | None = None,
                  round_timeout_s: float = 120.0,
                  host: str = "127.0.0.1", port: int = 0,
@@ -74,7 +77,8 @@ class WireTransport(Transport):
             shamir_degree=shamir_degree, chunk_elems=chunk_elems,
             deadline_s=deadline_s, vss=vss,
             reelect_each_round=reelect_each_round,
-            norm_bound=norm_bound)
+            norm_bound=norm_bound, cohort=cohort, pipeline=pipeline,
+            lease_s=lease_s)
         # dealer_tamper {pid: (mode, round)} becomes per-party --poison
         # CLI flags: on the wire the adversary is the *worker process*
         # poisoning its own input, not a coordinator-side mutation
@@ -103,6 +107,10 @@ class WireTransport(Transport):
         self.startup_timeout_s = startup_timeout_s
         self.port: int | None = None
         self.committee: tuple[int, ...] | None = None
+        #: per-round sampled cohort (None outside cohort mode) — the
+        #: driver mirrors it against fl.cohort.sample_cohort
+        self.cohort = cohort
+        self.cohort_ids: tuple[int, ...] | None = None
         self.last_outcome = None
         self.coordinator: Coordinator | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
@@ -149,6 +157,15 @@ class WireTransport(Transport):
         env["PYTHONPATH"] = (_src_root() + os.pathsep
                              + env.get("PYTHONPATH", ""))
         env.setdefault("JAX_PLATFORMS", "cpu")
+        # persistent XLA compilation cache shared by every party
+        # process: the Feldman verify/commit JITs compile once (first
+        # worker, first round) instead of once per process per run —
+        # this is what removed the round_timeout_s>=600 VSS footgun
+        env.setdefault("JAX_COMPILATION_CACHE_DIR",
+                       os.path.join(tempfile.gettempdir(),
+                                    "repro-jax-cache"))
+        env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+        env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
         for pid in range(self.cfg.n):
             cmd = [sys.executable, "-m", "repro.net.party",
                    "--host", self.host, "--port", str(self.port),
@@ -186,21 +203,28 @@ class WireTransport(Transport):
 
     # -- Transport interface ---------------------------------------------
 
-    def elect(self, round_index: int = 0) -> tuple[int, ...]:
-        self.committee = self._run(self.coordinator.elect(round_index))
+    def elect(self, round_index: int = 0,
+              eligible=None) -> tuple[int, ...]:
+        self.committee = self._run(
+            self.coordinator.elect(round_index, eligible=eligible))
+        self.cohort_ids = self.coordinator.cohort_ids
         return self.committee
 
-    def aggregate(self, flats, party_ids=None, *, round_index: int = 0):
+    def aggregate(self, flats, party_ids=None, *, round_index: int = 0,
+                  eligible=None, pipeline_next_eligible=None):
         flats = np.asarray(flats, dtype=np.float32)
         if flats.ndim == 1:
             flats = flats[None]
         ids = (list(range(flats.shape[0])) if party_ids is None
                else [int(i) for i in party_ids])
-        if self.committee is None:
+        if self.committee is None and self.cfg.cohort is None:
             self.elect(round_index)
         mean, outcome = self._run(
-            self.coordinator.aggregate(round_index, flats, ids))
+            self.coordinator.aggregate(
+                round_index, flats, ids, eligible=eligible,
+                pipeline_next_eligible=pipeline_next_eligible))
         self.committee = self.coordinator.committee
+        self.cohort_ids = self.coordinator.cohort_ids
         self.last_outcome = outcome
         return jnp.asarray(mean)
 

@@ -2,13 +2,13 @@
 
 Every frame on a socket is::
 
-    [ u32 length | 28-byte header | payload (length - 28 bytes) ]
+    [ u32 length | 32-byte header | payload (length - 32 bytes) ]
 
 with the header (big-endian, ``struct`` format ``HEADER_FMT``)::
 
     offset  field        type  meaning
     0       magic        2s    b"2P"
-    2       version      u8    PROTOCOL_VERSION (1)
+    2       version      u8    PROTOCOL_VERSION (2)
     3       msg_type     u8    MsgType code
     4       round        u32   aggregation round index
     8       phase        u8    Phase code (maps to Network counter names)
@@ -17,8 +17,11 @@ with the header (big-endian, ``struct`` format ``HEADER_FMT``)::
     11      flags        u8    reserved, must be 0
     12      src          i32   logical sender party id (-1 = coordinator)
     16      dst          i32   logical receiver party id (-1 = coordinator)
-    20      chunk_off    u32   element offset of this chunk in the message
-    24      total_elems  u32   logical message length in elements
+    20      session      u32   registration-lease session id (0 = none;
+                               assigned in WELCOME, carried on every
+                               subsequent frame — DESIGN.md §12)
+    24      chunk_off    u32   element offset of this chunk in the message
+    28      total_elems  u32   logical message length in elements
 
 A *logical message* (one share upload, one vote vector, one broadcast)
 may span many frames: chunks of ``chunk_elems`` elements each carry
@@ -45,16 +48,17 @@ __all__ = [
     "BadMagicError", "Frame", "FrameReader", "HEADER_SIZE", "MAGIC",
     "MAX_PAYLOAD_BYTES", "MsgType", "OversizedFrameError", "Phase",
     "PartyFailedError", "ProtocolError", "PROTOCOL_VERSION", "Scheme",
-    "TruncatedFrameError", "VersionError", "WireError", "WireTimeoutError",
+    "StaleSessionError", "TruncatedFrameError", "VersionError",
+    "WireError", "WireTimeoutError",
     "Wiredtype", "encode_frame", "decode_frame", "read_frame",
     "write_frame",
 ]
 
 MAGIC = b"2P"
-PROTOCOL_VERSION = 1
-HEADER_FMT = ">2sBBIBBBBiiII"
-HEADER_SIZE = struct.calcsize(HEADER_FMT)          # 28
-assert HEADER_SIZE == 28
+PROTOCOL_VERSION = 2
+HEADER_FMT = ">2sBBIBBBBiiIII"
+HEADER_SIZE = struct.calcsize(HEADER_FMT)          # 32
+assert HEADER_SIZE == 32
 _LEN = struct.Struct(">I")
 _HEADER = struct.Struct(HEADER_FMT)
 
@@ -87,6 +91,13 @@ class VersionError(WireError):
 class ProtocolError(WireError):
     """Well-formed frame violating the protocol state machine
     (wrong round, wrong phase, bad chunk sequence, unknown type)."""
+
+
+class StaleSessionError(ProtocolError):
+    """Frame carries a session id that is not the party's current
+    registration lease — a reconnect after the lease expired (or after
+    a fresh re-registration superseded it) must re-HELLO with session 0
+    instead of resuming."""
 
 
 class WireTimeoutError(WireError):
@@ -193,6 +204,7 @@ class Frame:
     dtype: int = Wiredtype.RAW
     src: int = -1
     dst: int = -1
+    session: int = 0
     chunk_off: int = 0
     total_elems: int = 0
     payload: bytes = b""
@@ -217,13 +229,13 @@ def encode_frame(frame: Frame) -> bytes:
     header = _HEADER.pack(
         MAGIC, PROTOCOL_VERSION, frame.msg_type, frame.round & 0xFFFFFFFF,
         frame.phase, frame.scheme, frame.dtype, 0, frame.src, frame.dst,
-        frame.chunk_off, frame.total_elems)
+        frame.session & 0xFFFFFFFF, frame.chunk_off, frame.total_elems)
     return _LEN.pack(HEADER_SIZE + len(payload)) + header + payload
 
 
 def _parse_header(buf: bytes) -> Frame:
     (magic, version, msg_type, rnd, phase, scheme, dtype, _flags, src,
-     dst, chunk_off, total_elems) = _HEADER.unpack_from(buf)
+     dst, session, chunk_off, total_elems) = _HEADER.unpack_from(buf)
     if magic != MAGIC:
         raise BadMagicError(f"bad magic {magic!r} (expected {MAGIC!r})")
     if version != PROTOCOL_VERSION:
@@ -237,8 +249,9 @@ def _parse_header(buf: bytes) -> Frame:
             f"dtype {dtype} payload of {len(payload)} bytes is not a "
             f"multiple of {per}")
     frame = Frame(msg_type=msg_type, round=rnd, phase=phase, scheme=scheme,
-                  dtype=dtype, src=src, dst=dst, chunk_off=chunk_off,
-                  total_elems=total_elems, payload=payload)
+                  dtype=dtype, src=src, dst=dst, session=session,
+                  chunk_off=chunk_off, total_elems=total_elems,
+                  payload=payload)
     if per is not None and frame.chunk_off + frame.elems > total_elems:
         raise ProtocolError(
             f"{frame.type_name()} chunk [{chunk_off}, "

@@ -18,9 +18,21 @@ import os
 import random
 import re
 import sys
+import tempfile
 import types
 
 import pytest
+
+# Persistent JAX compilation cache, shared by the test process and every
+# spawned party worker (WireTransport._spawn_parties sets the same
+# defaults): the Feldman fixed-base exponentiation JIT is a one-time
+# cost per machine instead of per process, which is what keeps the
+# -m net VSS scenarios inside their round timeouts on a cold runner.
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                      os.path.join(tempfile.gettempdir(),
+                                   "repro-jax-cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
 
 
 def pytest_configure(config):

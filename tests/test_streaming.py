@@ -133,11 +133,15 @@ def test_simulation_rejects_unknown_aggregation_kwargs():
 
 
 def test_fedavg_config_rejects_typoed_agg_kwargs():
+    from repro.deprecation import ReproDeprecationWarning
     cfg = FedAvgConfig(n_parties=2, epochs=1, local_steps=1,
                        agg_kwargs={"chunk_elms": 256})
-    with pytest.raises(TypeError, match="did you mean 'chunk_elems'"):
-        run_fedavg(cfg, {"w": jnp.zeros((2,))},
-                   lambda p, b: p, lambda p, e, i: None)
+    # the legacy dict path warns on use (repro.api is the typed front
+    # door) but still rejects typos with the did-you-mean hint
+    with pytest.warns(ReproDeprecationWarning):
+        with pytest.raises(TypeError, match="did you mean 'chunk_elems'"):
+            run_fedavg(cfg, {"w": jnp.zeros((2,))},
+                       lambda p, b: p, lambda p, e, i: None)
     with pytest.raises(ValueError, match="compress_topk"):
         FedAvgConfig(n_parties=2, compress_topk=1.5)
 

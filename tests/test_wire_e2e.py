@@ -174,6 +174,90 @@ def test_run_fedavg_drives_wire_backend_unchanged(net_log_dir):
         [o.alive for o in res_sim.outcomes]
 
 
+def test_wire_cohort_rounds_bit_identical_to_sim(net_log_dir):
+    """Cohort mode differential (DESIGN.md §12): wire and sim sample
+    the same Philox cohort per round, elect the same committee among
+    it, produce bit-identical means, and the wire counters equal the
+    per-cohort closed forms exactly."""
+    from repro.fl.cohort import sample_cohort
+
+    n, c, m, s, rounds = 4, 3, 3, 64, 3
+    flats = np.asarray(_flats(n, s))
+    sim = make_transport("two_phase", n, m=m, seed=1, cohort=c)
+    sim_means, sim_cohorts = [], []
+    for r in range(rounds):
+        sim.elect(r)
+        sim_cohorts.append(sim.cohort_ids)
+        sim_means.append(np.asarray(sim.aggregate(
+            flats[list(sim.cohort_ids)], party_ids=sim.cohort_ids,
+            round_index=r)))
+
+    subrounds = 0
+    with make_transport("two_phase", n, backend="wire", m=m, seed=1,
+                        cohort=c, log_dir=net_log_dir) as wire:
+        for r in range(rounds):
+            wire.elect(r)
+            assert wire.cohort_ids == sim_cohorts[r]
+            assert wire.cohort_ids == sample_cohort(range(n), c, 1, r)
+            got = np.asarray(wire.aggregate(
+                flats[list(wire.cohort_ids)],
+                party_ids=wire.cohort_ids, round_index=r))
+            np.testing.assert_array_equal(got, sim_means[r])
+            subrounds += wire.coordinator.election_rounds
+        p = CostParams(n=n, e=rounds, s=s, m=m, b=B)
+        st1 = wire.net.stats("phase1")
+        assert st1.msg_num == subrounds * 2 * c * (c - 1)
+        assert st1.msg_size == st1.msg_num * B
+        got_num, got_size = _phase2(wire.net)
+        assert got_num == costmodel.phase2_cohort_msg_num(p, c)
+        assert got_size == costmodel.phase2_cohort_msg_size(p, c)
+        # counter-for-counter against the sim transport, per phase
+        for ph in ("phase1", "phase2_upload", "phase2_exchange",
+                   "phase2_broadcast"):
+            assert wire.net.stats(ph) == sim.net.stats(ph), ph
+
+
+def test_wire_pipelined_election_overlaps_and_keeps_outputs(net_log_dir):
+    """Pipelining proof (DESIGN.md §12): Phase I of round r+1 *starts*
+    before Phase II of round r *ends* (coordinator stage_times), and
+    the round outputs are bit-identical to the unpipelined run."""
+    n, c, m, s, rounds = 4, 3, 3, 64, 3
+    flats = np.asarray(_flats(n, s))
+
+    def run(pipeline):
+        means, cohorts = [], []
+        with make_transport("two_phase", n, backend="wire", m=m,
+                            seed=1, cohort=c, pipeline=pipeline,
+                            log_dir=net_log_dir) as wire:
+            for r in range(rounds):
+                wire.elect(r)
+                cohorts.append(wire.cohort_ids)
+                nxt = range(n) if (pipeline and r < rounds - 1) else None
+                means.append(np.asarray(wire.aggregate(
+                    flats[list(wire.cohort_ids)],
+                    party_ids=wire.cohort_ids, round_index=r,
+                    pipeline_next_eligible=nxt)))
+            times = dict(wire.coordinator.stage_times)
+            stats = {ph: wire.net.stats(ph) for ph in
+                     ("phase1", "phase2_upload", "phase2_exchange",
+                      "phase2_broadcast")}
+        return means, cohorts, times, stats
+
+    base_means, base_cohorts, _, base_stats = run(pipeline=False)
+    pipe_means, pipe_cohorts, times, pipe_stats = run(pipeline=True)
+
+    assert pipe_cohorts == base_cohorts
+    for r in range(rounds):
+        np.testing.assert_array_equal(pipe_means[r], base_means[r])
+    assert pipe_stats == base_stats        # same traffic, just earlier
+    for r in range(rounds - 1):
+        t1_start, _ = times[("phase1", r + 1)]
+        _, t2_end = times[("phase2", r)]
+        assert t1_start < t2_end, (
+            f"phase1[{r + 1}] started {t1_start:.6f} but phase2[{r}] "
+            f"ended {t2_end:.6f}: no overlap — pipelining regressed")
+
+
 def test_simulation_facade_wire_backend(net_log_dir):
     """FLSimulation(backend='wire') routes two_phase over sockets and
     keeps the same Network the Eq cross-checks read."""

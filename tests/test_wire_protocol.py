@@ -26,15 +26,16 @@ from repro.net import codec, wire
 GOLDEN_FRAME = Frame(
     msg_type=MsgType.SHARE_UPLOAD, round=7, phase=Phase.PHASE2_UPLOAD,
     scheme=Scheme.ADDITIVE, dtype=Wiredtype.UINT32, src=2, dst=5,
-    chunk_off=128, total_elems=256,
+    session=0x100003, chunk_off=128, total_elems=256,
     payload=np.array([1, 2, 3, 4], dtype="<u4").tobytes())
 
-#: version 1 layout, byte for byte — changing the header format MUST
-#: bump PROTOCOL_VERSION and re-pin this fixture
+#: version 2 layout, byte for byte — changing the header format MUST
+#: bump PROTOCOL_VERSION and re-pin this fixture (v2 added the u32
+#: session id between dst and chunk_off — DESIGN.md §12)
 GOLDEN_BYTES = bytes.fromhex(
-    "0000002c"                # length prefix: 28-byte header + 16 payload
+    "00000030"                # length prefix: 32-byte header + 16 payload
     "3250"                    # magic "2P"
-    "01"                      # protocol version
+    "02"                      # protocol version
     "09"                      # msg_type SHARE_UPLOAD
     "00000007"                # round 7
     "02"                      # phase PHASE2_UPLOAD
@@ -43,6 +44,7 @@ GOLDEN_BYTES = bytes.fromhex(
     "00"                      # flags
     "00000002"                # src party 2
     "00000005"                # dst party 5
+    "00100003"                # session id (generation 1, pid 2)
     "00000080"                # chunk_off 128
     "00000100"                # total_elems 256
     "01000000" "02000000" "03000000" "04000000")   # payload, LE uint32

@@ -131,10 +131,14 @@ def walls(name: str, bench: dict) -> dict[str, float]:
     if name == "cohort_bench":
         out = {}
         for row in bench.get("rows", []):
-            tag = f"n{row['n']}_c{row['cohort']}"
+            # relay discriminates the wire topology rows from the sim
+            # scale row (pre-§13 baselines carry no relay field)
+            tag = (f"n{row['n']}_c{row['cohort']}"
+                   f"_{row.get('relay', 'sim')}")
             for key in ("register_wall_s", "sample_wall_s",
                         "round_wall_s"):
-                out[f"{tag}_{key}"] = row[key]
+                if key in row:
+                    out[f"{tag}_{key}"] = row[key]
         return out
     raise ValueError(f"unknown bench {name!r}")
 
@@ -223,19 +227,30 @@ def compare(name: str, baseline: dict, quick: bool, repeats: int) -> list:
     if name == "cohort_bench":
         # the Eq. 3–6 cross-check and the (seeded, s-independent)
         # message counts are exact-match fields, like the scenario
-        # outcome records
-        fresh_rows = {(r["n"], r["cohort"]): r
+        # outcome records; the wire relay rows additionally gate the
+        # closed-form coordinator byte counts (s-dependent, so only
+        # compared when the baseline and fresh rows ran the same s)
+        fresh_rows = {(r["n"], r["cohort"], r.get("relay", "sim")): r
                       for r in fresh.get("rows", [])}
         for base_r in baseline.get("rows", []):
-            got_r = fresh_rows.get((base_r["n"], base_r["cohort"]))
+            got_r = fresh_rows.get((base_r["n"], base_r["cohort"],
+                                    base_r.get("relay", "sim")))
             if got_r is None:
                 continue
-            for field in ("counters_match", "election_subrounds",
-                          "phase1_msg_num", "phase2_msg_num"):
+            fields = ["counters_match", "election_subrounds",
+                      "phase1_msg_num", "phase2_msg_num", "bytes_match"]
+            if got_r.get("s") == base_r.get("s"):
+                fields += ["coordinator_bytes_in",
+                           "coordinator_bytes_out"]
+            for field in fields:
+                if field not in base_r:
+                    continue
                 if got_r.get(field) != base_r.get(field):
-                    failures.append((name, field, base_r.get(field),
+                    relay = base_r.get("relay", "sim")
+                    failures.append((name, f"{relay}.{field}",
+                                     base_r.get(field),
                                      got_r.get(field), "exact"))
-                    print(f"{name}:{field}: MISMATCH (exact) "
+                    print(f"{name}:{relay}.{field}: MISMATCH (exact) "
                           f"baseline={base_r.get(field)!r} "
                           f"got={got_r.get(field)!r}")
     return failures

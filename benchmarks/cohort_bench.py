@@ -15,6 +15,14 @@ bench is where that claim is priced:
 * ``counters_match``  — exact Eq. 3–6 per-cohort cross-check (gated as
   an exact field by ``bench_compare``, like the scenario outcomes).
 
+Relay-topology rows (DESIGN.md §13): two additional **wire** rows run
+one real multi-process round each under ``relay="hub"`` and
+``relay="tree"`` and price the coordinator link itself —
+``coordinator_bytes_in/out`` must equal
+``costmodel.coordinator_data_bytes`` *exactly* (``bytes_match`` is an
+exact-gated field), putting a committed number on the tree's claim:
+the upload fan-in leaves the coordinator's ingress entirely.
+
 CLI::
 
     PYTHONPATH=src python -m benchmarks.cohort_bench [--quick]
@@ -28,7 +36,7 @@ import time
 
 import numpy as np
 
-__all__ = ["bench_row", "write_bench_json"]
+__all__ = ["bench_row", "wire_relay_row", "write_bench_json"]
 
 
 def bench_row(n: int = 100_000, c: int = 1_000, m: int = 3, b: int = 10,
@@ -103,6 +111,7 @@ def bench_row(n: int = 100_000, c: int = 1_000, m: int = 3, b: int = 10,
 
     return {
         "n": n, "cohort": c, "m": m, "b": b, "s": s, "seed": seed,
+        "relay": "sim",
         "election_subrounds": subrounds,
         "register_wall_s": round(register_wall, 4),
         "eligible_wall_s": round(eligible_wall, 4),
@@ -115,17 +124,56 @@ def bench_row(n: int = 100_000, c: int = 1_000, m: int = 3, b: int = 10,
     }
 
 
+def wire_relay_row(relay: str, n: int = 4, m: int = 3, b: int = 10,
+                   s: int = 256, seed: int = 1) -> dict:
+    """One real multi-process wire round under ``relay``, with the
+    coordinator's measured ingress/egress asserted against the
+    per-link closed forms (``costmodel.coordinator_data_bytes``)
+    exactly — a mismatched byte is an AssertionError, not a row."""
+    from repro.core.costmodel import CostParams, coordinator_data_bytes
+    from repro.net import WireTransport
+
+    rng = np.random.RandomState(seed)
+    flats = rng.randn(n, s).astype(np.float32)
+    with WireTransport(n, m=m, b=b, seed=seed, relay=relay) as tr:
+        tr.elect(0)
+        t0 = time.perf_counter()
+        mean = np.asarray(tr.aggregate(flats, round_index=0))
+        round_wall = time.perf_counter() - t0
+        np.testing.assert_allclose(mean, flats.mean(0), atol=2e-4)
+        co = tr.coordinator
+        got = (co.data_bytes_in, co.data_bytes_out)
+        p = CostParams(n=n, e=1, s=s, m=m, b=b)
+        want = coordinator_data_bytes(p, relay=relay,
+                                      chunk_elems=tr.cfg.chunk_elems)
+    if got != want:
+        raise AssertionError(
+            f"relay={relay!r}: coordinator (bytes_in, bytes_out) "
+            f"{got} diverged from the closed form {want}")
+    return {
+        "n": n, "cohort": None, "m": m, "b": b, "s": s, "seed": seed,
+        "relay": relay,
+        "round_wall_s": round(round_wall, 4),
+        "coordinator_bytes_in": got[0],
+        "coordinator_bytes_out": got[1],
+        "bytes_match": True,
+    }
+
+
 def write_bench_json(path: str | None = "BENCH_cohort.json",
                      quick: bool = False) -> dict:
     from benchmarks.calib import calib_wall_s
     # quick trims the model size, never the 100k/1k row itself — the
     # registry/cohort scale IS the claim under test
-    row = bench_row(s=64 if quick else 256)
+    s_wire = 64 if quick else 256
+    rows = [bench_row(s=64 if quick else 256),
+            wire_relay_row("hub", s=s_wire),
+            wire_relay_row("tree", s=s_wire)]
     out = {
         "generated_by": "benchmarks/cohort_bench.py",
         "schema_version": 1,
         "calib_wall_s": round(calib_wall_s(), 4),
-        "rows": [row],
+        "rows": rows,
     }
     if path:
         with open(path, "w") as f:
@@ -141,7 +189,8 @@ def main() -> None:
                     help="smaller model dim (same 100k/1k scale)")
     args = ap.parse_args()
     out = write_bench_json(args.out, quick=args.quick)
-    print(json.dumps(out["rows"][0], indent=2))
+    for row in out["rows"]:
+        print(json.dumps(row, indent=2))
     print(f"wrote {args.out}")
 
 

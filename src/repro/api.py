@@ -98,6 +98,11 @@ class ExperimentSpec:
     cohort: int | None = None
     pipeline: bool = False
     lease_s: float | None = 30.0
+    #: wire relay topology (DESIGN.md §13): "hub" routes every logical
+    #: message through the coordinator; "tree" fans party→member upload
+    #: traffic out through per-round home committee members (sim runs
+    #: ignore it — the counters are topology-independent)
+    relay: str = "hub"
     # -- backend ----------------------------------------------------------
     backend: str = "sim"           # sim | wire
     kernel_backend: str | None = None
@@ -122,6 +127,14 @@ class ExperimentSpec:
             raise ValueError("pipeline=True needs cohort mode (only "
                              "per-round cohort elections can overlap "
                              "the previous round's Phase II)")
+        if self.relay not in ("hub", "tree"):
+            raise ValueError(f"relay={self.relay!r} must be 'hub' or "
+                             "'tree'")
+        if self.relay == "tree" and self.norm_bound is not None:
+            raise ValueError(
+                "norm_bound needs relay='hub': the per-dealer audit "
+                "rows live only on each party's home member under the "
+                "tree relay (see WireConfig)")
         if (self.frac_bits is None) != (self.clip is None):
             raise ValueError("frac_bits and clip come as a pair (both "
                              "set = custom codec, both None = the "
@@ -150,7 +163,7 @@ class ExperimentSpec:
         if self.backend != "wire":
             return self.wire_kwargs
         return {"pipeline": self.pipeline, "lease_s": self.lease_s,
-                **(self.wire_kwargs or {})}
+                "relay": self.relay, **(self.wire_kwargs or {})}
 
     def fedavg_config(self):
         """The ``fl.rounds.FedAvgConfig`` this spec describes
@@ -197,7 +210,8 @@ class ExperimentSpec:
             chunk_elems=self.chunk_elems, vss=self.vss,
             reelect_each_round=self.reelect_each_round,
             norm_bound=self.norm_bound, cohort=self.cohort,
-            pipeline=self.pipeline, lease_s=self.lease_s)
+            pipeline=self.pipeline, lease_s=self.lease_s,
+            relay=self.relay)
 
     def wire_transport_kwargs(self) -> dict:
         """Constructor kwargs for ``repro.net.WireTransport`` (used by
@@ -210,7 +224,7 @@ class ExperimentSpec:
             reelect_each_round=self.reelect_each_round,
             norm_bound=self.norm_bound, cohort=self.cohort,
             pipeline=self.pipeline, lease_s=self.lease_s,
-            dealer_tamper=self.dealer_tamper,
+            relay=self.relay, dealer_tamper=self.dealer_tamper,
             **(self.wire_kwargs or {}))
 
     def scenario_config(self):

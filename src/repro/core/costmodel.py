@@ -308,6 +308,103 @@ def summary_cohort(p: CostParams, c: int) -> dict:
     }
 
 
+# -- Per-link coordinator byte forms (wire topologies; DESIGN.md §13) --------
+#
+# Eqs. 1-8 count *logical* messages and are topology-independent: the
+# committee-sharded relay tree moves traffic between links without
+# changing a single counter.  What the topology *does* change is which
+# frames cross the coordinator's own sockets.  These forms price that,
+# in real bytes, for one honest round with every party live and
+# included (and, under the tree, every member's region non-empty —
+# ``fl.cohort.assign_home`` decides that; the bench asserts it).  A
+# frame is ``FRAME_OVERHEAD_BYTES`` of envelope (4-byte length prefix +
+# 32-byte v2 header) plus 4 bytes per element (uint32 shares and
+# float32 means alike), and a logical message of ``E`` elements ships
+# in ``ceil(E / chunk_elems)`` frames.  Only frames carrying a counted
+# data phase (``Phase.COUNTER_NAMES``) are priced — JSON control
+# chatter is serialization-dependent and deliberately outside — which
+# is exactly what ``Coordinator.data_bytes_in/out`` measure, so the
+# cross-check is equality, not approximation.
+#
+# Per-round data legs crossing the coordinator (c uploaders, committee
+# m, model s, votes b, ``subrounds`` election subrounds):
+#
+#   ingress, hub : votes 2·c·(c−1)·subrounds × b │ uploads c·m × s
+#                  │ exchange (m−1) × s │ result 1 × s
+#   ingress, tree: votes (same) │ region sums m·(m−1) × s
+#                  │ exchange (m−1) × s │ result 1 × s
+#   egress,  hub : votes (same) │ input c × s │ uploads c·m × s
+#                  │ exchange (m−1) × s │ broadcast n × s
+#   egress,  tree: votes (same) │ input c × s │ region sums m·(m−1) × s
+#                  │ exchange (m−1) × s │ broadcast n × s
+#
+# Under VSS the hub adds commitment relays (c·m × (deg+1)·2·s, in and
+# out) and the tree adds regional aggregate commitments ((m−1) ×
+# (deg+1)·2·s, in and out).  The headline: tree coordinator ingress for
+# Phase II drops from O(c·m·s) to O(m²·s) — *independent of c* (the
+# uploads never touch the hub), at the price of O(m·s) extra bandwidth
+# at each home member.
+
+FRAME_OVERHEAD_BYTES = 36    # 4-byte length prefix + 32-byte header
+ELEM_BYTES = 4               # uint32 and float32 elements alike
+
+
+def message_frames(elems: int, chunk_elems: int) -> int:
+    """Frames one logical message of ``elems`` elements ships in."""
+    if elems < 1:
+        raise ValueError(f"elems={elems}: zero-element messages are "
+                         "protocol violations on the wire")
+    return -(-elems // chunk_elems)
+
+
+def message_wire_bytes(elems: int, chunk_elems: int) -> int:
+    """Exact bytes of one chunked logical message on the wire."""
+    return (elems * ELEM_BYTES
+            + message_frames(elems, chunk_elems) * FRAME_OVERHEAD_BYTES)
+
+
+def coordinator_round_legs(p: CostParams, *, c: int | None = None,
+                           relay: str = "hub", subrounds: int = 1,
+                           vss: bool = False,
+                           degree: int | None = None) -> dict:
+    """``{"in": [(msg_num, elems), ...], "out": [...]}`` — the data
+    legs crossing the coordinator in one honest round (see the block
+    comment for the leg inventory and its preconditions)."""
+    if relay not in ("hub", "tree"):
+        raise ValueError(f"relay={relay!r} must be 'hub' or 'tree'")
+    c = p.n if c is None else int(c)
+    votes = (subrounds * 2 * c * (c - 1), p.b)
+    if relay == "hub":
+        fan_in = [(c * p.m, p.s)]
+        if vss:
+            fan_in.append((c * p.m, vss_commit_elems(p, degree)))
+    else:
+        fan_in = [(p.m * (p.m - 1), p.s)]
+        if vss:
+            fan_in.append((p.m - 1, vss_commit_elems(p, degree)))
+    exchange = (p.m - 1, p.s)
+    legs_in = [votes, *fan_in, exchange, (1, p.s)]          # + RESULT
+    legs_out = [votes, (c, p.s), *fan_in, exchange,         # + INPUT
+                (p.n, p.s)]                                 # + broadcast
+    return {"in": legs_in, "out": legs_out}
+
+
+def coordinator_data_bytes(p: CostParams, *, c: int | None = None,
+                           relay: str = "hub", subrounds: int = 1,
+                           chunk_elems: int, vss: bool = False,
+                           degree: int | None = None) -> tuple[int, int]:
+    """Exact ``(data_bytes_in, data_bytes_out)`` at the coordinator for
+    one honest round — equal (not approximate) to what
+    ``Coordinator.data_bytes_in/out`` measure under the same config."""
+    legs = coordinator_round_legs(p, c=c, relay=relay,
+                                  subrounds=subrounds, vss=vss,
+                                  degree=degree)
+    return tuple(
+        sum(num * message_wire_bytes(elems, chunk_elems)
+            for num, elems in legs[key])
+        for key in ("in", "out"))
+
+
 def summary(p: CostParams) -> dict:
     return {
         "n": p.n, "m": p.m, "e": p.e, "s": p.s, "b": p.b,

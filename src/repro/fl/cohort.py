@@ -26,8 +26,9 @@ import numpy as np
 
 from repro.core import philox
 
-__all__ = ["CohortConfig", "CohortExhaustedError", "sample_cohort",
-           "COHORT_STREAM", "COHORT_COUNTER_HI"]
+__all__ = ["CohortConfig", "CohortExhaustedError", "assign_home",
+           "sample_cohort", "COHORT_STREAM", "COHORT_COUNTER_HI",
+           "HOME_STREAM", "HOME_COUNTER_HI"]
 
 #: Philox stream id of the cohort schedule — disjoint by key derivation
 #: from the election streams ``(r << 20) | id`` (different ``stream``
@@ -35,6 +36,12 @@ __all__ = ["CohortConfig", "CohortExhaustedError", "sample_cohort",
 COHORT_STREAM = 0xC0_4057
 #: counter_hi tag; the per-round offset rides on top of it.
 COHORT_COUNTER_HI = 0x11_0000
+#: Philox stream id of the home-member assignment (tree relay,
+#: DESIGN.md §13) — its own ``derive_key`` stream, disjoint from the
+#: cohort, election, and commitment streams.
+HOME_STREAM = 0x40_73EE
+#: counter_hi tag of the home-member draw; per-round offset on top.
+HOME_COUNTER_HI = 0x12_0000
 
 
 class CohortExhaustedError(RuntimeError):
@@ -87,3 +94,31 @@ def sample_cohort(eligible_ids, size: int, seed: int,
         counter_hi=COHORT_COUNTER_HI + round_index))
     ranked = sorted(ids, key=lambda i: (int(bits[i]), i))
     return tuple(sorted(ranked[:size]))
+
+
+def assign_home(party_ids, committee, seed: int,
+                round_index: int) -> dict[int, int]:
+    """Assign each party a *home* committee member for the tree relay.
+
+    Like :func:`sample_cohort`, the draw is keyed per party id, not per
+    position: party ``i``'s home for round ``r`` is
+    ``sorted(committee)[bits[i] % m]`` with ``bits`` drawn from the
+    ``HOME_STREAM`` Philox stream at ``counter_hi = HOME_COUNTER_HI +
+    r`` — so churn in the rest of the cohort never moves a surviving
+    party's home, and coordinator and members recompute the same map
+    independently.  Members may be their own home (they fold their own
+    upload locally, no extra socket).
+    """
+    ids = sorted({int(i) for i in party_ids})
+    members = sorted({int(w) for w in committee})
+    if not members:
+        raise ValueError("assign_home needs a non-empty committee")
+    if not ids:
+        return {}
+    if any(i < 0 for i in ids):
+        raise ValueError(f"negative party id in cohort: {ids[0]}")
+    k0, k1 = philox.derive_key(seed, HOME_STREAM)
+    bits = np.asarray(philox.random_bits(
+        ids[-1] + 1, k0, k1,
+        counter_hi=HOME_COUNTER_HI + round_index))
+    return {i: members[int(bits[i]) % len(members)] for i in ids}

@@ -120,6 +120,32 @@ class Network:
         """
         self.phases.setdefault(phase, PhaseStats()).add_batch(count, n_elems)
 
+    def absorb(self, msg_num: int, msg_size: int, phase: str):
+        """Fold a remote meter digest into the counters.
+
+        Tree-relay reconciliation (DESIGN.md §13): a home committee
+        member meters its own region's logical upload messages and
+        ships ``{phase: [msg_num, msg_size]}``; the coordinator replays
+        the digest here.  Unlike ``send_batch``, ``msg_size`` is the
+        *total* element count across the digest's messages (the
+        messages need not be equal-sized), so the fold preserves both
+        counters exactly.
+        """
+        if msg_num < 0 or msg_size < 0:
+            raise ValueError(
+                f"meter digest must be non-negative, got "
+                f"({msg_num}, {msg_size})")
+        if (msg_num == 0) != (msg_size == 0):
+            raise ValueError(
+                f"inconsistent meter digest ({msg_num} messages, "
+                f"{msg_size} elements): zero-size messages are never "
+                "counted, so both are zero or neither is")
+        if msg_num == 0:
+            return
+        st = self.phases.setdefault(phase, PhaseStats())
+        st.msg_num += msg_num
+        st.msg_size += msg_size
+
     def stats(self, phase: str | None = None) -> PhaseStats:
         if phase is not None:
             return self.phases.get(phase, PhaseStats())

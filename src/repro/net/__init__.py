@@ -10,7 +10,9 @@ accounting (``messages``), injectable-clock dropout detection
 """
 
 from .config import WireConfig
+from .coordinator import RelayDropped
 from .messages import MessageAssembler, MessageMeter
+from .region import RegionIngest
 from .registry import PartyLease, PartyRegistry
 from .timeouts import ManualClock, StageMonitor, SystemClock
 from .transport import WireTransport
@@ -24,7 +26,8 @@ __all__ = [
     "BadMagicError", "Frame", "FrameReader", "ManualClock",
     "MessageAssembler", "MessageMeter", "MsgType", "OversizedFrameError",
     "PartyFailedError", "PartyLease", "PartyRegistry", "Phase",
-    "ProtocolError", "Scheme", "StageMonitor", "StaleSessionError",
-    "SystemClock", "TruncatedFrameError", "VersionError", "WireConfig",
-    "WireError", "WireTimeoutError", "WireTransport", "Wiredtype",
+    "ProtocolError", "RegionIngest", "RelayDropped", "Scheme",
+    "StageMonitor", "StaleSessionError", "SystemClock",
+    "TruncatedFrameError", "VersionError", "WireConfig", "WireError",
+    "WireTimeoutError", "WireTransport", "Wiredtype",
 ]

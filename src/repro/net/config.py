@@ -66,6 +66,14 @@ class WireConfig:
     #: registration-lease duration; a party whose lease lapses must
     #: re-register (None = leases never expire)
     lease_s: float | None = 30.0
+    #: party->member traffic topology (DESIGN.md §13): ``"hub"`` relays
+    #: every SHARE_UPLOAD/COMMITMENT frame through the coordinator
+    #: socket; ``"tree"`` assigns each party a Philox-keyed home
+    #: committee member (``fl.cohort.assign_home``), parties stream
+    #: uploads straight to their home member's region listener, and
+    #: members forward only regional partial sums — coordinator ingress
+    #: drops from O(c·m·s) to O(m²·s), independent of the cohort size
+    relay: str = "hub"
 
     def __post_init__(self):
         _check_chunk_elems(self.chunk_elems)
@@ -101,6 +109,14 @@ class WireConfig:
         if self.lease_s is not None and not self.lease_s > 0:
             raise ValueError(
                 f"lease_s={self.lease_s} must be positive (or None)")
+        if self.relay not in ("hub", "tree"):
+            raise ValueError(
+                f"relay={self.relay!r} must be 'hub' or 'tree'")
+        if self.relay == "tree" and self.norm_bound is not None:
+            raise ValueError(
+                "norm_bound needs relay='hub': the per-dealer audit rows "
+                "live only on each party's home member in tree mode, so "
+                "non-final members cannot forward other regions' rows")
 
     def fp(self) -> FixedPointConfig:
         return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
@@ -151,7 +167,8 @@ class WireConfig:
                                 norm_bound: float | None = None,
                                 cohort: int | None = None,
                                 pipeline: bool = False,
-                                lease_s: float | None = 30.0
+                                lease_s: float | None = 30.0,
+                                relay: str = "hub"
                                 ) -> "WireConfig":
         """Build from the simulation transports' kwarg vocabulary."""
         if fp is None:
@@ -167,4 +184,4 @@ class WireConfig:
                    deadline_s=deadline_s, vss=vss,
                    reelect_each_round=reelect_each_round,
                    norm_bound=norm_bound, cohort=cohort,
-                   pipeline=pipeline, lease_s=lease_s)
+                   pipeline=pipeline, lease_s=lease_s, relay=relay)

@@ -32,13 +32,14 @@ every relayed share of an included party before its COMMIT arrives.
 from __future__ import annotations
 
 import asyncio
+import collections
 import contextlib
 import dataclasses
 
 import numpy as np
 
 from repro.core import committee as committee_mod
-from repro.fl.cohort import sample_cohort
+from repro.fl.cohort import assign_home, sample_cohort
 from repro.fl.faults import resolve_outcome
 from repro.fl.transport import Network
 
@@ -51,23 +52,47 @@ from .wire import (HEADER_SIZE, Frame, MsgType, PartyFailedError, Phase,
                    ProtocolError, Scheme, StaleSessionError, WireError,
                    WireTimeoutError, Wiredtype, read_frame, write_frame)
 
-__all__ = ["Coordinator"]
+__all__ = ["Coordinator", "RelayDropped"]
 
 #: poll granularity of deadline checks (real-clock runs); manual-clock
 #: state-machine tests never sleep — they drive StageMonitor directly
 _POLL_S = 0.05
 
+#: METER digests may only reconcile the legs that actually travel the
+#: tree (region uploads + commitments) — a member claiming to have
+#: metered, say, phase1 traffic is lying about legs the coordinator
+#: witnesses itself
+_DIGEST_PHASES = frozenset({"phase2_upload", "phase2_commit"})
+
+
+@dataclasses.dataclass(frozen=True)
+class RelayDropped:
+    """One undeliverable relayed logical stream: the destination's
+    connection was dead or absent when a frame for it arrived.  Keyed
+    per ``(src, dst, msg_type, round)`` in ``Coordinator.relay_dropped``
+    (a Counter of frames), so tests and operators see exactly which leg
+    went dark instead of a silent ``return``."""
+
+    src: int
+    dst: int
+    msg_type: int
+    round: int
+
 
 class _Conn:
     """One connected party."""
 
-    def __init__(self, pid: int, reader, writer):
+    def __init__(self, pid: int, reader, writer, addr=None):
         self.pid = pid
         self.reader = reader
         self.writer = writer
         self.lock = asyncio.Lock()
         self.alive = True
         self.task: asyncio.Task | None = None
+        #: the party's advertised region-listener ``(host, port)`` —
+        #: carried in the HELLO payload; home members must have one
+        #: before a tree-relay round can start
+        self.addr: tuple[str, int] | None = addr
 
 
 class Coordinator:
@@ -111,6 +136,21 @@ class Coordinator:
         self._verifier: int | None = None
         self.raw_bytes_in = 0
         self.raw_bytes_out = 0
+        #: subset of raw bytes whose frames carry a counted data phase
+        #: (``Phase.COUNTER_NAMES``) — the per-link closed forms in
+        #: ``core.costmodel`` price exactly these, excluding JSON
+        #: control chatter whose size is serialization-dependent
+        self.data_bytes_in = 0
+        self.data_bytes_out = 0
+        #: undeliverable relayed streams (typed; satellite of the
+        #: silent-drop fix): ``RelayDropped -> frame count``
+        self.relay_dropped: collections.Counter = collections.Counter()
+        #: tree relay (DESIGN.md §13): this round's home-member map,
+        #: the parties whose uploads died with their home member, and
+        #: the members whose METER digests have been reconciled
+        self._round_home: dict[int, int] = {}
+        self._region_lost: set[int] = set()
+        self._round_digests: set[int] = set()
         self._server: asyncio.Server | None = None
         self._conns: dict[int, _Conn] = {}
         self._event = asyncio.Event()
@@ -208,7 +248,17 @@ class Coordinator:
         else:
             session = self.registry.register(pid, now)
             verb = "registered"
-        conn = _Conn(pid, reader, writer)
+        # party workers advertise their region-listener address in the
+        # HELLO payload (tree relay); raw-socket parties and older
+        # peers send an empty payload and simply cannot serve as home
+        # members — the tree round start checks, not the handshake
+        addr = None
+        if hello.payload:
+            with contextlib.suppress(Exception):
+                advertised = codec.decode_json(hello.payload).get("addr")
+                if advertised:
+                    addr = (str(advertised[0]), int(advertised[1]))
+        conn = _Conn(pid, reader, writer, addr=addr)
         self._conns[pid] = conn
         await write_frame(writer, Frame(
             MsgType.WELCOME, dst=pid, session=session,
@@ -225,7 +275,10 @@ class Coordinator:
                 frame = await read_frame(conn.reader)
                 if frame is None:
                     break
-                self.raw_bytes_in += 4 + HEADER_SIZE + len(frame.payload)
+                nbytes = 4 + HEADER_SIZE + len(frame.payload)
+                self.raw_bytes_in += nbytes
+                if frame.phase in Phase.COUNTER_NAMES:
+                    self.data_bytes_in += nbytes
                 await self._on_frame(conn, frame)
         except (WireError, ConnectionError, asyncio.IncompleteReadError,
                 OSError) as e:
@@ -242,10 +295,55 @@ class Coordinator:
         conn.alive = False
         if self._conns.get(conn.pid) is conn:
             self._round_dropped.add(conn.pid)
+            defer = self._defer_upload_verdict(conn.pid)
             for mon in self._monitors:
+                if defer and mon is self._upload_mon:
+                    continue
                 mon.eof(conn.pid)
             self.log(f"party {conn.pid} disconnected (EOF)")
+            self._lose_region(conn.pid)
         self._pulse()
+
+    def _defer_upload_verdict(self, pid: int) -> bool:
+        """Tree relay: a participant's coordinator-socket EOF proves
+        nothing about its upload — those frames went to its home
+        member.  When the home member is alive and the verdict is still
+        open, leave the upload stage pending: the home member settles it
+        deterministically with UPLOAD_DONE (complete — the frames beat
+        the FIN on the region socket's FIFO) or UPLOAD_DONE{done:false}
+        (its region stream died incomplete).  A party that died before
+        ever reaching its home member settles via the stage deadline —
+        the one case tree EOF handling is weaker than the hub's."""
+        if self.cfg.relay != "tree" or not self._round_home:
+            return False
+        home = self._round_home.get(pid)
+        if home is None or pid in self._region_lost:
+            return False
+        if self._upload_done.get(pid, 0) == self.cfg.m:
+            return False     # verdict already in; eof would be a no-op
+        conn = self._conns.get(home)
+        return conn is not None and conn.alive
+
+    def _lose_region(self, member: int) -> None:
+        """Tree relay: a dead home member takes its region's uploads
+        with it.  The lost parties fold into the *upload* monitor as
+        deterministic dropouts — fail-fast, no deadline wait — and are
+        excluded from the included set, degrading the round to the
+        sub-threshold reconstruction path over the surviving regions.
+        (Only the upload stage is affected: a still-alive party homed
+        at the dead member keeps its committee/broadcast roles.)"""
+        if not self._round_home:
+            return
+        lost = {p for p, h in self._round_home.items()
+                if h == member and p not in self._region_lost}
+        if not lost:
+            return
+        self._region_lost |= lost
+        self.log(f"home member {member} lost; region {sorted(lost)} "
+                 "uploads die with it (sub-threshold degradation)")
+        if self._upload_mon is not None:
+            for p in lost:
+                self._upload_mon.eof(p)
 
     async def _on_frame(self, conn: _Conn, frame: Frame) -> None:
         if frame.src != conn.pid:
@@ -291,6 +389,10 @@ class Coordinator:
             meter.feed(frame)
             if done is not None:
                 self._result_mean = done
+        elif frame.msg_type == MsgType.UPLOAD_DONE:
+            self._on_upload_done(conn, frame)
+        elif frame.msg_type == MsgType.METER:
+            self._on_meter(conn, frame)
         elif frame.msg_type == MsgType.BLAME:
             self._on_blame(conn.pid, frame)
         elif frame.msg_type == MsgType.ERROR:
@@ -376,6 +478,77 @@ class Coordinator:
                 "share verification failed before the member sum")
             self.log(self._party_error)
 
+    def _on_upload_done(self, conn: _Conn, frame: Frame) -> None:
+        """A home member holds one region party's complete upload.
+
+        Tree twin of the hub meter's SHARE_UPLOAD completion: the
+        coordinator includes a party only after its home member's
+        UPLOAD_DONE, and the member sends it only after holding the
+        full upload — so (TCP FIFO on the member's socket) a COMMIT
+        naming the party is causally after the member can fold it, the
+        tree-mode form of the hub's relay-before-meter invariant."""
+        if self.cfg.relay != "tree":
+            raise ProtocolError(
+                f"UPLOAD_DONE from party {conn.pid} outside tree relay "
+                "mode")
+        info = codec.decode_json(frame.payload)
+        try:
+            pid = int(info.get("party"))
+        except (TypeError, ValueError) as e:
+            raise ProtocolError(
+                f"malformed UPLOAD_DONE from member {conn.pid}: {e}")
+        if self._round_home.get(pid) != conn.pid:
+            raise ProtocolError(
+                f"member {conn.pid} reported UPLOAD_DONE for party "
+                f"{pid}, whose home member is "
+                f"{self._round_home.get(pid)}")
+        if not info.get("done", True):
+            # the party's region stream died with its upload incomplete
+            # — a deterministic upload-stage dropout reported by the
+            # only node that can know (the hub learns the same thing
+            # from the party's own EOF)
+            self.log(f"member {conn.pid}: party {pid} upload died "
+                     "incomplete on the region socket")
+            if (self._upload_mon is not None
+                    and pid not in self._region_lost):
+                self._upload_mon.eof(pid)
+            return
+        self._upload_done[pid] = self.cfg.m
+        if (self._upload_mon is not None
+                and pid not in self._region_lost):
+            self._upload_mon.completed(pid)
+
+    def _on_meter(self, conn: _Conn, frame: Frame) -> None:
+        """Reconcile a home member's region counter digest into the
+        shared ``Network`` — the metering half of the tree relay: the
+        region's logical messages never crossed the coordinator socket,
+        but their Eq. 3–6 accounting must land on the same counters the
+        sim asserts against."""
+        if self.cfg.relay != "tree":
+            raise ProtocolError(
+                f"METER from party {conn.pid} outside tree relay mode")
+        if conn.pid not in set(self.committee or ()):
+            raise ProtocolError(
+                f"METER digest from non-member party {conn.pid}")
+        counters = codec.decode_json(frame.payload).get("counters")
+        if not isinstance(counters, dict):
+            raise ProtocolError(
+                f"malformed METER payload from member {conn.pid}")
+        for phase_name, entry in counters.items():
+            if phase_name not in _DIGEST_PHASES:
+                raise ProtocolError(
+                    f"member {conn.pid} digest meters phase "
+                    f"{phase_name!r}; only {sorted(_DIGEST_PHASES)} "
+                    "travel the tree")
+            try:
+                msg_num, msg_size = (int(entry[0]), int(entry[1]))
+                self.net.absorb(msg_num, msg_size, phase_name)
+            except (TypeError, ValueError, IndexError) as e:
+                raise ProtocolError(
+                    f"bad METER digest entry {phase_name}={entry!r} "
+                    f"from member {conn.pid}: {e}")
+        self._round_digests.add(conn.pid)
+
     def _note_completion(self, frame: Frame) -> None:
         if frame.msg_type == MsgType.SHARE_UPLOAD:
             done = self._upload_done.get(frame.src, 0) + 1
@@ -390,10 +563,26 @@ class Coordinator:
     async def _relay(self, frame: Frame) -> None:
         dst = self._conns.get(frame.dst)
         if dst is None or not dst.alive:
-            return  # logical message still counted; delivery impossible
+            # delivery impossible: the logical message stays metered
+            # (the paper's Eqs. 3–6 count attempted sends) but the drop
+            # is recorded under a typed counter and the destination is
+            # folded into every active stage monitor NOW — peers
+            # waiting on the destination's reply see a deterministic
+            # dropout instead of blocking until the stage deadline
+            self.relay_dropped[RelayDropped(
+                frame.src, frame.dst, frame.msg_type, frame.round)] += 1
+            self.log(f"relay dropped: {frame.type_name()} "
+                     f"{frame.src}->{frame.dst} (round {frame.round}): "
+                     "destination dead or never connected")
+            for mon in self._monitors:
+                mon.eof(frame.dst)
+            self._pulse()
+            return
         try:
-            self.raw_bytes_out += await write_frame(dst.writer, frame,
-                                                    dst.lock)
+            nbytes = await write_frame(dst.writer, frame, dst.lock)
+            self.raw_bytes_out += nbytes
+            if frame.phase in Phase.COUNTER_NAMES:
+                self.data_bytes_out += nbytes
         except (ConnectionError, OSError):
             self._mark_dead(dst)
 
@@ -408,8 +597,10 @@ class Coordinator:
             if session is not None:
                 frame = dataclasses.replace(frame, session=session)
         try:
-            self.raw_bytes_out += await write_frame(conn.writer, frame,
-                                                    conn.lock)
+            nbytes = await write_frame(conn.writer, frame, conn.lock)
+            self.raw_bytes_out += nbytes
+            if frame.phase in Phase.COUNTER_NAMES:
+                self.data_bytes_out += nbytes
         except (ConnectionError, OSError):
             self._mark_dead(conn)
 
@@ -698,6 +889,9 @@ class Coordinator:
         self._verifier = None
         self._ready = set()
         self._upload_done = {}
+        self._round_home = {}
+        self._region_lost = set()
+        self._round_digests = set()
         self._result_mean = None
         self._meters.setdefault(
             round_index, MessageMeter(self.net, round_index=round_index))
@@ -721,11 +915,45 @@ class Coordinator:
         member_mon = self._new_monitor(self._live(self.committee))
         round_monitors += [upload_mon, member_mon]
 
+        tree_body = {}
+        if cfg.relay == "tree":
+            # the home map is the same deterministic Philox draw every
+            # party worker recomputes from the ROUND_START body — sent
+            # explicitly so members need no trust in their own math to
+            # agree with the coordinator's UPLOAD_DONE validation
+            self._round_home = assign_home(ids, self.committee,
+                                           cfg.seed, round_index)
+            addrs = {}
+            for w in dict.fromkeys(self.committee):
+                conn = self._conns.get(w)
+                if conn is not None and conn.alive:
+                    if conn.addr is None:
+                        raise WireError(
+                            f"relay='tree' needs member {w}'s region "
+                            "listener address, but its HELLO advertised "
+                            "none (raw-socket peers cannot serve as "
+                            "home members)")
+                    addrs[str(w)] = list(conn.addr)
+                else:
+                    # a member dead before round start takes its region
+                    # down before any upload is attempted
+                    self._lose_region(w)
+            tree_body = {
+                "home": {str(p): h
+                         for p, h in self._round_home.items()},
+                "addrs": addrs,
+                # region listeners authenticate upload frames against
+                # the parties' current leases (RegionIngest roster)
+                "sessions": {str(p): self.registry.session_of(p)
+                             for p in participants
+                             if self.registry.session_of(p) is not None},
+            }
+
         # 1) ROUND_START to every connected party (members must take
         #    part even when the driver excluded them as data parties)
         start_body = codec.encode_json({
             "party_ids": ids, "committee": list(self.committee),
-            "d": d, "round": round_index})
+            "d": d, "round": round_index, **tree_body})
         for pid in self._live(range(cfg.n)):
             await self._send(pid, Frame(
                 MsgType.ROUND_START, round=round_index, dst=pid,
@@ -768,9 +996,12 @@ class Coordinator:
                          monitor=member_mon)
         upload_mon.require_any_progress()
 
-        # 4) fault resolution through the simulation's quorum brain
+        # 4) fault resolution through the simulation's quorum brain;
+        #    a dead home member's region is data-dropped with it even
+        #    where an UPLOAD_DONE had already landed — the member died
+        #    holding the only copy of those uploads
         dropped = (self._round_dropped | upload_mon.dropped
-                   | member_mon.dropped) & members
+                   | member_mon.dropped | self._region_lost) & members
         straggled = (upload_mon.straggled | member_mon.straggled) & members
         # a party flagged late whose upload nevertheless completed
         # before COMMIT is aggregated (the committee sums exactly the
@@ -797,7 +1028,8 @@ class Coordinator:
         # member-BLAME reports are accepted (see _on_blame)
         self._verifier = live_members[-1]
         included = sorted((pid for pid in participants
-                           if self._upload_done.get(pid, 0) == cfg.m),
+                           if self._upload_done.get(pid, 0) == cfg.m
+                           and pid not in self._region_lost),
                           key=row.get)
         if not included:
             raise WireTimeoutError("no party completed its upload")
@@ -823,6 +1055,17 @@ class Coordinator:
                 f"{sorted(chain_mon.dropped)} straggled="
                 f"{sorted(chain_mon.straggled)}")
         mean = self._result_mean
+        if cfg.relay == "tree":
+            # every live member's METER digest precedes its region sums
+            # and chain traffic on its own FIFO socket, and RESULT
+            # causally depends on all of those — so by the time the
+            # mean assembled, reconciliation must be complete
+            missing = set(live_members) - self._round_digests
+            if missing:
+                raise ProtocolError(
+                    f"tree metering reconciliation incomplete: live "
+                    f"members {sorted(missing)} never shipped a METER "
+                    "digest before the RESULT assembled")
 
         if self._round_blamed or self._round_blamed_dealers:
             # the verifier's BLAME landed before its RESULT (same

@@ -50,6 +50,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import collections
+import contextlib
 import dataclasses
 import os
 import sys
@@ -71,14 +72,27 @@ from repro.fl.faults import (DEALER_TAMPER_MODES, POISON_SCALE,
 from . import codec
 from .config import WireConfig
 from .messages import MessageAssembler
+from .region import RegionIngest
 from .wire import (Frame, MsgType, Phase, ProtocolError, Scheme,
-                   TruncatedFrameError, Wiredtype, read_frame, write_frame)
+                   StaleSessionError, TruncatedFrameError, WireError,
+                   Wiredtype, read_frame, write_frame)
 
 __all__ = ["PartyWorker", "main"]
 
 
 class _Shutdown(Exception):
     """Coordinator asked us to exit (clean)."""
+
+
+class _RegionDead(Exception):
+    """The party's home member became unreachable mid-upload (tree
+    relay).  Not fatal to the party: it abandons the round's upload —
+    the coordinator degrades the whole region to the sub-threshold
+    path — and keeps awaiting the broadcast."""
+
+    def __init__(self, member: int):
+        super().__init__(f"home member {member} unreachable")
+        self.member = member
 
 
 
@@ -120,6 +134,14 @@ class PartyWorker:
         self._tally: np.ndarray | None = None
         self._prev_acc: np.ndarray | None = None
         self.last_mean: np.ndarray | None = None
+        #: tree relay (DESIGN.md §13): the always-on region listener
+        #: (its address is advertised in HELLO so this party can serve
+        #: as a home member), the queue its accept handler feeds, and
+        #: the cached outbound connections to other members' listeners
+        self._region_server: asyncio.Server | None = None
+        self._region_addr: tuple[str, int] | None = None
+        self._region_queue: asyncio.Queue | None = None
+        self._region_out: dict = {}
 
     # -- framed IO --------------------------------------------------------
 
@@ -266,6 +288,17 @@ class PartyWorker:
         participant = self.pid in ids
         member = self.pid in committee
         asm = MessageAssembler(round_index=round_index)
+        tree = cfg.relay == "tree"
+        home: dict[int, int] = {}
+        addrs: dict[int, tuple[str, int]] = {}
+        roster: dict[int, int] = {}
+        if tree:
+            home = {int(k): int(v)
+                    for k, v in (body.get("home") or {}).items()}
+            addrs = {int(k): (str(v[0]), int(v[1]))
+                     for k, v in (body.get("addrs") or {}).items()}
+            roster = {int(k): int(v)
+                      for k, v in (body.get("sessions") or {}).items()}
 
         if participant:
             got = await self._collect(asm, MsgType.INPUT, {-1})
@@ -290,36 +323,50 @@ class PartyWorker:
                          "share stream (honest commitments)")
             # stream shares chunk-by-chunk: elem_base keeps the Philox
             # counters exactly where the whole-vector call would put
-            # them, so no [m, d] stack ever materializes per frame
-            for e_lo in range(0, d, cfg.chunk_elems):
-                e_hi = min(e_lo + cfg.chunk_elems, d)
-                stack = np.asarray(self.agg.make_shares_batch(
-                    flat[None, e_lo:e_hi], seed=cfg.seed,
-                    party_ids=[self.pid], round_index=round_index,
-                    elem_base=e_lo))[0]                # [m, chunk]
-                if malformed:
-                    # corrupt the share stream while the commitment
-                    # stream below stays honest — the per-dealer VSS
-                    # verify at every member catches exactly this
-                    stack = stack ^ np.uint32(TAMPER_FLIP_MASK)
-                if cfg.vss:
-                    # commitments for this chunk go out BEFORE its
-                    # uploads: the coordinator's relay-before-meter
-                    # ordering then guarantees a member holds every
-                    # included dealer's commitments once COMMIT lands
-                    # (same invariant the shares rely on)
-                    await self._send_commitments(round_index, committee,
-                                                 flat, d, e_lo, e_hi)
-                for w, member_id in enumerate(committee):
-                    _, payload = codec.encode_array(
-                        stack[w].astype(np.uint32, copy=False))
-                    await self._send(Frame(
-                        MsgType.SHARE_UPLOAD, round=round_index,
-                        phase=Phase.PHASE2_UPLOAD,
-                        scheme=Scheme.CODES[cfg.scheme],
-                        dtype=Wiredtype.UINT32, src=self.pid,
-                        dst=member_id, chunk_off=e_lo, total_elems=d,
-                        payload=payload))
+            # them, so no [m, d] stack ever materializes per frame.
+            # Tree relay: every upload frame (and commitment frame)
+            # goes to this party's home member's region listener; a
+            # home member dying mid-upload loses the region for this
+            # round (sub-threshold degradation), it does not kill the
+            # party — it just keeps awaiting the broadcast
+            try:
+                upload_send = (await self._region_uplink(
+                    home.get(self.pid), addrs) if tree else self._send)
+                for e_lo in range(0, d, cfg.chunk_elems):
+                    e_hi = min(e_lo + cfg.chunk_elems, d)
+                    stack = np.asarray(self.agg.make_shares_batch(
+                        flat[None, e_lo:e_hi], seed=cfg.seed,
+                        party_ids=[self.pid], round_index=round_index,
+                        elem_base=e_lo))[0]            # [m, chunk]
+                    if malformed:
+                        # corrupt the share stream while the commitment
+                        # stream below stays honest — the per-dealer VSS
+                        # verify at every member catches exactly this
+                        stack = stack ^ np.uint32(TAMPER_FLIP_MASK)
+                    if cfg.vss:
+                        # commitments for this chunk go out BEFORE its
+                        # uploads: the coordinator's relay-before-meter
+                        # ordering (FIFO on the region socket, in tree
+                        # mode) then guarantees a member holds every
+                        # included dealer's commitments once COMMIT
+                        # lands (same invariant the shares rely on)
+                        await self._send_commitments(
+                            round_index, committee, flat, d, e_lo, e_hi,
+                            send=upload_send)
+                    for w, member_id in enumerate(committee):
+                        _, payload = codec.encode_array(
+                            stack[w].astype(np.uint32, copy=False))
+                        await upload_send(Frame(
+                            MsgType.SHARE_UPLOAD, round=round_index,
+                            phase=Phase.PHASE2_UPLOAD,
+                            scheme=Scheme.CODES[cfg.scheme],
+                            dtype=Wiredtype.UINT32, src=self.pid,
+                            dst=member_id, chunk_off=e_lo, total_elems=d,
+                            payload=payload))
+            except _RegionDead as e:
+                self.log(f"round {round_index}: home member {e.member} "
+                         "unreachable mid-upload — region lost this "
+                         "round, awaiting broadcast")
             if self.die_after_upload == round_index:
                 # frames are already drained to the kernel (write_frame
                 # awaits drain); process exit sends FIN *after* them, so
@@ -331,7 +378,13 @@ class PartyWorker:
         if member:
             await self._send(Frame(MsgType.READY, round=round_index,
                                    src=self.pid))
-            await self._member_duties(round_index, ids, committee, d, asm)
+            if tree:
+                await self._member_duties_tree(round_index, ids,
+                                               committee, d, asm,
+                                               home, roster)
+            else:
+                await self._member_duties(round_index, ids, committee,
+                                          d, asm)
 
         # every connected party receives the aggregate (Alg. 3 l.22).
         # A pipelined coordinator may interleave round r+1's Phase I
@@ -355,7 +408,7 @@ class PartyWorker:
 
     async def _send_commitments(self, round_index: int, committee,
                                 flat: np.ndarray, d: int, e_lo: int,
-                                e_hi: int) -> None:
+                                e_hi: int, send=None) -> None:
         """Feldman commitments for elements [e_lo, e_hi) to every member.
 
         The commitment stream re-derives the chunk's coefficient words
@@ -376,6 +429,7 @@ class PartyWorker:
                                counter_base=e_lo // 4),
             dtype=np.uint32).reshape(-1)
         stride = (deg + 1) * 2
+        send = send or self._send
         for member_id in committee:
             for frame in codec.chunk_frames(
                     MsgType.COMMITMENT, words, round_index=round_index,
@@ -384,7 +438,7 @@ class PartyWorker:
                     dtype_code=Wiredtype.UINT32, src=self.pid,
                     dst=member_id, chunk_elems=cfg.chunk_elems,
                     chunk_base=e_lo * stride, total_elems=d * stride):
-                await self._send(frame)
+                await send(frame)
 
     def _apply_tamper(self, acc: np.ndarray, round_index: int,
                       d: int) -> np.ndarray:
@@ -630,9 +684,12 @@ class PartyWorker:
                 l_eff = len(honest)
             use_order = list(order)
             if cfg.vss:
+                agg_commits = np.asarray(
+                    vss.aggregate_commits(np.stack(
+                        [commit_bufs[p].reshape(d, deg + 1, 2)
+                         for p in honest])), dtype=np.uint32)
                 use_order = await self._verify_member_rows(
-                    round_index, rows, order, committee, honest,
-                    commit_bufs, d)
+                    round_index, rows, order, committee, agg_commits)
             member_sums = np.stack([rows[w] for w in use_order])
             points = (None if len(use_order) == len(committee) else
                       tuple(committee.index(w) + 1 for w in use_order))
@@ -644,9 +701,275 @@ class PartyWorker:
             phase=Phase.WIRE_RESULT, arr=mean,
             dtype_code=Wiredtype.FLOAT32)
 
+    async def _region_event(self, ingest: RegionIngest, event,
+                            round_index: int) -> None:
+        """Process one region-queue event (a frame or an EOF sentinel).
+
+        Completions and incomplete-stream deaths are reported to the
+        coordinator (UPLOAD_DONE / UPLOAD_DONE{done:false}) — the
+        coordinator's upload stage settles on these verdicts, since a
+        party's coordinator-socket EOF proves nothing about an upload
+        that traveled the tree.  A stale session is answered with an
+        ERROR frame on the region socket (the coordinator's per-frame
+        gate, mirrored); other protocol violations drop the frame."""
+        kind, payload, session, writer = event
+        if kind == "eof":
+            src = int(payload)
+            if src in ingest.roster and src not in ingest.done:
+                await self._send(Frame(
+                    MsgType.UPLOAD_DONE, round=round_index,
+                    src=self.pid, payload=codec.encode_json(
+                        {"party": src, "done": False})))
+            return
+        frame: Frame = payload
+        try:
+            done_src = ingest.feed(frame, session)
+        except StaleSessionError as e:
+            self.log(f"region frame from {frame.src} rejected: {e}")
+            if writer is not None:
+                with contextlib.suppress(Exception):
+                    await write_frame(writer, Frame(
+                        MsgType.ERROR, src=self.pid,
+                        payload=codec.encode_json({"error": str(e)})))
+            return
+        except ProtocolError as e:
+            self.log(f"region frame from {frame.src} dropped: {e}")
+            return
+        if done_src is not None:
+            await self._send(Frame(
+                MsgType.UPLOAD_DONE, round=round_index, src=self.pid,
+                payload=codec.encode_json({"party": done_src})))
+
+    async def _member_duties_tree(self, round_index: int, ids, committee,
+                                  d, asm: MessageAssembler, home,
+                                  roster) -> None:
+        """Member duties under the committee-sharded relay tree
+        (DESIGN.md §13).
+
+        Until COMMIT lands the member multiplexes two sources: its
+        coordinator socket (COMMIT + control) and its region queue (its
+        region's SHARE_UPLOAD/COMMITMENT streams, fed by the region
+        listener).  Post-COMMIT it ships the METER digest (the Eq. 3–6
+        reconciliation), folds its region locally, exchanges per-member
+        regional sums (REGION_SUM, coordinator-relayed, the m·(m−1)
+        leg of the per-link closed form), and joins the same
+        chain/reconstruct tail the hub path runs — modular adds and
+        the commitment group product are order-free, so the mean and
+        the VSS verdicts stay bit-identical to hub and sim."""
+        cfg = self.cfg
+        deg = cfg.degree()
+        commit_words = d * (deg + 1) * 2
+        ingest = RegionIngest(
+            round_index=round_index, roster=roster,
+            expect_msgs=cfg.m * (2 if cfg.vss else 1))
+        region = sorted(p for p in ids if home.get(p) == self.pid)
+
+        commit = None
+        commit_task = asyncio.ensure_future(self._next(MsgType.COMMIT))
+        try:
+            while commit is None:
+                if commit_task.done():
+                    commit = codec.decode_json(
+                        commit_task.result().payload)
+                    break
+                get_task = asyncio.ensure_future(
+                    self._region_queue.get())
+                await asyncio.wait({commit_task, get_task},
+                                   return_when=asyncio.FIRST_COMPLETED)
+                if get_task.done() and not get_task.cancelled():
+                    await self._region_event(ingest, get_task.result(),
+                                             round_index)
+                else:
+                    # Queue.get never consumes an item once cancelled
+                    get_task.cancel()
+                    with contextlib.suppress(asyncio.CancelledError):
+                        await get_task
+        finally:
+            if not commit_task.done():
+                commit_task.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await commit_task
+        included = [int(p) for p in commit["included"]]
+        live_members = [int(w) for w in commit["live_members"]]
+        l = int(commit["l"])
+        region_inc = [p for p in region if p in set(included)]
+        if not ingest.complete(region_inc):
+            # the coordinator includes a party only after THIS member's
+            # UPLOAD_DONE, and COMMIT arrives after that send on the
+            # same FIFO socket — the tree-mode relay-before-COMMIT
+            raise ProtocolError(
+                f"COMMIT names region parties "
+                f"{sorted(set(region_inc) - ingest.done)} whose uploads "
+                "this member never completed (UPLOAD_DONE causality "
+                "violated)")
+
+        if cfg.vss and region_inc:
+            for p in region_inc:
+                for w in committee:
+                    buf = ingest.commits[(p, w)]
+                    if buf.shape[0] != commit_words:
+                        raise ProtocolError(
+                            f"dealer {p} commitment carries "
+                            f"{buf.shape[0]} words, expected "
+                            f"{commit_words}")
+            # the home member is its region's sole verifier — it holds
+            # every dealer's full share matrix, so it checks ALL m rows
+            # (strictly stronger than the hub's one-point-per-member
+            # check; one batched kernel call either way)
+            from repro.kernels.verify_shares import verify_shares
+            rows_mat = np.stack(
+                [np.concatenate([ingest.rows[(p, w)]
+                                 for p in region_inc])
+                 for w in committee])
+            commits = np.concatenate(
+                [ingest.commits[(p, self.pid)].reshape(d, deg + 1, 2)
+                 for p in region_inc])
+            points = tuple(range(1, len(committee) + 1))
+            ok = np.asarray(verify_shares(rows_mat, commits, points))
+            ok_dealer = ok.reshape(len(committee), len(region_inc),
+                                   d).all(axis=(0, 2))
+            bad = [p for k, p in enumerate(region_inc)
+                   if not ok_dealer[k]]
+            if bad:
+                await self._send(Frame(
+                    MsgType.BLAME, round=round_index, src=self.pid,
+                    payload=codec.encode_json(
+                        {"kind": "dealer", "blamed": bad,
+                         "round": round_index})))
+                raise ProtocolError(
+                    f"dealer share verification failed for parties "
+                    f"{bad} at home member {self.pid}")
+
+        # METER digest before any region sum / chain traffic: RESULT
+        # causally depends on those, so the coordinator can require
+        # every live member's digest once the mean assembles
+        await self._send(Frame(
+            MsgType.METER, round=round_index, src=self.pid,
+            payload=codec.encode_json({"counters": ingest.digest()})))
+
+        def region_of(h: int) -> list[int]:
+            return [p for p in included if home.get(p) == h]
+
+        region_acc = {w: np.zeros(d, dtype=np.uint32)
+                      for w in committee}
+        for p in region_inc:
+            for w in committee:
+                region_acc[w] = self._fold(region_acc[w],
+                                           ingest.rows[(p, w)])
+        # ship every other live member its regional sum, then collect
+        # theirs: member w's full sum is the fold of all regional sums
+        # addressed to it (exact modular adds — order-free, so the
+        # regrouping is bit-identical to the hub's per-dealer fold)
+        if region_inc:
+            for w in live_members:
+                if w == self.pid:
+                    continue
+                await self._send_chunked(
+                    MsgType.REGION_SUM, w, round_index=round_index,
+                    phase=Phase.WIRE_REGION, arr=region_acc[w],
+                    dtype_code=Wiredtype.UINT32)
+        senders = {h for h in live_members
+                   if h != self.pid and region_of(h)}
+        acc = region_acc[self.pid]
+        if senders:
+            got = await self._collect(asm, MsgType.REGION_SUM, senders)
+            for h in sorted(senders):
+                acc = self._fold(acc, got[h].astype(np.uint32,
+                                                    copy=False))
+
+        agg_commits = None
+        if cfg.vss:
+            # regional aggregate commitments flow to the final member,
+            # which multiplies them — the group product over dealers is
+            # commutative, so the per-region regrouping reproduces the
+            # hub's all-at-once aggregate exactly
+            final = live_members[-1]
+            reg_agg = None
+            if region_inc:
+                reg_agg = np.asarray(vss.aggregate_commits(np.stack(
+                    [ingest.commits[(p, self.pid)].reshape(
+                        d, deg + 1, 2) for p in region_inc])),
+                    dtype=np.uint32)
+            if self.pid != final:
+                if reg_agg is not None:
+                    await self._send_chunked(
+                        MsgType.REGION_COMMIT, final,
+                        round_index=round_index,
+                        phase=Phase.WIRE_REGION,
+                        arr=reg_agg.reshape(-1),
+                        dtype_code=Wiredtype.UINT32)
+            else:
+                commit_senders = {h for h in live_members
+                                  if h != final and region_of(h)}
+                parts = [] if reg_agg is None else [reg_agg]
+                if commit_senders:
+                    cgot = await self._collect(
+                        asm, MsgType.REGION_COMMIT, commit_senders)
+                    parts += [cgot[h].astype(np.uint32, copy=False)
+                              .reshape(d, deg + 1, 2)
+                              for h in sorted(commit_senders)]
+                if not parts:
+                    raise ProtocolError(
+                        "no regional commitments reached the final "
+                        "member — an empty included set should have "
+                        "aborted upstream")
+                agg_commits = np.asarray(
+                    vss.aggregate_commits(np.stack(parts)),
+                    dtype=np.uint32)
+
+        honest_acc = acc
+        acc = self._apply_tamper(acc, round_index, d)
+        self._prev_acc = honest_acc
+
+        order = live_members
+        my_idx = order.index(self.pid)
+        k = len(order)
+        if cfg.scheme == "additive":
+            if my_idx > 0:
+                got = await self._collect(asm, MsgType.CHAIN_SUM,
+                                          {order[my_idx - 1]})
+                acc = self._fold(acc, got[order[my_idx - 1]])
+            if my_idx < k - 1:
+                await self._send_chunked(
+                    MsgType.CHAIN_SUM, order[my_idx + 1],
+                    round_index=round_index,
+                    phase=Phase.PHASE2_EXCHANGE, arr=acc,
+                    dtype_code=Wiredtype.UINT32)
+                return
+            member_sums = acc[None, :]
+            points = None
+        else:
+            # tree + norm audit is rejected at config time (the audit
+            # rows live only on each party's home member), so the
+            # Shamir tail here is the audit-free hub tail verbatim
+            if my_idx < k - 1:
+                await self._send_chunked(
+                    MsgType.CHAIN_SUM, order[-1],
+                    round_index=round_index,
+                    phase=Phase.PHASE2_EXCHANGE, arr=acc,
+                    dtype_code=Wiredtype.UINT32)
+                return
+            rows = {self.pid: acc}
+            if k > 1:
+                rows.update(await self._collect(
+                    asm, MsgType.CHAIN_SUM, set(order[:-1])))
+            use_order = list(order)
+            if cfg.vss:
+                use_order = await self._verify_member_rows(
+                    round_index, rows, order, committee, agg_commits)
+            member_sums = np.stack([rows[w] for w in use_order])
+            points = (None if len(use_order) == len(committee) else
+                      tuple(committee.index(w) + 1 for w in use_order))
+
+        mean = np.asarray(self.agg.reconstruct_mean(
+            member_sums, l, points=points), dtype=np.float32)
+        await self._send_chunked(
+            MsgType.RESULT, -1, round_index=round_index,
+            phase=Phase.WIRE_RESULT, arr=mean,
+            dtype_code=Wiredtype.FLOAT32)
+
     async def _verify_member_rows(self, round_index: int, rows, order,
-                                  committee, included, commit_bufs,
-                                  d: int) -> list:
+                                  committee, agg_commits) -> list:
         """Batch-verify every member row against the aggregate
         commitments; BLAME failing members; return the verified order.
 
@@ -654,13 +977,15 @@ class PartyWorker:
         sum (flipped bits / wrong polynomial / replayed round) cannot
         satisfy ``h^{row_w} == Π_j (Π_i C_{i,j})^{x_w^j}`` — the
         aggregate commitments bind this round's polynomials exactly.
+        The caller supplies ``agg_commits`` (``[d, deg+1, 2]``): the hub
+        final member aggregates every included dealer's commitments
+        locally; the tree final member multiplies the per-region
+        aggregates (REGION_COMMIT) — the group product is commutative,
+        so both are bit-identical.
         """
         from repro.kernels.verify_shares import verify_shares
         cfg = self.cfg
         deg = cfg.degree()
-        agg_commits = np.asarray(vss.aggregate_commits(np.stack(
-            [commit_bufs[p].reshape(d, deg + 1, 2) for p in included])),
-            dtype=np.uint32)
         points = tuple(committee.index(w) + 1 for w in order)
         ok = np.asarray(verify_shares(
             np.stack([rows[w] for w in order]), agg_commits, points))
@@ -686,13 +1011,29 @@ class PartyWorker:
     async def run(self) -> None:
         self.reader, self.writer = await asyncio.open_connection(
             self.host, self.port)
-        await self._send(Frame(MsgType.HELLO, src=self.pid))
+        # region listener (tree relay, DESIGN.md §13): opened before
+        # HELLO because the relay mode is only known at WELCOME, and
+        # the coordinator needs every *member*'s listener address in
+        # hand when it builds the tree ROUND_START.  Bound to the same
+        # interface the coordinator connection uses; port 0 = ephemeral.
+        self._region_queue = asyncio.Queue()
+        local = self.writer.get_extra_info("sockname")
+        listen_host = local[0] if local else "127.0.0.1"
+        self._region_server = await asyncio.start_server(
+            self._accept_region, listen_host, 0)
+        self._region_addr = (
+            self._region_server.sockets[0].getsockname()[:2])
+        await self._send(Frame(
+            MsgType.HELLO, src=self.pid,
+            payload=codec.encode_json(
+                {"addr": list(self._region_addr)})))
         welcome = await self._next(MsgType.WELCOME)
         self.session = welcome.session
         self.cfg = WireConfig.from_json(codec.decode_json(welcome.payload))
         self.agg = self.cfg.aggregator()
         self.log(f"party {self.pid} joined federation "
-                 f"(n={self.cfg.n}, scheme={self.cfg.scheme})")
+                 f"(n={self.cfg.n}, scheme={self.cfg.scheme}, "
+                 f"relay={self.cfg.relay})")
         try:
             while True:
                 frame = await self._next(MsgType.ELECT,
@@ -705,6 +1046,91 @@ class PartyWorker:
             self.log("shutdown requested")
         finally:
             self.writer.close()
+            self._region_server.close()
+            for _, writer in self._region_out.values():
+                with contextlib.suppress(Exception):
+                    writer.close()
+
+    async def _accept_region(self, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+        """One inbound region stream (this member is someone's home).
+
+        The first frame must be a HELLO naming the sender; every later
+        frame is queued for the round's :class:`RegionIngest` with the
+        HELLO's session id (authenticated there against the ROUND_START
+        roster).  EOF queues an ``eof`` sentinel so the member can tell
+        the coordinator about an upload that died mid-stream."""
+        src = None
+        try:
+            hello = await read_frame(reader)
+            if hello is None or hello.msg_type != MsgType.HELLO:
+                return
+            src = int(hello.src)
+            session = int(hello.session)
+            while True:
+                frame = await read_frame(reader)
+                if frame is None:
+                    break
+                if int(frame.src) != src:
+                    self.log(f"region stream from {src} carried a frame "
+                             f"claiming src={frame.src}; closing")
+                    break
+                await self._region_queue.put(
+                    ("frame", frame, session, writer))
+        except (WireError, ConnectionError, OSError) as e:
+            self.log(f"region stream from {src} died: {e}")
+        finally:
+            if src is not None:
+                await self._region_queue.put(("eof", src, 0, None))
+            with contextlib.suppress(Exception):
+                writer.close()
+
+    async def _region_conn(self, member: int, addr: tuple[str, int]):
+        """Cached outbound connection to ``member``'s region listener;
+        one HELLO (carrying this party's session lease) per
+        connection."""
+        key = (member, addr)
+        cached = self._region_out.get(key)
+        if cached is not None and not cached[1].is_closing():
+            return cached
+        try:
+            reader, writer = await asyncio.open_connection(*addr)
+            await write_frame(writer, Frame(
+                MsgType.HELLO, src=self.pid, session=self.session))
+        except (ConnectionError, OSError) as e:
+            raise _RegionDead(member) from e
+        self._region_out[key] = (reader, writer)
+        return (reader, writer)
+
+    async def _region_uplink(self, member: int | None, addrs: dict):
+        """The upload ``send`` callable for the tree relay: this
+        party's SHARE_UPLOAD/COMMITMENT frames go to its home member's
+        region listener instead of the coordinator.  A member homed at
+        itself short-circuits through its own region queue."""
+        if member is None:
+            raise ProtocolError(
+                f"tree ROUND_START assigns no home member to party "
+                f"{self.pid}")
+        if member == self.pid:
+            async def enqueue(frame: Frame) -> None:
+                await self._region_queue.put(
+                    ("frame", frame, self.session, None))
+            return enqueue
+        addr = addrs.get(member)
+        if addr is None:
+            raise ProtocolError(
+                f"tree ROUND_START carries no region address for home "
+                f"member {member}")
+        _, writer = await self._region_conn(member, addr)
+
+        async def send(frame: Frame) -> None:
+            if self.session and frame.session == 0:
+                frame = dataclasses.replace(frame, session=self.session)
+            try:
+                await write_frame(writer, frame)
+            except (ConnectionError, OSError) as e:
+                raise _RegionDead(member) from e
+        return send
 
     async def fail(self, exc: BaseException) -> None:
         """Best-effort ERROR report before exiting."""

@@ -90,9 +90,11 @@ class PartyRegistry:
 
         The session must be the pid's *current* one and the lease still
         live — otherwise :class:`StaleSessionError` (the party must
-        re-register instead, getting a fresh session id)."""
-        self.validate(pid, session, now)
-        lease = self._leases[int(pid)]
+        re-register instead, getting a fresh session id).  Every
+        failure mode — including a pid that never registered at all,
+        e.g. a worker reconnecting after a registry truncation — is the
+        typed error (ERROR-frame path), never a bare ``KeyError``."""
+        lease = self.validate(pid, session, now)
         lease.expires_at = self._expiry(now)
         return lease.session
 
@@ -103,9 +105,9 @@ class PartyRegistry:
             lease.expires_at = self._expiry(now)
 
     def validate(self, pid: int, session: int, now: float = 0.0, *,
-                 enforce_expiry: bool = True) -> None:
-        """Raise :class:`StaleSessionError` unless ``session`` is the
-        pid's current, unexpired lease.
+                 enforce_expiry: bool = True) -> PartyLease:
+        """Return the pid's lease, or raise :class:`StaleSessionError`
+        unless ``session`` is the pid's current, unexpired lease.
 
         ``enforce_expiry=False`` checks identity only (current session
         id, not superseded): frames arriving on an authenticated live
@@ -130,6 +132,7 @@ class PartyRegistry:
                 f"party {pid} session {session:#x} lease expired "
                 f"{now - lease.expires_at:.3f}s ago — re-register with "
                 "a fresh HELLO")
+        return lease
 
     # -- membership views --------------------------------------------------
 

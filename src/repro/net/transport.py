@@ -64,7 +64,7 @@ class WireTransport(Transport):
                  vss: bool = False, reelect_each_round: bool = False,
                  norm_bound: float | None = None,
                  cohort: int | None = None, pipeline: bool = False,
-                 lease_s: float | None = 30.0,
+                 lease_s: float | None = 30.0, relay: str = "hub",
                  dealer_tamper: dict | None = None,
                  round_timeout_s: float = 120.0,
                  host: str = "127.0.0.1", port: int = 0,
@@ -78,7 +78,7 @@ class WireTransport(Transport):
             deadline_s=deadline_s, vss=vss,
             reelect_each_round=reelect_each_round,
             norm_bound=norm_bound, cohort=cohort, pipeline=pipeline,
-            lease_s=lease_s)
+            lease_s=lease_s, relay=relay)
         # dealer_tamper {pid: (mode, round)} becomes per-party --poison
         # CLI flags: on the wire the adversary is the *worker process*
         # poisoning its own input, not a coordinator-side mutation

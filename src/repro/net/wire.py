@@ -135,6 +135,18 @@ class MsgType:
     DEALER_ROWS = 19    # non-final member -> final member (relayed):
                         # per-dealer share rows for the norm-bound
                         # audit (DESIGN.md §11)
+    UPLOAD_DONE = 20    # home member -> coordinator (tree relay): one
+                        # region party's upload is fully held, JSON
+                        # {party, round} (DESIGN.md §13)
+    METER = 21          # home member -> coordinator (tree relay):
+                        # region counter digest JSON for metering
+                        # reconciliation {counters: {phase: [num, size]}}
+    REGION_SUM = 22     # home member -> member (relayed, tree): the
+                        # fold of its region's share rows addressed to
+                        # the destination member's evaluation point
+    REGION_COMMIT = 23  # home member -> final member (relayed, tree):
+                        # regional aggregate Feldman commitments (the
+                        # pointwise product over the region's dealers)
 
     _NAMES = {}  # filled below
 
@@ -158,6 +170,10 @@ class Phase:
     PHASE2_AUDIT = 8        # per-dealer rows forwarded to the final
                             # member for the norm-bound audit (scenario
                             # harness — costmodel.phase2_audit_*)
+    WIRE_REGION = 9         # tree-relay artifacts (REGION_SUM /
+                            # REGION_COMMIT fan-in between members) —
+                            # topology cost, outside Eqs. 1-8 like the
+                            # other WIRE_* phases (DESIGN.md §13)
 
     #: Network counter name per phase code; WIRE_* phases are physical
     #: hub artifacts outside the paper's Eqs. 1-8 and are counted under
@@ -171,6 +187,7 @@ class Phase:
         WIRE_RESULT: "wire_result",
         PHASE2_COMMIT: "phase2_commit",
         PHASE2_AUDIT: "phase2_audit",
+        WIRE_REGION: "wire_region",
     }
 
 

@@ -1,0 +1,312 @@
+"""Unit battery for the committee-sharded relay tree (DESIGN.md §13).
+
+Socket-free tests for every tree-relay building block:
+
+* ``fl.cohort.assign_home`` — the deterministic, churn-stable Philox
+  draw that maps each cohort party to its home committee member;
+* ``net.region.RegionIngest`` — the home member's fan-in state machine
+  (session authentication, chunk reassembly, completion tracking, and
+  the METER digest the coordinator replays);
+* ``fl.transport.Network.absorb`` — the coordinator-side counter
+  reconciliation that keeps Eq. 3–6 accounting bit-identical to the
+  sim even though region frames never cross the coordinator's socket;
+* ``core.costmodel`` per-link closed forms — frames/bytes per logical
+  message and the exact coordinator ingress/egress inventory that the
+  wire tests and ``benchmarks/cohort_bench.py`` assert against;
+* the ``Coordinator._relay`` silent-drop regression — an undeliverable
+  relayed frame must land in the typed ``relay_dropped`` counter and
+  notify every active stage monitor immediately, never vanish.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.costmodel import CostParams
+from repro.fl.cohort import assign_home
+from repro.fl.transport import Network
+from repro.net import (Frame, MsgType, Phase, ProtocolError,
+                       RegionIngest, RelayDropped, StaleSessionError,
+                       WireConfig, Wiredtype)
+from repro.core.costmodel import FRAME_OVERHEAD_BYTES
+from repro.net.coordinator import Coordinator
+from repro.net.timeouts import StageMonitor, SystemClock
+
+
+# ---------------------------------------------------------------------------
+# assign_home: the deterministic home-member draw
+# ---------------------------------------------------------------------------
+
+def test_assign_home_deterministic_and_members_only():
+    home = assign_home(range(10), (7, 2, 5), seed=3, round_index=4)
+    assert set(home) == set(range(10))
+    assert set(home.values()) <= {2, 5, 7}
+    assert home == assign_home(range(10), (7, 2, 5), 3, 4)
+    # committee order must not matter: the draw indexes sorted members
+    assert home == assign_home(range(10), (2, 5, 7), 3, 4)
+
+
+def test_assign_home_churn_stable():
+    """Removing other parties never moves a survivor's home — the draw
+    is keyed per party id, not per position (same property as
+    sample_cohort)."""
+    full = assign_home(range(12), (0, 4, 9), seed=1, round_index=2)
+    survivors = [1, 3, 8, 11]
+    churned = assign_home(survivors, (0, 4, 9), seed=1, round_index=2)
+    assert churned == {i: full[i] for i in survivors}
+
+
+def test_assign_home_varies_by_round_and_seed():
+    base = assign_home(range(64), (0, 1, 2), seed=1, round_index=0)
+    assert base != assign_home(range(64), (0, 1, 2), seed=1,
+                               round_index=1)
+    assert base != assign_home(range(64), (0, 1, 2), seed=2,
+                               round_index=0)
+
+
+def test_assign_home_edge_cases():
+    assert assign_home([], (1, 2), seed=0, round_index=0) == {}
+    # a singleton committee homes everyone at that member
+    assert set(assign_home(range(5), (3,), 0, 0).values()) == {3}
+    with pytest.raises(ValueError, match="non-empty committee"):
+        assign_home(range(3), (), seed=0, round_index=0)
+    with pytest.raises(ValueError, match="negative"):
+        assign_home([-1, 0], (0,), seed=0, round_index=0)
+
+
+# ---------------------------------------------------------------------------
+# RegionIngest: the home member's fan-in state machine
+# ---------------------------------------------------------------------------
+
+def _chunks(src, dst, arr, *, msg_type=MsgType.SHARE_UPLOAD,
+            round_index=0, chunk=8):
+    arr = np.asarray(arr, dtype=np.uint32)
+    out = []
+    for off in range(0, arr.size, chunk):
+        out.append(Frame(
+            msg_type, round=round_index, phase=Phase.PHASE2_UPLOAD,
+            dtype=Wiredtype.UINT32, src=src, dst=dst, chunk_off=off,
+            total_elems=arr.size,
+            payload=arr[off:off + chunk].tobytes()))
+    return out
+
+
+def test_region_ingest_completion_and_digest():
+    """m share rows complete a party's upload; the digest counts the
+    logical messages (not frames) under their phase name."""
+    roster = {1: 0x11, 2: 0x22}
+    ing = RegionIngest(round_index=0, roster=roster, expect_msgs=2)
+    rows = {w: np.arange(20, dtype=np.uint32) + w for w in (0, 1)}
+    done = []
+    for w in (0, 1):
+        for fr in _chunks(1, w, rows[w]):
+            got = ing.feed(fr, 0x11)
+            if got is not None:
+                done.append(got)
+    assert done == [1] and ing.done == {1}
+    assert ing.complete([1]) and not ing.complete([1, 2])
+    np.testing.assert_array_equal(ing.rows[(1, 0)], rows[0])
+    # 2 logical messages of 20 elems each — frames don't inflate it
+    assert ing.digest() == {"phase2_upload": [2, 40]}
+
+
+def test_region_ingest_authenticates_sessions():
+    ing = RegionIngest(round_index=0, roster={1: 0x11}, expect_msgs=1)
+    frame = _chunks(1, 0, np.arange(4))[0]
+    with pytest.raises(StaleSessionError, match="current lease"):
+        ing.feed(frame, 0x99)
+    stranger = _chunks(5, 0, np.arange(4))[0]
+    with pytest.raises(StaleSessionError, match="not in round"):
+        ing.feed(stranger, 0x11)
+    # rejected frames leave no partial state behind
+    assert ing.in_flight() == set() and ing.digest() == {}
+
+
+def test_region_ingest_rejects_non_upload_types():
+    ing = RegionIngest(round_index=0, roster={1: 0x11}, expect_msgs=1)
+    with pytest.raises(ProtocolError, match="region listener"):
+        ing.feed(Frame(MsgType.CHAIN_SUM, src=1, dst=0,
+                       phase=Phase.PHASE2_EXCHANGE,
+                       dtype=Wiredtype.UINT32,
+                       total_elems=1,
+                       payload=np.zeros(1, np.uint32).tobytes()), 0x11)
+
+
+def test_region_ingest_vss_counts_commitments_separately():
+    """Under VSS a complete upload is m shares + m commitment streams;
+    the digest keeps the two phases apart for exact reconciliation."""
+    ing = RegionIngest(round_index=0, roster={3: 0x7}, expect_msgs=4)
+    share = np.arange(6, dtype=np.uint32)
+    commit = np.arange(24, dtype=np.uint32)
+    done = []
+    for w in (0, 1):
+        for fr in _chunks(3, w, share):
+            done.append(ing.feed(fr, 0x7))
+        for fr in _chunks(3, w, commit, msg_type=MsgType.COMMITMENT):
+            fr = Frame(**{**fr.__dict__, "phase": Phase.PHASE2_COMMIT})
+            done.append(ing.feed(fr, 0x7))
+    assert [d for d in done if d is not None] == [3]
+    np.testing.assert_array_equal(ing.commits[(3, 1)], commit)
+    assert ing.digest() == {"phase2_upload": [2, 12],
+                            "phase2_commit": [2, 48]}
+
+
+def test_region_ingest_in_flight_and_discard():
+    ing = RegionIngest(round_index=0, roster={1: 0x1, 2: 0x2},
+                       expect_msgs=1)
+    frames = _chunks(1, 0, np.arange(16), chunk=8)
+    ing.feed(frames[0], 0x1)               # half the message
+    assert ing.in_flight(1) and not ing.done
+    ing.discard(1)
+    assert ing.in_flight(1) == set()
+    # a discarded partial never reaches the digest
+    assert ing.digest() == {}
+    # ... and the other sender is untouched by the discard
+    for fr in _chunks(2, 0, np.arange(16), chunk=8):
+        ing.feed(fr, 0x2)
+    assert ing.done == {2}
+
+
+def test_region_ingest_overcomplete_upload_is_protocol_error():
+    ing = RegionIngest(round_index=0, roster={1: 0x1}, expect_msgs=1)
+    for fr in _chunks(1, 0, np.arange(4)):
+        ing.feed(fr, 0x1)
+    with pytest.raises(ProtocolError, match="expected"):
+        for fr in _chunks(1, 1, np.arange(4)):
+            ing.feed(fr, 0x1)
+    with pytest.raises(ValueError, match="expect_msgs"):
+        RegionIngest(round_index=0, roster={}, expect_msgs=0)
+
+
+# ---------------------------------------------------------------------------
+# Network.absorb: coordinator-side digest reconciliation
+# ---------------------------------------------------------------------------
+
+def test_network_absorb_folds_digest_exactly():
+    """absorb(digest) == replaying the member's sends locally."""
+    local, remote = Network(), Network()
+    for _ in range(3):
+        local.send(0, 1, 50, "phase2_upload")
+        remote.send(0, 1, 50, "phase2_upload")
+    remote.send(0, 1, 7, "phase2_commit")
+    mirror = Network()
+    for ph, st in local.phases.items():
+        mirror.absorb(st.msg_num, st.msg_size, ph)
+    mirror.absorb(1, 7, "phase2_commit")
+    assert {ph: (st.msg_num, st.msg_size)
+            for ph, st in mirror.phases.items()} == \
+           {ph: (st.msg_num, st.msg_size)
+            for ph, st in remote.phases.items()}
+
+
+def test_network_absorb_rejects_malformed_digests():
+    net = Network()
+    with pytest.raises(ValueError, match="non-negative"):
+        net.absorb(-1, 10, "phase2_upload")
+    with pytest.raises(ValueError, match="inconsistent"):
+        net.absorb(0, 10, "phase2_upload")
+    with pytest.raises(ValueError, match="inconsistent"):
+        net.absorb(3, 0, "phase2_upload")
+    net.absorb(0, 0, "phase2_upload")      # empty region: legal no-op
+    assert net.stats("phase2_upload").msg_num == 0
+
+
+# ---------------------------------------------------------------------------
+# costmodel: per-link closed forms
+# ---------------------------------------------------------------------------
+
+def test_message_frames_and_wire_bytes():
+    assert costmodel.message_frames(1, 128) == 1
+    assert costmodel.message_frames(128, 128) == 1
+    assert costmodel.message_frames(129, 128) == 2
+    assert costmodel.message_wire_bytes(128, 128) == \
+        128 * 4 + FRAME_OVERHEAD_BYTES
+    assert costmodel.message_wire_bytes(129, 128) == \
+        129 * 4 + 2 * FRAME_OVERHEAD_BYTES
+    with pytest.raises(ValueError):
+        costmodel.message_frames(0, 128)
+
+
+def test_coordinator_round_legs_hub_vs_tree():
+    """The only difference between the topologies' coordinator legs is
+    the upload fan-in: n·m dealer messages (hub) vs m·(m−1) regional
+    sums (tree); votes, exchange, input, result, broadcast identical."""
+    p = CostParams(n=8, s=100, m=3, b=10)
+    hub = costmodel.coordinator_round_legs(p, relay="hub")
+    tree = costmodel.coordinator_round_legs(p, relay="tree")
+    assert (8 * 3, 100) in hub["in"]
+    assert (3 * 2, 100) in tree["in"]
+    assert (8 * 3, 100) not in tree["in"]
+    # shared legs: votes in/out, exchange, one RESULT in, n broadcasts
+    votes = (2 * 8 * 7, 10)
+    for legs in (hub, tree):
+        assert votes in legs["in"] and votes in legs["out"]
+        assert (3 - 1, 100) in legs["in"]      # chain rows to final
+        assert (8, 100) in legs["out"]         # broadcasts
+    with pytest.raises(ValueError, match="relay"):
+        costmodel.coordinator_round_legs(p, relay="ring")
+
+
+def test_coordinator_data_bytes_tree_shrinks_ingress():
+    """Honest-round ingress: hub carries c·m upload messages, tree only
+    m·(m−1) regional sums — independent of the cohort size."""
+    p = CostParams(n=40, s=500, m=3, b=10)
+    hub_in, hub_out = costmodel.coordinator_data_bytes(
+        p, relay="hub", chunk_elems=1024)
+    tree_in, tree_out = costmodel.coordinator_data_bytes(
+        p, relay="tree", chunk_elems=1024)
+    assert tree_in < hub_in
+    upload = costmodel.message_wire_bytes(500, 1024)
+    # the hub both receives AND re-sends every upload fan-in message;
+    # the tree replaces both directions with m·(m−1) regional sums
+    assert hub_in - tree_in == (40 * 3 - 3 * 2) * upload
+    assert hub_out - tree_out == (40 * 3 - 3 * 2) * upload
+    # VSS moves the commitment fan-in off the coordinator too
+    hub_v = costmodel.coordinator_data_bytes(
+        p, relay="hub", chunk_elems=1024, vss=True, degree=1)[0]
+    tree_v = costmodel.coordinator_data_bytes(
+        p, relay="tree", chunk_elems=1024, vss=True, degree=1)[0]
+    assert hub_v - hub_in == 40 * 3 * costmodel.message_wire_bytes(
+        500 * 2 * 2, 1024)
+    assert tree_v - tree_in == 2 * costmodel.message_wire_bytes(
+        500 * 2 * 2, 1024)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator._relay: the silent-drop regression (satellite of ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _relay_frame(src, dst):
+    arr = np.arange(4, dtype=np.uint32)
+    return Frame(MsgType.CHAIN_SUM, round=0,
+                 phase=Phase.PHASE2_EXCHANGE, dtype=Wiredtype.UINT32,
+                 src=src, dst=dst, total_elems=4,
+                 payload=arr.tobytes())
+
+
+def test_relay_to_dead_destination_is_typed_and_notifies_monitors():
+    """Regression: ``_relay`` to an absent/dead destination used to
+    ``return`` silently — peers waiting on that destination's reply
+    then hung until the stage deadline (or forever with deadline_s=
+    None).  Now the drop is a typed ``relay_dropped`` counter entry
+    and every active stage monitor sees the destination's EOF at once."""
+    async def scenario():
+        co = Coordinator(WireConfig(n=4, m=3, deadline_s=None))
+        mon = StageMonitor({2}, None, SystemClock()).start()
+        co._monitors.append(mon)
+        assert not mon.settled()
+        await co._relay(_relay_frame(0, 2))
+        await co._relay(_relay_frame(1, 2))
+        return co, mon
+
+    co, mon = asyncio.run(scenario())
+    key = RelayDropped(src=0, dst=2, msg_type=MsgType.CHAIN_SUM, round=0)
+    assert co.relay_dropped[key] == 1
+    key1 = RelayDropped(src=1, dst=2, msg_type=MsgType.CHAIN_SUM,
+                        round=0)
+    assert co.relay_dropped[key1] == 1
+    assert sum(co.relay_dropped.values()) == 2
+    # the monitor resolved the destination as dropped immediately
+    assert mon.dropped == {2} and mon.settled()

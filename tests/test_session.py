@@ -60,6 +60,18 @@ def test_registry_resume_renews_and_rejects_stale():
     assert reg.resume(0, s1, now=100.0) == s1
 
 
+def test_registry_resume_never_registered_is_typed():
+    """Regression: resuming a pid that never registered must raise the
+    typed StaleSessionError (→ ERROR frame on the wire), not leak a
+    bare KeyError out of the lease table."""
+    reg = PartyRegistry(4, lease_s=30.0)
+    with pytest.raises(StaleSessionError, match="no registration"):
+        reg.resume(2, (1 << 20) | 3, now=0.0)
+    # the failed resume must not have materialized a lease
+    assert reg.session_of(2) is None
+    assert reg.register(2, now=0.0) == 0x3
+
+
 def test_registry_validate_without_expiry_enforcement():
     """The coordinator's per-frame gate: identity always checked,
     expiry not — a quiet-but-connected party (long local JIT) must not
@@ -213,6 +225,27 @@ def test_wire_register_resume_and_stale_session_rejection():
         p4 = _RawParty(hub.port)
         assert p4.hello(0, session=s1).session == s1
         p4.close()
+
+
+@pytest.mark.net
+def test_wire_resume_never_registered_pid_typed_error():
+    """Raw-socket regression for the coordinator's resume path: a
+    HELLO presenting a session id for a pid that never registered gets
+    a typed ERROR frame ("no registration") and a clean close — the
+    lease table is untouched, so the pid can still register fresh."""
+    with _Hub(n=2) as hub:
+        p = _RawParty(hub.port)
+        err = p.hello(1, session=(3 << 20) | 2)
+        assert err.msg_type == MsgType.ERROR
+        assert "no registration" in codec.decode_json(err.payload)["error"]
+        assert p.recv() is None               # coordinator closed it
+        p.close()
+        assert hub.co.registry.session_of(1) is None
+        p2 = _RawParty(hub.port)
+        w = p2.hello(1)
+        assert w.msg_type == MsgType.WELCOME
+        assert w.session == 0x2
+        p2.close()
 
 
 @pytest.mark.net

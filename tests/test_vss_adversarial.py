@@ -317,13 +317,20 @@ wire = pytest.mark.net
 
 @wire
 @pytest.mark.adversarial
-@pytest.mark.parametrize("mode", TAMPER_MODES)
-def test_wire_tampering_member_blamed_evicted_reelected(mode,
+@pytest.mark.parametrize("mode,relay", [
+    ("flip", "hub"), ("wrong_poly", "hub"), ("replay", "hub"),
+    # tree relay: detection is identical — the chain row still reaches
+    # the final verifier, only the upload fan-in route changed; flip
+    # covers the in-round corruption, replay the cross-round cache
+    ("flip", "tree"), ("replay", "tree"),
+])
+def test_wire_tampering_member_blamed_evicted_reelected(mode, relay,
                                                         net_log_dir):
     """ISSUE 5 acceptance: a 4-party wire round with one tampering
     member detects the bad row via batched commitment verification,
     blames + evicts the member, re-elects, and completes bit-identical
-    to the honest sim trajectory with exact commitment traffic."""
+    to the honest sim trajectory with exact commitment traffic — in
+    both relay topologies."""
     flats = _flats()
     rounds = 2 if mode == "replay" else 1
     tamper_round = rounds - 1
@@ -357,7 +364,7 @@ def test_wire_tampering_member_blamed_evicted_reelected(mode,
     with make_transport(
             "two_phase", N, backend="wire", m=M, scheme="shamir",
             shamir_degree=DEG, seed=1, vss=True, deadline_s=None,
-            reelect_each_round=True, log_dir=net_log_dir,
+            reelect_each_round=True, relay=relay, log_dir=net_log_dir,
             party_extra_args={victim: ["--tamper", mode,
                                        "--tamper-round",
                                        str(tamper_round)]}) as tr:
@@ -384,10 +391,14 @@ def test_wire_tampering_member_blamed_evicted_reelected(mode,
 
 @wire
 @pytest.mark.adversarial
+@pytest.mark.parametrize("relay", ["hub", "tree"])
 def test_wire_honest_vss_round_bit_identical_counters_exact(
-        net_log_dir):
+        relay, net_log_dir):
     """No adversary: the VSS wire round stays bit-identical to the sim
-    and every counter (incl. phase2_commit) matches phase by phase."""
+    and every counter (incl. phase2_commit) matches phase by phase —
+    in tree mode the phase2_upload/phase2_commit counters reach the
+    coordinator as home-member METER digests, and must still reconcile
+    to the same totals the hub meters first-hand."""
     flats = _flats()
     sim = make_transport("two_phase", N, m=M, scheme="shamir",
                          shamir_degree=DEG, seed=1, vss=True)
@@ -395,7 +406,7 @@ def test_wire_honest_vss_round_bit_identical_counters_exact(
     want = np.asarray(sim.aggregate(flats, round_index=0))
     with make_transport("two_phase", N, backend="wire", m=M,
                         scheme="shamir", shamir_degree=DEG, seed=1,
-                        vss=True, deadline_s=None,
+                        vss=True, deadline_s=None, relay=relay,
                         log_dir=net_log_dir) as tr:
         assert tr.elect() == sim.committee
         got = np.asarray(tr.aggregate(flats, round_index=0))

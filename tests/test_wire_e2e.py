@@ -11,6 +11,15 @@ upload`` worker hook — the process exits abruptly right after its
 uploads, the coordinator sees EOF (no wall-clock timers involved), and
 the round reconstructs through the Shamir sub-threshold path with the
 same ``RoundOutcome`` the fault module reports for that pattern.
+
+Relay parametrization (DESIGN.md §13): the differentials run under
+both ``relay="hub"`` (all party→party traffic bounced off the
+coordinator) and ``relay="tree"`` (uploads fan out to committee home
+members, which fold locally and forward partial sums).  The topology
+is invisible to the protocol outcome: means stay bit-identical to the
+sim and to each other, and the logical counters reconcile exactly —
+tree mode adds only the ``wire_region`` transport phase (outside
+Eqs. 1–8) for the member→member regional-sum legs.
 Port/log hygiene: every transport binds port 0 (the OS assigns an
 ephemeral port, surfaced to party workers through the coordinator
 handshake) and each test logs into its own ``net_log_dir`` — no shared
@@ -47,9 +56,11 @@ def _phase2(net):
     return num, size
 
 
+@pytest.mark.parametrize("relay", ["hub", "tree"])
 @pytest.mark.parametrize("n", [3, 4])
-def test_wire_round_bit_identical_and_eqs_exact(n, net_log_dir):
-    """Differential: wire == sim bit-for-bit; counters == Eqs. 3-6."""
+def test_wire_round_bit_identical_and_eqs_exact(n, relay, net_log_dir):
+    """Differential: wire == sim bit-for-bit; counters == Eqs. 3-6 —
+    under both relay topologies."""
     s, m = 242, 3
     flats = _flats(n, s)
     sim = make_transport("two_phase", n, m=m, seed=1)
@@ -58,7 +69,7 @@ def test_wire_round_bit_identical_and_eqs_exact(n, net_log_dir):
                  for r in range(EPOCHS)]
 
     with make_transport("two_phase", n, backend="wire", m=m, seed=1,
-                        log_dir=net_log_dir) as wire:
+                        relay=relay, log_dir=net_log_dir) as wire:
         assert wire.elect() == sim.committee
         for r in range(EPOCHS):
             got = np.asarray(wire.aggregate(flats, round_index=r))
@@ -80,7 +91,8 @@ def test_wire_round_bit_identical_and_eqs_exact(n, net_log_dir):
             assert wire.net.stats(ph) == sim.net.stats(ph), ph
 
 
-def test_wire_shamir_round_bit_identical(net_log_dir):
+@pytest.mark.parametrize("relay", ["hub", "tree"])
+def test_wire_shamir_round_bit_identical(relay, net_log_dir):
     n, s, m, deg = 4, 242, 3, 1
     flats = _flats(n, s)
     sim = make_transport("two_phase", n, m=m, scheme="shamir",
@@ -89,7 +101,7 @@ def test_wire_shamir_round_bit_identical(net_log_dir):
     want = np.asarray(sim.aggregate(flats, round_index=0))
     with make_transport("two_phase", n, backend="wire", m=m,
                         scheme="shamir", shamir_degree=deg, seed=1,
-                        log_dir=net_log_dir) as wire:
+                        relay=relay, log_dir=net_log_dir) as wire:
         got = np.asarray(wire.aggregate(flats, round_index=0))
         np.testing.assert_array_equal(got, want)
 
@@ -130,14 +142,92 @@ def test_wire_member_killed_midround_subthreshold(net_log_dir):
         assert wire.net.stats("phase2_upload").msg_num == n * m
 
 
-def test_wire_additive_member_death_fails_loudly(net_log_dir):
+def test_wire_tree_home_member_death_drops_region_subthreshold(
+        net_log_dir):
+    """Tree-relay degradation (DESIGN.md §13): a home member that dies
+    mid-fan-in takes its whole region's uploads down with it — the
+    member died holding the only copy — and the round must resolve via
+    Shamir sub-threshold reconstruction over the surviving regions,
+    never hang.  At seed 1 the committee is (3, 0, 1) and
+    ``assign_home`` gives member 3 the region {2, 3}: killing 3 right
+    after its own upload drops dealer 2's completed-but-unfolded upload
+    too, so the oracle is the sim restricted to parties {0, 1} with
+    member 3 dropped."""
+    from repro.fl.cohort import assign_home
+
+    n, s, m, deg = 4, 242, 3, 1
+    flats = np.asarray(_flats(n, s))
+    committee = committee_mod.elect(n, m, B, 1).committee
+    victim = committee[0]
+    region = sorted(p for p, h in
+                    assign_home(range(n), committee, 1, 0).items()
+                    if h == victim)
+    assert victim == 3 and region == [2, 3]   # the fixture's geometry
+    survivors = sorted(set(range(n)) - set(region))
+
+    sim = make_transport("two_phase", n, m=m, scheme="shamir",
+                         shamir_degree=deg, seed=1)
+    sim.elect()
+    want = np.asarray(sim.aggregate(
+        flats[survivors], party_ids=survivors, round_index=0,
+        committee_dropout=[victim]))
+
+    with make_transport(
+            "two_phase", n, backend="wire", m=m, scheme="shamir",
+            shamir_degree=deg, seed=1, relay="tree",
+            log_dir=net_log_dir,
+            party_extra_args={victim: ["--die-after-upload", "0"]}
+    ) as wire:
+        wire.elect()
+        got = np.asarray(wire.aggregate(flats, round_index=0))
+        np.testing.assert_array_equal(got, want)
+        # the region died with its home member: dealer 2 is dropped
+        # alongside 3 even though its upload chunks all arrived
+        assert wire.last_outcome.dropped == set(region)
+        assert wire.last_outcome.alive == set(survivors)
+        # only the surviving regions' uploads were metered (the lost
+        # region's frames never reached a fold, so they never count)
+        assert wire.net.stats("phase2_upload").msg_num == \
+            len(survivors) * m
+        # live chain shrinks to m_live − 1 member→member rows
+        assert wire.net.stats("phase2_exchange").msg_num == m - 2
+
+
+@pytest.mark.parametrize("relay", ["hub", "tree"])
+def test_wire_coordinator_bytes_match_closed_form(relay, net_log_dir):
+    """The coordinator's measured ingress/egress equals
+    ``costmodel.coordinator_data_bytes`` *exactly* (not approximately)
+    in both relay modes, and the tree strictly shrinks ingress — the
+    n·m upload fan-in no longer crosses the coordinator at all."""
+    n, s, m = 4, 242, 3
+    flats = _flats(n, s)
+    with make_transport("two_phase", n, backend="wire", m=m, seed=1,
+                        relay=relay, log_dir=net_log_dir) as wire:
+        wire.elect()
+        wire.aggregate(flats, round_index=0)
+        cfg = wire.cfg
+        p = CostParams(n=n, s=s, m=m, b=B)
+        want_in, want_out = costmodel.coordinator_data_bytes(
+            p, relay=relay, chunk_elems=cfg.chunk_elems)
+        co = wire.coordinator
+        assert (co.data_bytes_in, co.data_bytes_out) == \
+            (want_in, want_out)
+        if relay == "tree":
+            hub_in, _ = costmodel.coordinator_data_bytes(
+                p, relay="hub", chunk_elems=cfg.chunk_elems)
+            assert co.data_bytes_in < hub_in
+
+
+@pytest.mark.parametrize("relay", ["hub", "tree"])
+def test_wire_additive_member_death_fails_loudly(relay, net_log_dir):
     """Additive sharing cannot reconstruct without all m member sums —
-    a dead member must abort the round, not return garbage."""
+    a dead member must abort the round, not return garbage (in tree
+    mode the death additionally takes the member's region down)."""
     n, m = 4, 3
     flats = _flats(n, 64)
     victim = committee_mod.elect(n, m, B, 1).committee[0]
     with make_transport(
-            "two_phase", n, backend="wire", m=m, seed=1,
+            "two_phase", n, backend="wire", m=m, seed=1, relay=relay,
             log_dir=net_log_dir,
             party_extra_args={victim: ["--die-after-upload", "0"]}
     ) as wire:
@@ -174,11 +264,13 @@ def test_run_fedavg_drives_wire_backend_unchanged(net_log_dir):
         [o.alive for o in res_sim.outcomes]
 
 
-def test_wire_cohort_rounds_bit_identical_to_sim(net_log_dir):
+@pytest.mark.parametrize("relay", ["hub", "tree"])
+def test_wire_cohort_rounds_bit_identical_to_sim(relay, net_log_dir):
     """Cohort mode differential (DESIGN.md §12): wire and sim sample
     the same Philox cohort per round, elect the same committee among
     it, produce bit-identical means, and the wire counters equal the
-    per-cohort closed forms exactly."""
+    per-cohort closed forms exactly — under both relay topologies
+    (in tree mode the home map is drawn over the round's cohort)."""
     from repro.fl.cohort import sample_cohort
 
     n, c, m, s, rounds = 4, 3, 3, 64, 3
@@ -194,7 +286,8 @@ def test_wire_cohort_rounds_bit_identical_to_sim(net_log_dir):
 
     subrounds = 0
     with make_transport("two_phase", n, backend="wire", m=m, seed=1,
-                        cohort=c, log_dir=net_log_dir) as wire:
+                        cohort=c, relay=relay,
+                        log_dir=net_log_dir) as wire:
         for r in range(rounds):
             wire.elect(r)
             assert wire.cohort_ids == sim_cohorts[r]

@@ -132,9 +132,11 @@ def walls(name: str, bench: dict) -> dict[str, float]:
         out = {}
         for row in bench.get("rows", []):
             # relay discriminates the wire topology rows from the sim
-            # scale row (pre-§13 baselines carry no relay field)
+            # scale row (pre-§13 baselines carry no relay field); the
+            # audit suffix splits the escrow row off the plain tree row
             tag = (f"n{row['n']}_c{row['cohort']}"
-                   f"_{row.get('relay', 'sim')}")
+                   f"_{row.get('relay', 'sim')}"
+                   f"{'_audit' if row.get('audit') else ''}")
             for key in ("register_wall_s", "sample_wall_s",
                         "round_wall_s"):
                 if key in row:
@@ -230,11 +232,13 @@ def compare(name: str, baseline: dict, quick: bool, repeats: int) -> list:
         # outcome records; the wire relay rows additionally gate the
         # closed-form coordinator byte counts (s-dependent, so only
         # compared when the baseline and fresh rows ran the same s)
-        fresh_rows = {(r["n"], r["cohort"], r.get("relay", "sim")): r
+        fresh_rows = {(r["n"], r["cohort"], r.get("relay", "sim"),
+                       bool(r.get("audit"))): r
                       for r in fresh.get("rows", [])}
         for base_r in baseline.get("rows", []):
             got_r = fresh_rows.get((base_r["n"], base_r["cohort"],
-                                    base_r.get("relay", "sim")))
+                                    base_r.get("relay", "sim"),
+                                    bool(base_r.get("audit"))))
             if got_r is None:
                 continue
             fields = ["counters_match", "election_subrounds",

@@ -15,13 +15,15 @@ bench is where that claim is priced:
 * ``counters_match``  — exact Eq. 3–6 per-cohort cross-check (gated as
   an exact field by ``bench_compare``, like the scenario outcomes).
 
-Relay-topology rows (DESIGN.md §13): two additional **wire** rows run
-one real multi-process round each under ``relay="hub"`` and
-``relay="tree"`` and price the coordinator link itself —
+Relay-topology rows (DESIGN.md §13): additional **wire** rows run one
+real multi-process round each under ``relay="hub"``, ``relay="tree"``,
+and ``relay="tree"`` with the norm-bound audit enabled (the escrow
+row), and price the coordinator link itself —
 ``coordinator_bytes_in/out`` must equal
 ``costmodel.coordinator_data_bytes`` *exactly* (``bytes_match`` is an
 exact-gated field), putting a committed number on the tree's claim:
-the upload fan-in leaves the coordinator's ingress entirely.
+the upload fan-in leaves the coordinator's ingress entirely, and the
+audit's per-dealer row escrow costs exactly its closed form on top.
 
 CLI::
 
@@ -125,17 +127,38 @@ def bench_row(n: int = 100_000, c: int = 1_000, m: int = 3, b: int = 10,
 
 
 def wire_relay_row(relay: str, n: int = 4, m: int = 3, b: int = 10,
-                   s: int = 256, seed: int = 1) -> dict:
+                   s: int = 256, seed: int = 1, vss: bool = False,
+                   degree: int | None = None,
+                   norm_bound: float | None = None) -> dict:
     """One real multi-process wire round under ``relay``, with the
     coordinator's measured ingress/egress asserted against the
     per-link closed forms (``costmodel.coordinator_data_bytes``)
-    exactly — a mismatched byte is an AssertionError, not a row."""
+    exactly — a mismatched byte is an AssertionError, not a row.
+
+    With ``vss``/``norm_bound`` set the row prices the audit layer on
+    top of the topology; under ``relay="tree"`` that includes the
+    per-dealer escrow legs (DEALER_ROWS from every non-final member to
+    the final verifier, REGION_COMMIT broadcast per-dealer), gated
+    against the region-aware closed forms exactly."""
+    from repro.core.committee import elect
     from repro.core.costmodel import CostParams, coordinator_data_bytes
     from repro.net import WireTransport
 
+    audit = vss and norm_bound is not None
     rng = np.random.RandomState(seed)
     flats = rng.randn(n, s).astype(np.float32)
-    with WireTransport(n, m=m, b=b, seed=seed, relay=relay) as tr:
+    kwargs: dict = {}
+    if vss:
+        # warm-up barrier keeps the Feldman JIT compile out of the
+        # measured round (same contract as the -m net VSS tests); the
+        # barrier has no deadline, so the round future must be patient
+        # enough for 4 party processes to JIT fresh shapes serially on
+        # a loaded single-core box
+        kwargs.update(scheme="shamir", shamir_degree=degree, vss=True,
+                      norm_bound=norm_bound, warmup=True,
+                      round_timeout_s=600.0)
+    with WireTransport(n, m=m, b=b, seed=seed, relay=relay,
+                       **kwargs) as tr:
         tr.elect(0)
         t0 = time.perf_counter()
         mean = np.asarray(tr.aggregate(flats, round_index=0))
@@ -144,15 +167,28 @@ def wire_relay_row(relay: str, n: int = 4, m: int = 3, b: int = 10,
         co = tr.coordinator
         got = (co.data_bytes_in, co.data_bytes_out)
         p = CostParams(n=n, e=1, s=s, m=m, b=b)
+        region_sizes = None
+        if relay == "tree" and audit:
+            from repro.fl.cohort import assign_home
+            committee = elect(n, m, b, seed).committee
+            home = assign_home(range(n), committee, seed, 0)
+            # one entry per member, final member last, summing to n
+            order = [w for w in committee if w != committee[-1]]
+            order.append(committee[-1])
+            region_sizes = [sum(1 for q in range(n) if home[q] == w)
+                            for w in order]
         want = coordinator_data_bytes(p, relay=relay,
-                                      chunk_elems=tr.cfg.chunk_elems)
+                                      chunk_elems=tr.cfg.chunk_elems,
+                                      vss=vss, degree=degree,
+                                      audit=audit,
+                                      region_sizes=region_sizes)
     if got != want:
         raise AssertionError(
             f"relay={relay!r}: coordinator (bytes_in, bytes_out) "
             f"{got} diverged from the closed form {want}")
     return {
         "n": n, "cohort": None, "m": m, "b": b, "s": s, "seed": seed,
-        "relay": relay,
+        "relay": relay, "vss": vss, "audit": audit,
         "round_wall_s": round(round_wall, 4),
         "coordinator_bytes_in": got[0],
         "coordinator_bytes_out": got[1],
@@ -168,7 +204,13 @@ def write_bench_json(path: str | None = "BENCH_cohort.json",
     s_wire = 64 if quick else 256
     rows = [bench_row(s=64 if quick else 256),
             wire_relay_row("hub", s=s_wire),
-            wire_relay_row("tree", s=s_wire)]
+            wire_relay_row("tree", s=s_wire),
+            # the escrow row (ISSUE 10): norm-bound audit composed with
+            # the tree relay — prices the DEALER_ROWS escrow stream and
+            # the per-dealer REGION_COMMIT broadcast against the
+            # region-aware closed forms
+            wire_relay_row("tree", s=s_wire, vss=True, degree=1,
+                           norm_bound=1e6)]
     out = {
         "generated_by": "benchmarks/cohort_bench.py",
         "schema_version": 1,

@@ -77,11 +77,14 @@ SCENARIOS: tuple[ScenarioConfig, ...] = (
                    dealers=(DealerConfig(party=2, mode="malformed",
                                          round_index=1),)),
     # wire backend: the same composed stressors over real TCP sockets
-    # and party worker processes
-    ScenarioConfig(name="churn_stragglers_wire", backend="wire",
+    # and party worker processes — at n=8 (twice the sim scenarios'
+    # default) so every committee member homes a multi-party region
+    # under relay="tree" elsewhere in the battery and the coordinator
+    # fan-out is exercised beyond the minimal 4-process federation
+    ScenarioConfig(name="churn_stragglers_wire", backend="wire", n=8,
                    epochs=3, churn=ChurnConfig(seed=3),
                    straggler=_STRAGGLER),
-    ScenarioConfig(name="poisoned_dealer_wire", backend="wire",
+    ScenarioConfig(name="poisoned_dealer_wire", backend="wire", n=8,
                    epochs=3, norm_bound=8.0,
                    dealers=(DealerConfig(party=3, mode="scale",
                                          round_index=1),)),

@@ -130,11 +130,6 @@ class ExperimentSpec:
         if self.relay not in ("hub", "tree"):
             raise ValueError(f"relay={self.relay!r} must be 'hub' or "
                              "'tree'")
-        if self.relay == "tree" and self.norm_bound is not None:
-            raise ValueError(
-                "norm_bound needs relay='hub': the per-dealer audit "
-                "rows live only on each party's home member under the "
-                "tree relay (see WireConfig)")
         if (self.frac_bits is None) != (self.clip is None):
             raise ValueError("frac_bits and clip come as a pair (both "
                              "set = custom codec, both None = the "

@@ -339,11 +339,32 @@ def summary_cohort(p: CostParams, c: int) -> dict:
 #                  │ exchange (m−1) × s │ broadcast n × s
 #
 # Under VSS the hub adds commitment relays (c·m × (deg+1)·2·s, in and
-# out) and the tree adds regional aggregate commitments ((m−1) ×
-# (deg+1)·2·s, in and out).  The headline: tree coordinator ingress for
-# Phase II drops from O(c·m·s) to O(m²·s) — *independent of c* (the
-# uploads never touch the hub), at the price of O(m·s) extra bandwidth
-# at each home member.
+# out) and the tree adds regional commitments: every home member with a
+# non-empty region broadcasts its regional aggregate commitments to
+# every *other* live member — m·(m−1) × (deg+1)·2·s, in and out — so
+# each receiver can bind the incoming REGION_SUMs to the sender's
+# dealers before folding them (the commitment-bound verification rule,
+# DESIGN.md §13).  The headline: tree coordinator ingress for Phase II
+# drops from O(c·m·s) to O(m²·s) — *independent of c* (the uploads
+# never touch the hub), at the price of O(m·s) extra bandwidth at each
+# home member.
+#
+# With the norm-bound audit on (``audit=True``; needs ``region_sizes``
+# — the per-member region cardinalities, final member last, because
+# the escrow legs are region-size-dependent):
+#
+# * REGION_COMMIT carries the *per-dealer concatenation* instead of
+#   the aggregate — (m−1) messages of |region_h|·(deg+1)·2·s per
+#   sender h (receivers still fold the aggregate locally; the final
+#   member needs dealer granularity to re-aggregate over honest
+#   dealers post-blame);
+# * each non-final home member h with a non-empty region escrows its
+#   per-dealer share rows to the final member — one DEALER_ROWS
+#   message of |region_h|·m·s elements (all m member evaluation
+#   points; phase2_audit phase), in and out.
+#
+# The hub audit leg ((m−1) messages of c·s — phase2_audit_*) also
+# crosses the coordinator and is priced under ``audit=True`` there.
 
 FRAME_OVERHEAD_BYTES = 36    # 4-byte length prefix + 32-byte header
 ELEM_BYTES = 4               # uint32 and float32 elements alike
@@ -366,22 +387,56 @@ def message_wire_bytes(elems: int, chunk_elems: int) -> int:
 def coordinator_round_legs(p: CostParams, *, c: int | None = None,
                            relay: str = "hub", subrounds: int = 1,
                            vss: bool = False,
-                           degree: int | None = None) -> dict:
+                           degree: int | None = None,
+                           audit: bool = False,
+                           region_sizes=None) -> dict:
     """``{"in": [(msg_num, elems), ...], "out": [...]}`` — the data
     legs crossing the coordinator in one honest round (see the block
     comment for the leg inventory and its preconditions)."""
     if relay not in ("hub", "tree"):
         raise ValueError(f"relay={relay!r} must be 'hub' or 'tree'")
+    if audit and not vss:
+        raise ValueError("audit=True needs vss=True (unverified rows "
+                         "cannot carry a blame decision)")
     c = p.n if c is None else int(c)
     votes = (subrounds * 2 * c * (c - 1), p.b)
     if relay == "hub":
         fan_in = [(c * p.m, p.s)]
         if vss:
             fan_in.append((c * p.m, vss_commit_elems(p, degree)))
+        if audit:
+            fan_in.append((p.m - 1, c * p.s))       # DEALER_ROWS
     else:
-        fan_in = [(p.m * (p.m - 1), p.s)]
-        if vss:
-            fan_in.append((p.m - 1, vss_commit_elems(p, degree)))
+        if region_sizes is None:
+            if audit:
+                raise ValueError(
+                    "audit=True under relay='tree' needs region_sizes "
+                    "(the escrow legs are region-size-dependent)")
+            # bench precondition: every member's region non-empty
+            fan_in = [(p.m * (p.m - 1), p.s)]
+            if vss:
+                fan_in.append((p.m * (p.m - 1),
+                               vss_commit_elems(p, degree)))
+        else:
+            sizes = [int(x) for x in region_sizes]
+            if len(sizes) != p.m or sum(sizes) != c:
+                raise ValueError(
+                    f"region_sizes={sizes} must have one entry per "
+                    f"member (m={p.m}, final member last) summing to "
+                    f"the uploader count c={c}")
+            fan_in = []
+            for k, size in enumerate(sizes):
+                if size < 1:
+                    continue
+                fan_in.append((p.m - 1, p.s))        # REGION_SUM
+                if vss:
+                    per_msg = (size * vss_commit_elems(p, degree)
+                               if audit
+                               else vss_commit_elems(p, degree))
+                    fan_in.append((p.m - 1, per_msg))  # REGION_COMMIT
+                if audit and k != p.m - 1:
+                    # escrowed per-dealer rows, all m member points
+                    fan_in.append((1, size * p.m * p.s))
     exchange = (p.m - 1, p.s)
     legs_in = [votes, *fan_in, exchange, (1, p.s)]          # + RESULT
     legs_out = [votes, (c, p.s), *fan_in, exchange,         # + INPUT
@@ -392,13 +447,16 @@ def coordinator_round_legs(p: CostParams, *, c: int | None = None,
 def coordinator_data_bytes(p: CostParams, *, c: int | None = None,
                            relay: str = "hub", subrounds: int = 1,
                            chunk_elems: int, vss: bool = False,
-                           degree: int | None = None) -> tuple[int, int]:
+                           degree: int | None = None,
+                           audit: bool = False,
+                           region_sizes=None) -> tuple[int, int]:
     """Exact ``(data_bytes_in, data_bytes_out)`` at the coordinator for
     one honest round — equal (not approximate) to what
     ``Coordinator.data_bytes_in/out`` measure under the same config."""
     legs = coordinator_round_legs(p, c=c, relay=relay,
                                   subrounds=subrounds, vss=vss,
-                                  degree=degree)
+                                  degree=degree, audit=audit,
+                                  region_sizes=region_sizes)
     return tuple(
         sum(num * message_wire_bytes(elems, chunk_elems)
             for num, elems in legs[key])

@@ -202,6 +202,35 @@ def resolve_outcome(members: set, dropped: set, straggled: set, *,
                         blamed=blamed, blamed_dealers=blamed_dealers)
 
 
+def resolve_region_blames(accusations: dict, live_members) -> set:
+    """Strict-majority quorum over tree-relay REGION_SUM accusations.
+
+    Under ``relay="tree"`` every receiving member verifies each
+    incoming REGION_SUM against the sender's regional Feldman
+    commitments and accuses the *sender* (kind="region" BLAME) on
+    mismatch.  A single accuser must never be able to condemn an
+    honest member (a malicious receiver could frame anyone), so a
+    member is condemned only when a strict majority of the *other*
+    live members accuse it:
+
+        |accusers ∩ (live − {accused})| · 2 > |live| − 1
+
+    Self-accusations are discarded.  With ``m = 3`` live members that
+    means both peers must agree; a lone (possibly malicious) accuser
+    condemns nobody and the deadline/abort backstop still applies.
+    Shared by the wire coordinator and the property tests — the quorum
+    decision lives exactly once.
+    """
+    live = {int(w) for w in live_members}
+    condemned = set()
+    for accused, accusers in accusations.items():
+        accused = int(accused)
+        voters = {int(a) for a in accusers} & (live - {accused})
+        if len(voters) * 2 > len(live) - 1:
+            condemned.add(accused)
+    return condemned
+
+
 def _enforce_committee_quorum(alive, dropped, straggled, members,
                               latency_s, committee: Iterable[int],
                               threshold: int, resurrect: bool = True):

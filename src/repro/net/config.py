@@ -52,7 +52,10 @@ class WireConfig:
     #: members forward their per-dealer rows to the final member, which
     #: reconstructs each dealer's decoded update and blames the ones
     #: whose norm exceeds the bound.  Requires vss (the rows must be
-    #: commitment-verified before they can carry blame).
+    #: commitment-verified before they can carry blame).  Composes with
+    #: ``relay="tree"``: home members escrow the per-dealer rows they
+    #: fold and stream them to the final member during PHASE2_AUDIT
+    #: (DESIGN.md §13).
     norm_bound: float | None = None
     #: per-round cohort size (DESIGN.md §12): ``n`` becomes the
     #: registry and each round elects over / uploads from a seeded
@@ -74,6 +77,14 @@ class WireConfig:
     #: members forward only regional partial sums — coordinator ingress
     #: drops from O(c·m·s) to O(m²·s), independent of the cohort size
     relay: str = "hub"
+    #: pre-round compile warm-up barrier: before each round's stage
+    #: monitors arm, the coordinator sends every live party a WARMUP
+    #: frame carrying the round's exact shapes, parties JIT the
+    #: round's kernels on dummy data and ack — so first-use JIT
+    #: compilation (Feldman gpow ladders, per-point-set verify_shares
+    #: recompiles) never burns the straggler deadline (the
+    #: deadline_s=None footgun of the VSS wire tests)
+    warmup: bool = False
 
     def __post_init__(self):
         _check_chunk_elems(self.chunk_elems)
@@ -112,11 +123,6 @@ class WireConfig:
         if self.relay not in ("hub", "tree"):
             raise ValueError(
                 f"relay={self.relay!r} must be 'hub' or 'tree'")
-        if self.relay == "tree" and self.norm_bound is not None:
-            raise ValueError(
-                "norm_bound needs relay='hub': the per-dealer audit rows "
-                "live only on each party's home member in tree mode, so "
-                "non-final members cannot forward other regions' rows")
 
     def fp(self) -> FixedPointConfig:
         return FixedPointConfig(frac_bits=self.frac_bits, clip=self.clip,
@@ -168,7 +174,8 @@ class WireConfig:
                                 cohort: int | None = None,
                                 pipeline: bool = False,
                                 lease_s: float | None = 30.0,
-                                relay: str = "hub"
+                                relay: str = "hub",
+                                warmup: bool = False
                                 ) -> "WireConfig":
         """Build from the simulation transports' kwarg vocabulary."""
         if fp is None:
@@ -184,4 +191,5 @@ class WireConfig:
                    deadline_s=deadline_s, vss=vss,
                    reelect_each_round=reelect_each_round,
                    norm_bound=norm_bound, cohort=cohort,
-                   pipeline=pipeline, lease_s=lease_s, relay=relay)
+                   pipeline=pipeline, lease_s=lease_s, relay=relay,
+                   warmup=warmup)

@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import committee as committee_mod
 from repro.fl.cohort import assign_home, sample_cohort
-from repro.fl.faults import resolve_outcome
+from repro.fl.faults import resolve_outcome, resolve_region_blames
 from repro.fl.transport import Network
 
 from . import codec
@@ -151,6 +151,16 @@ class Coordinator:
         self._round_home: dict[int, int] = {}
         self._region_lost: set[int] = set()
         self._round_digests: set[int] = set()
+        #: region-BLAME tally: ``accused -> {accusers}`` — receiving
+        #: members accuse the *sender* of a REGION_SUM that fails its
+        #: regional commitments; condemnation needs the strict
+        #: majority of ``fl.faults.resolve_region_blames`` so a single
+        #: malicious receiver cannot frame an honest sender
+        self._region_accusations: dict[int, set[int]] = {}
+        #: the in-flight aggregation round (UPLOAD_PROBE stamping)
+        self._round_index: int | None = None
+        #: parties that acked this round's WARMUP barrier
+        self._warm_acks: set[int] = set()
         self._server: asyncio.Server | None = None
         self._conns: dict[int, _Conn] = {}
         self._event = asyncio.Event()
@@ -301,8 +311,27 @@ class Coordinator:
                     continue
                 mon.eof(conn.pid)
             self.log(f"party {conn.pid} disconnected (EOF)")
+            if defer:
+                self._probe_home(conn.pid)
             self._lose_region(conn.pid)
         self._pulse()
+
+    def _probe_home(self, pid: int) -> None:
+        """Fail-fast upload verdict for a deferred EOF (tree relay).
+
+        ``pid``'s coordinator socket died but its upload verdict lives
+        with its home member — probe it NOW instead of waiting for the
+        stage deadline.  The member answers UPLOAD_DONE{done:false}
+        only for a party it *never saw* on its region listener; a
+        party that did connect settles through its own region stream
+        (queued frames complete it, or the EOF sentinel reports the
+        death), so the probe cannot contradict in-flight evidence."""
+        home = self._round_home.get(pid)
+        if home is None or self._round_index is None:
+            return
+        asyncio.ensure_future(self._send(home, Frame(
+            MsgType.UPLOAD_PROBE, round=self._round_index, dst=home,
+            payload=codec.encode_json({"party": pid}))))
 
     def _defer_upload_verdict(self, pid: int) -> bool:
         """Tree relay: a participant's coordinator-socket EOF proves
@@ -312,8 +341,11 @@ class Coordinator:
         deterministically with UPLOAD_DONE (complete — the frames beat
         the FIN on the region socket's FIFO) or UPLOAD_DONE{done:false}
         (its region stream died incomplete).  A party that died before
-        ever reaching its home member settles via the stage deadline —
-        the one case tree EOF handling is weaker than the hub's."""
+        ever reaching its home member is settled by the coordinator's
+        own UPLOAD_PROBE (``_probe_home``): the member answers a
+        fail-fast dropout verdict for a party it never saw, so tree
+        EOF handling matches the hub's immediacy; the stage deadline
+        remains only as the backstop for the connect/probe race."""
         if self.cfg.relay != "tree" or not self._round_home:
             return False
         home = self._round_home.get(pid)
@@ -389,6 +421,8 @@ class Coordinator:
             meter.feed(frame)
             if done is not None:
                 self._result_mean = done
+        elif frame.msg_type == MsgType.WARMUP_ACK:
+            self._warm_acks.add(conn.pid)
         elif frame.msg_type == MsgType.UPLOAD_DONE:
             self._on_upload_done(conn, frame)
         elif frame.msg_type == MsgType.METER:
@@ -425,7 +459,8 @@ class Coordinator:
             raise ProtocolError(
                 f"malformed BLAME payload from party {pid}: {e}")
         committee = set(self.committee or ())
-        if kind not in ("member", "dealer", "poison") or not blamed:
+        if (kind not in ("member", "dealer", "poison", "region")
+                or not blamed):
             raise ProtocolError(
                 f"BLAME from party {pid} with kind={kind!r} and "
                 f"blamed={sorted(blamed)}")
@@ -465,6 +500,28 @@ class Coordinator:
             self._round_blamed_dealers |= blamed
             self.log(f"member {pid} blames dealers {sorted(blamed)} "
                      f"for poisoned updates (round {frame.round})")
+        elif kind == "region":
+            # tree relay (DESIGN.md §13): a receiving member's
+            # commitment check failed on an incoming REGION_SUM and it
+            # accuses the *sender*.  Any committee member may accuse
+            # (each verifies the sums it receives), but one accuser
+            # condemns nobody — condemnation needs the strict majority
+            # resolved at round end (fl.faults.resolve_region_blames),
+            # so a malicious receiver cannot frame an honest sender.
+            if pid not in committee:
+                raise ProtocolError(
+                    f"non-member party {pid} sent a region BLAME")
+            if not blamed <= committee:
+                raise ProtocolError(
+                    f"region BLAME names non-committee parties "
+                    f"{sorted(blamed - committee)}")
+            if pid in blamed:
+                raise ProtocolError(
+                    f"party {pid} sent a region BLAME naming itself")
+            for w in blamed:
+                self._region_accusations.setdefault(w, set()).add(pid)
+            self.log(f"member {pid} accuses {sorted(blamed)} of "
+                     f"tampered REGION_SUMs (round {frame.round})")
         else:
             # a dealer whose share fails its own commitments is
             # protocol-fatal: members cannot unilaterally shrink the
@@ -892,6 +949,9 @@ class Coordinator:
         self._round_home = {}
         self._region_lost = set()
         self._round_digests = set()
+        self._region_accusations = {}
+        self._round_index = round_index
+        self._warm_acks = set()
         self._result_mean = None
         self._meters.setdefault(
             round_index, MessageMeter(self.net, round_index=round_index))
@@ -908,6 +968,37 @@ class Coordinator:
         if pre_dead:
             self.log(f"parties {pre_dead} already dead at round start")
             self._round_dropped |= set(pre_dead)
+
+        if cfg.warmup:
+            # pre-round compile warm-up barrier: every live party JITs
+            # the round's exact kernel shapes on dummy data BEFORE any
+            # stage monitor arms, so first-use compilation (Feldman
+            # gpow ladders, per-point-set verify_shares recompiles)
+            # never burns the straggler deadline.  No deadline on the
+            # acks — the barrier exists precisely to absorb unbounded
+            # JIT time; a party dying mid-warm-up is tolerated (its
+            # EOF shrinks the ack set the barrier waits for).
+            warm_body = {"d": d, "party_ids": ids,
+                         "committee": list(self.committee)}
+            if cfg.relay == "tree":
+                warm_body["home"] = {
+                    str(p): h for p, h in assign_home(
+                        ids, self.committee, cfg.seed,
+                        round_index).items()}
+            warm_payload = codec.encode_json(warm_body)
+            warm_ids = self._live(range(cfg.n))
+            for pid in warm_ids:
+                await self._send(pid, Frame(
+                    MsgType.WARMUP, round=round_index, dst=pid,
+                    payload=warm_payload))
+
+            def warmed():
+                live_now = {p for p in warm_ids
+                            if p in self._conns
+                            and self._conns[p].alive}
+                return live_now <= self._warm_acks
+
+            await self._wait(warmed, None, what="warm-up acks")
 
         # stage monitors registered BEFORE any stage frame goes out so
         # a mid-stage EOF is never missed
@@ -1067,6 +1158,26 @@ class Coordinator:
                     f"members {sorted(missing)} never shipped a METER "
                     "digest before the RESULT assembled")
 
+        if self._region_accusations:
+            # every accuser's region BLAME precedes its CHAIN_SUM on
+            # its own FIFO socket and the RESULT causally depends on
+            # those sums, so by now the tally is complete — resolve
+            # the strict-majority quorum.  A condemned member's
+            # REGION_SUM was excluded wholesale by the receivers, so
+            # its region's dealers never entered the fold: they are
+            # reported dropped (data out of the round) alongside the
+            # member's own blame.
+            condemned = resolve_region_blames(
+                self._region_accusations, live_members)
+            if condemned:
+                self._round_blamed |= condemned
+                lost = {p for p, h in self._round_home.items()
+                        if h in condemned
+                        and p in set(included)} - condemned
+                dropped |= lost
+                self.log(f"region quorum condemns {sorted(condemned)}; "
+                         f"their region dealers {sorted(lost)} are out "
+                         "of the round")
         if self._round_blamed or self._round_blamed_dealers:
             # the verifier's BLAME landed before its RESULT (same
             # socket, FIFO): re-fold the outcome with the blamed sets —

@@ -38,11 +38,18 @@ Test hooks: ``--die-after-upload R`` makes the process exit abruptly
 (``os._exit``) right after sending its round-``R`` share uploads —
 before its member READY — which is how the dropout tests kill a
 committee member mid-Phase-II deterministically (the coordinator sees
-EOF, no wall-clock races).  ``--tamper MODE --tamper-round R`` makes a
-*committee member* corrupt its round-``R`` partial sum (``flip`` =
-bit-flipped row, ``wrong_poly`` = a row from a polynomial nobody
-committed to, ``replay`` = its round ``R-1`` row) — the adversary of
-the VSS battery (``tests/test_vss_adversarial.py``).
+EOF, no wall-clock races).  ``--die-before-upload R`` exits right
+after decoding round ``R``'s ROUND_START, before any share frame — the
+party never reaches its home member's region listener, which is the
+one dropout the tree relay can only settle through the coordinator's
+UPLOAD_PROBE fail-fast (DESIGN.md §13).  ``--tamper MODE
+--tamper-round R`` makes a *committee member* corrupt its round-``R``
+partial sum (``flip`` = bit-flipped row, ``wrong_poly`` = a row from a
+polynomial nobody committed to, ``replay`` = its round ``R-1`` row) —
+the adversary of the VSS battery (``tests/test_vss_adversarial.py``).
+Under ``relay="tree"`` the flip/replay modes corrupt the member's
+*outgoing* REGION_SUMs instead, so the receivers' commitment check
+(not the final member's) is what draws blame onto the sender.
 """
 
 from __future__ import annotations
@@ -100,6 +107,7 @@ class _RegionDead(Exception):
 class PartyWorker:
     def __init__(self, host: str, port: int, party_id: int, *,
                  die_after_upload: int | None = None,
+                 die_before_upload: int | None = None,
                  tamper: str | None = None,
                  tamper_round: int | None = None,
                  poison: str | None = None,
@@ -108,6 +116,7 @@ class PartyWorker:
         self.port = port
         self.pid = int(party_id)
         self.die_after_upload = die_after_upload
+        self.die_before_upload = die_before_upload
         if tamper is not None and tamper not in TAMPER_MODES:
             raise ValueError(
                 f"unknown tamper mode {tamper!r}; expected one of "
@@ -133,6 +142,9 @@ class PartyWorker:
         self.session = 0
         self._tally: np.ndarray | None = None
         self._prev_acc: np.ndarray | None = None
+        #: previous round's honest regional sums (``{dst_member: row}``)
+        #: — the replay tamper hook's material under the tree relay
+        self._prev_region_acc: dict | None = None
         self.last_mean: np.ndarray | None = None
         #: tree relay (DESIGN.md §13): the always-on region listener
         #: (its address is advertised in HELLO so this party can serve
@@ -142,6 +154,15 @@ class PartyWorker:
         self._region_addr: tuple[str, int] | None = None
         self._region_queue: asyncio.Queue | None = None
         self._region_out: dict = {}
+        #: parties that ever HELLO'd this member's region listener —
+        #: an UPLOAD_PROBE for a party in this set is ignored (its
+        #: frames or its EOF sentinel will settle the verdict); only a
+        #: party that *never connected* draws the fail-fast
+        #: UPLOAD_DONE{done:false} answer
+        self._region_seen: set[int] = set()
+        #: the current round's :class:`RegionIngest` (probe answers
+        #: consult its ``done`` set)
+        self._cur_ingest: RegionIngest | None = None
 
     # -- framed IO --------------------------------------------------------
 
@@ -160,9 +181,27 @@ class PartyWorker:
                 raise TruncatedFrameError("coordinator closed the stream")
             if frame.msg_type == MsgType.SHUTDOWN:
                 raise _Shutdown()
+            if frame.msg_type == MsgType.UPLOAD_PROBE:
+                # fail-fast upload verdict (tree relay): answered via
+                # the region queue so the verdict serializes after any
+                # frames/EOF the probed party already delivered
+                asyncio.ensure_future(self._enqueue_probe(frame))
+                continue
             if frame.msg_type in types:
                 return frame
             self._pending[frame.msg_type].append(frame)
+
+    async def _enqueue_probe(self, frame: Frame) -> None:
+        """Queue an UPLOAD_PROBE behind the region stream's events.
+
+        A brief yield first: a probed party that connected moments
+        before dying may have its HELLO sitting in the kernel buffer
+        with the accept callback not yet run — give the event loop a
+        beat so ``_region_seen`` reflects every connection that beat
+        the probe onto the wire (the residual race is closed by the
+        stage deadline, DESIGN.md §13)."""
+        await asyncio.sleep(0.05)
+        await self._region_queue.put(("probe", frame, 0, None))
 
     async def _send(self, frame: Frame) -> None:
         if self.session and frame.session == 0:
@@ -299,6 +338,15 @@ class PartyWorker:
                      for k, v in (body.get("addrs") or {}).items()}
             roster = {int(k): int(v)
                       for k, v in (body.get("sessions") or {}).items()}
+
+        if self.die_before_upload == round_index:
+            # TEST HOOK: die before the first share frame — under the
+            # tree relay this party never reaches its home member's
+            # region listener, so only the coordinator's UPLOAD_PROBE
+            # fail-fast (not the stage deadline) can settle its verdict
+            self.log(f"test hook: dying before round {round_index} "
+                     "upload")
+            os._exit(1)
 
         if participant:
             got = await self._collect(asm, MsgType.INPUT, {-1})
@@ -557,6 +605,92 @@ class PartyWorker:
             cleaned[w] = acc
         return honest, cleaned
 
+    async def _audit_tree_dealers(self, round_index: int, rows, order,
+                                  committee, good_inc, region_map,
+                                  ingest: RegionIngest, bad, asm, d):
+        """Final-member norm-bound audit over the tree (DESIGN.md §13).
+
+        The tree twin of :meth:`_audit_dealers`: the per-dealer rows
+        live on each dealer's *home member*, so every non-final member
+        escrowed its region's ``[|region|·m·d]`` matrix (DEALER_ROWS,
+        phase PHASE2_AUDIT, included-order × committee-order).  The
+        final member checks the escrow refolds to every surviving
+        member's chain row (inconsistent evidence is protocol-fatal),
+        reconstructs each dealer's decoded update from its escrowed
+        rows, blames norm violators (kind="poison"), and returns
+        ``(honest_dealers, member_rows)`` refolded over the honest
+        dealers — bit-identical to the hub audit because the modular
+        adds regroup freely.  Regions condemned by the REGION_SUM
+        check (``bad``) are already out wholesale: their escrow is
+        collected (it is on the wire regardless) and discarded.
+        """
+        cfg = self.cfg
+        escrow_senders = {h for h in order
+                          if h != self.pid and region_map[h]}
+        matrices = {}
+        if escrow_senders:
+            matrices = await self._collect(
+                asm, MsgType.DEALER_ROWS, escrow_senders)
+        per_dealer: dict[tuple[int, int], np.ndarray] = {}
+        for p in region_map.get(self.pid, []):
+            for w in committee:
+                per_dealer[(p, w)] = ingest.rows[(p, w)]
+        m = len(committee)
+        for h in sorted(escrow_senders):
+            reg = region_map[h]
+            mat = matrices[h].astype(np.uint32, copy=False)
+            if mat.shape[0] != len(reg) * m * d:
+                raise ProtocolError(
+                    f"member {h} escrowed {mat.shape[0]} words, "
+                    f"expected {len(reg) * m * d}")
+            if h in bad:
+                continue
+            mat = mat.reshape(len(reg), m, d)
+            for i, p in enumerate(reg):
+                for j, w in enumerate(committee):
+                    per_dealer[(p, w)] = mat[i, j]
+        good_order = [w for w in order if w not in bad]
+        for w in good_order:
+            refold = np.zeros(d, dtype=np.uint32)
+            for p in good_inc:
+                refold = self._fold(refold, per_dealer[(p, w)])
+            if not np.array_equal(refold, rows[w]):
+                raise ProtocolError(
+                    f"escrowed per-dealer rows do not refold to "
+                    f"member {w}'s partial-sum row (inconsistent "
+                    "audit evidence)")
+        pts = (None if len(good_order) == len(committee) else
+               tuple(committee.index(w) + 1 for w in good_order))
+        blamed = []
+        for p in good_inc:
+            stack = np.stack([per_dealer[(p, w)] for w in good_order])
+            code = self.agg.reconstruct_sum(stack, points=pts)
+            decoded = self.agg.fp.decode_mean(code, 1)
+            if update_norm(decoded) > cfg.norm_bound:
+                blamed.append(p)
+        if blamed:
+            self.log(f"round {round_index}: blaming dealers {blamed} "
+                     f"(norm bound {cfg.norm_bound} exceeded)")
+            await self._send(Frame(
+                MsgType.BLAME, round=round_index, src=self.pid,
+                payload=codec.encode_json(
+                    {"kind": "poison", "blamed": blamed,
+                     "round": round_index})))
+        honest = [p for p in good_inc if p not in blamed]
+        if not honest:
+            raise ProtocolError(
+                f"the norm audit blamed every dealer {good_inc} — no "
+                "honest update left to aggregate")
+        if not blamed:
+            return honest, rows
+        cleaned = dict(rows)
+        for w in good_order:
+            acc = np.zeros(d, dtype=np.uint32)
+            for p in honest:
+                acc = self._fold(acc, per_dealer[(p, w)])
+            cleaned[w] = acc
+        return honest, cleaned
+
     async def _member_duties(self, round_index: int, ids, committee, d,
                              asm: MessageAssembler) -> None:
         cfg = self.cfg
@@ -721,6 +855,24 @@ class PartyWorker:
                     src=self.pid, payload=codec.encode_json(
                         {"party": src, "done": False})))
             return
+        if kind == "probe":
+            # coordinator UPLOAD_PROBE: its socket EOF'd a party homed
+            # here.  A party that ever connected settles through its
+            # own stream (queued frames complete it, or the EOF
+            # sentinel reports it); one that never connected can only
+            # settle here — answer its dropout verdict immediately
+            # instead of letting the stage deadline expire
+            probe: Frame = payload
+            if probe.round != round_index:
+                return
+            src = int(codec.decode_json(probe.payload)["party"])
+            if (src in ingest.roster and src not in ingest.done
+                    and src not in self._region_seen):
+                await self._send(Frame(
+                    MsgType.UPLOAD_DONE, round=round_index,
+                    src=self.pid, payload=codec.encode_json(
+                        {"party": src, "done": False})))
+            return
         frame: Frame = payload
         try:
             done_src = ingest.feed(frame, session)
@@ -755,13 +907,30 @@ class PartyWorker:
         leg of the per-link closed form), and joins the same
         chain/reconstruct tail the hub path runs — modular adds and
         the commitment group product are order-free, so the mean and
-        the VSS verdicts stay bit-identical to hub and sim."""
+        the VSS verdicts stay bit-identical to hub and sim.
+
+        Malicious-member hardening (DESIGN.md §13): under VSS every
+        member also broadcasts its *regional aggregate commitments*
+        (REGION_COMMIT, to every other live member, the matching
+        m·(m−1) leg), and each receiver verifies every incoming
+        REGION_SUM against the sender's commitments at its own
+        evaluation point *before* folding.  A sum that fails draws a
+        BLAME kind="region" on the *sender*, the receiver excludes that
+        region (sum and dealers) from its fold, and the round degrades
+        to sub-threshold reconstruction over the surviving regions —
+        the tamperer is evicted instead of the round aborting with
+        every member blamed.  Under ``norm_bound`` the commitments
+        travel per-dealer and every non-final member escrows its
+        region's per-dealer rows to the final member (DEALER_ROWS,
+        phase PHASE2_AUDIT), so the hub's norm audit composes with the
+        tree."""
         cfg = self.cfg
         deg = cfg.degree()
         commit_words = d * (deg + 1) * 2
         ingest = RegionIngest(
             round_index=round_index, roster=roster,
             expect_msgs=cfg.m * (2 if cfg.vss else 1))
+        self._cur_ingest = ingest
         region = sorted(p for p in ids if home.get(p) == self.pid)
 
         commit = None
@@ -848,16 +1017,51 @@ class PartyWorker:
             payload=codec.encode_json({"counters": ingest.digest()})))
 
         def region_of(h: int) -> list[int]:
-            return [p for p in included if home.get(p) == h]
+            return sorted(p for p in included if home.get(p) == h)
 
+        audit = cfg.norm_bound is not None
         region_acc = {w: np.zeros(d, dtype=np.uint32)
                       for w in committee}
         for p in region_inc:
             for w in committee:
                 region_acc[w] = self._fold(region_acc[w],
                                            ingest.rows[(p, w)])
-        # ship every other live member its regional sum, then collect
-        # theirs: member w's full sum is the fold of all regional sums
+        # TEST HOOK: the tree VSS adversary corrupts its *outgoing*
+        # regional sums — every receiver's commitment check then draws
+        # the blame onto this SENDER (kind="region"), which is the
+        # hardening the adversarial battery pins.  wrong_poly keeps the
+        # hub's own-row semantics (applied below), as does any mode
+        # when this member's region is empty.
+        region_tamper = (self.tamper in ("flip", "replay")
+                         and self.tamper_round == round_index
+                         and bool(region_inc))
+        out_acc = region_acc
+        if region_tamper:
+            self.log(f"test hook: tampering round {round_index} "
+                     f"outgoing REGION_SUMs ({self.tamper})")
+            if self.tamper == "flip":
+                out_acc = {w: region_acc[w] ^ np.uint32(TAMPER_FLIP_MASK)
+                           for w in committee}
+            else:                                           # replay
+                prev = self._prev_region_acc
+                if not prev or any(
+                        committee.index(w) + 1 not in prev
+                        or prev[committee.index(w) + 1].shape[0] != d
+                        for w in committee):
+                    raise ProtocolError(
+                        "replay tamper hook needs a previous round's "
+                        "regional sums of the same model size")
+                out_acc = {w: prev[committee.index(w) + 1]
+                           for w in committee}
+        # keyed by evaluation point so the replay hook survives a
+        # committee change between rounds (points are positional)
+        self._prev_region_acc = {committee.index(w) + 1: region_acc[w]
+                                 for w in committee}
+        # ship every other live member its regional sum — and, under
+        # VSS, this region's commitments (REGION_COMMIT): the pointwise
+        # product over the region's dealers normally, the per-dealer
+        # concatenation when the norm audit needs dealer granularity.
+        # Member w's full sum is the fold of all regional sums
         # addressed to it (exact modular adds — order-free, so the
         # regrouping is bit-identical to the hub's per-dealer fold)
         if region_inc:
@@ -866,59 +1070,109 @@ class PartyWorker:
                     continue
                 await self._send_chunked(
                     MsgType.REGION_SUM, w, round_index=round_index,
-                    phase=Phase.WIRE_REGION, arr=region_acc[w],
+                    phase=Phase.WIRE_REGION, arr=out_acc[w],
                     dtype_code=Wiredtype.UINT32)
+        my_dealer_commits = None
+        my_agg = None
+        if cfg.vss and region_inc:
+            my_dealer_commits = np.stack(
+                [ingest.commits[(p, self.pid)].reshape(d, deg + 1, 2)
+                 for p in region_inc])
+            my_agg = np.asarray(
+                vss.aggregate_commits(my_dealer_commits),
+                dtype=np.uint32)
+            out_commits = (my_dealer_commits if audit
+                           else my_agg).reshape(-1)
+            for w in live_members:
+                if w == self.pid:
+                    continue
+                await self._send_chunked(
+                    MsgType.REGION_COMMIT, w, round_index=round_index,
+                    phase=Phase.WIRE_REGION, arr=out_commits,
+                    dtype_code=Wiredtype.UINT32)
+        # escrow leg (norm audit over the tree, DESIGN.md §13): the
+        # per-dealer rows live only on each dealer's home member, so
+        # every non-final member streams its region's matrix to the
+        # final member — one [|region|·m·d]-word DEALER_ROWS message,
+        # included-order × committee-order
+        final = live_members[-1]
+        if audit and region_inc and self.pid != final:
+            await self._send_chunked(
+                MsgType.DEALER_ROWS, final, round_index=round_index,
+                phase=Phase.PHASE2_AUDIT,
+                arr=np.concatenate(
+                    [ingest.rows[(p, w)] for p in region_inc
+                     for w in committee]),
+                dtype_code=Wiredtype.UINT32)
+
         senders = {h for h in live_members
                    if h != self.pid and region_of(h)}
-        acc = region_acc[self.pid]
+        got: dict[int, np.ndarray] = {}
         if senders:
             got = await self._collect(asm, MsgType.REGION_SUM, senders)
+        bad: list[int] = []
+        peer_agg: dict[int, np.ndarray] = {}
+        peer_dealer_commits: dict[int, np.ndarray] = {}
+        if cfg.vss and senders:
+            cgot = await self._collect(asm, MsgType.REGION_COMMIT,
+                                       senders)
+            from repro.kernels.verify_shares import verify_shares
+            my_point = committee.index(self.pid) + 1
             for h in sorted(senders):
-                acc = self._fold(acc, got[h].astype(np.uint32,
-                                                    copy=False))
-
-        agg_commits = None
-        if cfg.vss:
-            # regional aggregate commitments flow to the final member,
-            # which multiplies them — the group product over dealers is
-            # commutative, so the per-region regrouping reproduces the
-            # hub's all-at-once aggregate exactly
-            final = live_members[-1]
-            reg_agg = None
-            if region_inc:
-                reg_agg = np.asarray(vss.aggregate_commits(np.stack(
-                    [ingest.commits[(p, self.pid)].reshape(
-                        d, deg + 1, 2) for p in region_inc])),
-                    dtype=np.uint32)
-            if self.pid != final:
-                if reg_agg is not None:
-                    await self._send_chunked(
-                        MsgType.REGION_COMMIT, final,
-                        round_index=round_index,
-                        phase=Phase.WIRE_REGION,
-                        arr=reg_agg.reshape(-1),
-                        dtype_code=Wiredtype.UINT32)
-            else:
-                commit_senders = {h for h in live_members
-                                  if h != final and region_of(h)}
-                parts = [] if reg_agg is None else [reg_agg]
-                if commit_senders:
-                    cgot = await self._collect(
-                        asm, MsgType.REGION_COMMIT, commit_senders)
-                    parts += [cgot[h].astype(np.uint32, copy=False)
-                              .reshape(d, deg + 1, 2)
-                              for h in sorted(commit_senders)]
-                if not parts:
-                    raise ProtocolError(
-                        "no regional commitments reached the final "
-                        "member — an empty included set should have "
-                        "aborted upstream")
-                agg_commits = np.asarray(
-                    vss.aggregate_commits(np.stack(parts)),
-                    dtype=np.uint32)
+                buf = cgot[h].astype(np.uint32, copy=False)
+                r_h = len(region_of(h))
+                if audit:
+                    if buf.shape[0] != r_h * commit_words:
+                        raise ProtocolError(
+                            f"member {h} REGION_COMMIT carries "
+                            f"{buf.shape[0]} words, expected "
+                            f"{r_h * commit_words} (per-dealer)")
+                    peer_dealer_commits[h] = buf.reshape(
+                        r_h, d, deg + 1, 2)
+                    peer_agg[h] = np.asarray(vss.aggregate_commits(
+                        peer_dealer_commits[h]), dtype=np.uint32)
+                else:
+                    if buf.shape[0] != commit_words:
+                        raise ProtocolError(
+                            f"member {h} REGION_COMMIT carries "
+                            f"{buf.shape[0]} words, expected "
+                            f"{commit_words}")
+                    peer_agg[h] = buf.reshape(d, deg + 1, 2)
+                # the hardening rule (DESIGN.md §13): an incoming
+                # regional sum must be a valid share, at this member's
+                # own evaluation point, of the secret its region's
+                # commitments bind — flip/replay/forgery all break the
+                # pairing, and the blame lands on the sender
+                ok = np.asarray(verify_shares(
+                    got[h].astype(np.uint32, copy=False)[None, :],
+                    peer_agg[h], (my_point,)))[0]
+                if not ok.all():
+                    bad.append(h)
+            if bad:
+                self.log(f"round {round_index}: blaming members {bad} "
+                         "(REGION_SUM failed its region's commitments)")
+                await self._send(Frame(
+                    MsgType.BLAME, round=round_index, src=self.pid,
+                    payload=codec.encode_json(
+                        {"kind": "region", "blamed": bad,
+                         "round": round_index})))
+        # a condemned region is out of the round wholesale: its sum is
+        # not folded and its dealers leave the divisor.  The corruption
+        # is in the sender's frames, so every honest receiver reaches
+        # the same verdict and the surviving rows stay consistent
+        # shares of the same degraded sum (sub-threshold completion
+        # instead of an all-members-blamed abort)
+        acc = region_acc[self.pid]
+        for h in sorted(senders):
+            if h in bad:
+                continue
+            acc = self._fold(acc, got[h].astype(np.uint32, copy=False))
+        excluded = {p for h in bad for p in region_of(h)}
+        l_eff = l - len(excluded)
 
         honest_acc = acc
-        acc = self._apply_tamper(acc, round_index, d)
+        if not region_tamper:
+            acc = self._apply_tamper(acc, round_index, d)
         self._prev_acc = honest_acc
 
         order = live_members
@@ -939,9 +1193,6 @@ class PartyWorker:
             member_sums = acc[None, :]
             points = None
         else:
-            # tree + norm audit is rejected at config time (the audit
-            # rows live only on each party's home member), so the
-            # Shamir tail here is the audit-free hub tail verbatim
             if my_idx < k - 1:
                 await self._send_chunked(
                     MsgType.CHAIN_SUM, order[-1],
@@ -953,8 +1204,46 @@ class PartyWorker:
             if k > 1:
                 rows.update(await self._collect(
                     asm, MsgType.CHAIN_SUM, set(order[:-1])))
+            good_inc = [p for p in included if p not in excluded]
+            if audit:
+                region_map = {h: region_of(h) for h in order}
+                honest, rows = await self._audit_tree_dealers(
+                    round_index, rows, order, committee, good_inc,
+                    region_map, ingest, bad, asm, d)
+                l_eff = len(honest)
             use_order = list(order)
             if cfg.vss:
+                if audit:
+                    # re-aggregate the per-dealer commitments over the
+                    # honest dealers only — the group product over any
+                    # dealer subset binds that subset's partial sums
+                    dealer_commit = {}
+                    for i, p in enumerate(region_inc):
+                        dealer_commit[p] = my_dealer_commits[i]
+                    for h in sorted(senders):
+                        if h in bad:
+                            continue
+                        for i, p in enumerate(region_of(h)):
+                            dealer_commit[p] = peer_dealer_commits[h][i]
+                    agg_commits = np.asarray(vss.aggregate_commits(
+                        np.stack([dealer_commit[p] for p in honest])),
+                        dtype=np.uint32)
+                else:
+                    # the group product over the surviving regions'
+                    # aggregates — commutative, so the per-region
+                    # regrouping reproduces the hub's all-at-once
+                    # aggregate exactly
+                    parts = ([] if my_agg is None else [my_agg])
+                    parts += [peer_agg[h] for h in sorted(senders)
+                              if h not in bad]
+                    if not parts:
+                        raise ProtocolError(
+                            "no regional commitments survived at the "
+                            "final member — an empty included set "
+                            "should have aborted upstream")
+                    agg_commits = np.asarray(
+                        vss.aggregate_commits(np.stack(parts)),
+                        dtype=np.uint32)
                 use_order = await self._verify_member_rows(
                     round_index, rows, order, committee, agg_commits)
             member_sums = np.stack([rows[w] for w in use_order])
@@ -962,7 +1251,7 @@ class PartyWorker:
                       tuple(committee.index(w) + 1 for w in use_order))
 
         mean = np.asarray(self.agg.reconstruct_mean(
-            member_sums, l, points=points), dtype=np.float32)
+            member_sums, l_eff, points=points), dtype=np.float32)
         await self._send_chunked(
             MsgType.RESULT, -1, round_index=round_index,
             phase=Phase.WIRE_RESULT, arr=mean,
@@ -1006,6 +1295,87 @@ class PartyWorker:
                 f"degree {deg} needs {deg + 1}; blamed: {blamed}")
         return good
 
+    # -- pre-round compile warm-up barrier (cfg.warmup) -------------------
+
+    async def _warmup(self, frame: Frame) -> None:
+        """JIT the round's kernels on dummy data, then ack.
+
+        The coordinator sends the round's exact shapes before arming
+        any stage monitor; first-use compilation (the Feldman
+        fixed-base gpow ladders, the per-point-set ``verify_shares``
+        recompiles) therefore never burns the straggler deadline —
+        the ``deadline_s=None`` footgun the VSS wire tests needed
+        before this barrier existed.  Warm-up is advisory: a failure
+        is logged and the round runs cold rather than not at all.
+        """
+        try:
+            self._warm_kernels(codec.decode_json(frame.payload))
+        except Exception as e:
+            self.log(f"warm-up failed (continuing cold): {e}")
+        await self._send(Frame(MsgType.WARMUP_ACK, round=frame.round,
+                               src=self.pid))
+
+    def _warm_kernels(self, body: dict) -> None:
+        cfg = self.cfg
+        d = int(body["d"])
+        ids = [int(p) for p in body.get("party_ids") or ()]
+        committee = [int(w) for w in body.get("committee") or ()]
+        home = {int(k): int(v)
+                for k, v in (body.get("home") or {}).items()}
+        m = len(committee)
+        chunks = {min(cfg.chunk_elems, d)}
+        if d % cfg.chunk_elems:
+            chunks.add(d % cfg.chunk_elems)
+        if self.pid in ids:
+            for ch in sorted(chunks):
+                np.asarray(self.agg.make_shares_batch(
+                    np.zeros((1, ch), np.float32), seed=cfg.seed,
+                    party_ids=[self.pid], round_index=0, elem_base=0))
+        if not cfg.vss:
+            return
+        deg = cfg.degree()
+        k0, k1 = philox.derive_key(cfg.seed, self.pid)
+        if self.pid in ids:
+            # the dealer-side gpow ladder: the round's dominant compile
+            for ch in sorted(chunks):
+                np.asarray(vss.feldman_commit(
+                    self.agg.encode(np.zeros(ch, np.float32)), k0, k1,
+                    degree=deg, counter_base=0))
+        if not committee or self.pid not in committee:
+            return
+        from repro.kernels.verify_shares import verify_shares
+        my_point = committee.index(self.pid) + 1
+        l = len(ids)
+        all_pts = tuple(range(1, m + 1))
+        one_commit = np.ones((d, deg + 1, 2), dtype=np.uint32)
+        if cfg.relay == "tree":
+            r = len([p for p in ids if home.get(p) == self.pid])
+            if r:
+                # region dealer verify (all m points) + regional
+                # commitment aggregation
+                np.asarray(verify_shares(
+                    np.zeros((m, r * d), np.uint32),
+                    np.ones((r * d, deg + 1, 2), np.uint32), all_pts))
+                np.asarray(vss.aggregate_commits(
+                    np.ones((r, d, deg + 1, 2), np.uint32)))
+            # incoming REGION_SUM check at this member's own point
+            np.asarray(verify_shares(np.zeros((1, d), np.uint32),
+                                     one_commit, (my_point,)))
+        else:
+            # hub dealer verify (own point, batched over l dealers) +
+            # the final member's all-dealer aggregation
+            np.asarray(verify_shares(
+                np.zeros((1, l * d), np.uint32),
+                np.ones((l * d, deg + 1, 2), np.uint32), (my_point,)))
+            np.asarray(vss.aggregate_commits(
+                np.ones((max(1, l), d, deg + 1, 2), np.uint32)))
+        # final-member row check + reconstruction (cheap to warm on
+        # every member; only the final live member will need them)
+        np.asarray(verify_shares(np.zeros((m, d), np.uint32),
+                                 one_commit, all_pts))
+        np.asarray(self.agg.reconstruct_mean(
+            np.zeros((m, d), np.uint32), max(1, l)))
+
     # -- main loop --------------------------------------------------------
 
     async def run(self) -> None:
@@ -1037,9 +1407,12 @@ class PartyWorker:
         try:
             while True:
                 frame = await self._next(MsgType.ELECT,
-                                         MsgType.ROUND_START)
+                                         MsgType.ROUND_START,
+                                         MsgType.WARMUP)
                 if frame.msg_type == MsgType.ELECT:
                     await self._election_subround(frame)
+                elif frame.msg_type == MsgType.WARMUP:
+                    await self._warmup(frame)
                 else:
                     await self._round(frame)
         except _Shutdown:
@@ -1066,6 +1439,7 @@ class PartyWorker:
             if hello is None or hello.msg_type != MsgType.HELLO:
                 return
             src = int(hello.src)
+            self._region_seen.add(src)
             session = int(hello.session)
             while True:
                 frame = await read_frame(reader)
@@ -1168,6 +1542,10 @@ def main(argv=None) -> int:
     ap.add_argument("--die-after-upload", type=int, default=None,
                     help="TEST HOOK: exit abruptly after sending this "
                          "round's share uploads")
+    ap.add_argument("--die-before-upload", type=int, default=None,
+                    help="TEST HOOK: exit abruptly on this round's "
+                         "ROUND_START, before any share frame — the "
+                         "tree relay's probe-settled dropout")
     ap.add_argument("--tamper", choices=TAMPER_MODES, default=None,
                     help="TEST HOOK: corrupt this member's partial sum "
                          "(the VSS adversary)")
@@ -1183,6 +1561,7 @@ def main(argv=None) -> int:
     log, fh = _open_log(args.party_id, args.log_file)
     worker = PartyWorker(args.host, args.port, args.party_id,
                          die_after_upload=args.die_after_upload,
+                         die_before_upload=args.die_before_upload,
                          tamper=args.tamper,
                          tamper_round=args.tamper_round,
                          poison=args.poison,

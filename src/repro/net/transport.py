@@ -65,6 +65,7 @@ class WireTransport(Transport):
                  norm_bound: float | None = None,
                  cohort: int | None = None, pipeline: bool = False,
                  lease_s: float | None = 30.0, relay: str = "hub",
+                 warmup: bool = False,
                  dealer_tamper: dict | None = None,
                  round_timeout_s: float = 120.0,
                  host: str = "127.0.0.1", port: int = 0,
@@ -78,7 +79,7 @@ class WireTransport(Transport):
             deadline_s=deadline_s, vss=vss,
             reelect_each_round=reelect_each_round,
             norm_bound=norm_bound, cohort=cohort, pipeline=pipeline,
-            lease_s=lease_s, relay=relay)
+            lease_s=lease_s, relay=relay, warmup=warmup)
         # dealer_tamper {pid: (mode, round)} becomes per-party --poison
         # CLI flags: on the wire the adversary is the *worker process*
         # poisoning its own input, not a coordinator-side mutation

@@ -144,9 +144,23 @@ class MsgType:
     REGION_SUM = 22     # home member -> member (relayed, tree): the
                         # fold of its region's share rows addressed to
                         # the destination member's evaluation point
-    REGION_COMMIT = 23  # home member -> final member (relayed, tree):
-                        # regional aggregate Feldman commitments (the
-                        # pointwise product over the region's dealers)
+    REGION_COMMIT = 23  # home member -> every other member (relayed,
+                        # tree): regional Feldman commitments — the
+                        # pointwise product over the region's dealers,
+                        # or the per-dealer concatenation when the
+                        # norm-bound audit needs dealer granularity
+    UPLOAD_PROBE = 24   # coordinator -> home member (tree relay): a
+                        # region party's coordinator socket died — is
+                        # its upload settled? JSON {party}.  The member
+                        # answers UPLOAD_DONE{done:false} iff the party
+                        # never reached the region listener (fail-fast
+                        # upload verdict, DESIGN.md §13)
+    WARMUP = 25         # coordinator -> party: pre-round compile
+                        # warm-up barrier JSON {d, party_ids,
+                        # committee, round} — the party JITs the
+                        # round's exact kernel shapes before stage
+                        # deadlines arm
+    WARMUP_ACK = 26     # party -> coordinator: warm-up complete
 
     _NAMES = {}  # filled below
 

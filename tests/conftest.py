@@ -57,6 +57,14 @@ def pytest_configure(config):
         "markers",
         "adversarial: VSS tampering battery (detection, blame, "
         "eviction, re-election)")
+    # relay-tree hardening battery (ISSUE 10): commitment-bound
+    # REGION_SUMs, audit-row escrow, fail-fast upload verdicts — the
+    # net CI job runs these explicitly (-m "net and relay_tree") so a
+    # marker-expression typo cannot silently deselect them
+    config.addinivalue_line(
+        "markers",
+        "relay_tree: tree-relay hardening tests (region blame quorum, "
+        "escrow audit, upload probes)")
 
 
 @pytest.fixture

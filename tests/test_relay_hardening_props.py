@@ -1,0 +1,186 @@
+"""Property tests for the relay-tree hardening layer (ISSUE 10).
+
+Fast, socket-free properties of the two deterministic brains the tree
+relay's blame machinery leans on:
+
+* ``fl.cohort.assign_home`` — the Philox home-member draw must stay a
+  partition of the cohort over the committee, be bit-stable across
+  recomputation (coordinator and members derive it independently), and
+  keep every *surviving* party's home fixed under churn of the rest of
+  the cohort and under committee change it does not participate in.
+* ``fl.faults.resolve_region_blames`` — the strict-majority quorum
+  over REGION_SUM accusations: a single (possibly malicious) accuser
+  must never condemn anyone when three or more members are live,
+  self-accusations are void, and a condemned member always has a
+  strict majority of its live *peers* against it.
+
+The sim half of the tamper acceptance rides along: a tampering member
+under ``committee_tamper`` is blamed — and only the tamperer, never a
+receiver — for every mode and every non-final committee slot (the wire
+twin of this property is
+``test_wire_tree_region_tamper_condemns_sender``).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import committee as committee_mod
+from repro.fl import make_transport
+from repro.fl.cohort import assign_home
+from repro.fl.faults import resolve_region_blames
+
+ids_strategy = st.lists(st.integers(min_value=0, max_value=63),
+                        min_size=1, max_size=16)
+committee_strategy = st.lists(st.integers(min_value=0, max_value=63),
+                              min_size=1, max_size=5)
+seed_strategy = st.integers(min_value=0, max_value=2 ** 31 - 1)
+round_strategy = st.integers(min_value=0, max_value=40)
+
+
+# ---------------------------------------------------------------------------
+# assign_home: partition, determinism, churn/member-death stability
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(ids_strategy, committee_strategy, seed_strategy, round_strategy)
+def test_assign_home_is_deterministic_partition(ids, committee, seed,
+                                                round_index):
+    home = assign_home(ids, committee, seed, round_index)
+    assert set(home) == {int(i) for i in ids}
+    assert set(home.values()) <= {int(w) for w in committee}
+    # coordinator and every member recompute the identical map
+    assert home == assign_home(ids, committee, seed, round_index)
+    # regions partition the cohort: every party has exactly one home
+    regions = {w: [p for p, h in home.items() if h == w]
+               for w in set(home.values())}
+    assert sorted(p for reg in regions.values() for p in reg) == \
+        sorted(set(int(i) for i in ids))
+
+
+@settings(max_examples=40)
+@given(ids_strategy, committee_strategy, seed_strategy, round_strategy,
+       st.integers(min_value=0, max_value=15))
+def test_assign_home_stable_under_cohort_churn(ids, committee, seed,
+                                               round_index, drop_k):
+    """Dropping parties from the cohort (churn, bans, dropouts) never
+    moves a *surviving* party's home — the draw is keyed per party id,
+    not per position, which is what lets the coordinator's
+    UPLOAD_PROBE and the members' region folds agree mid-churn."""
+    ids = sorted({int(i) for i in ids})
+    full = assign_home(ids, committee, seed, round_index)
+    survivors = [p for k, p in enumerate(ids) if (drop_k >> k) & 1 == 0]
+    churned = assign_home(survivors, committee, seed, round_index)
+    assert churned == {p: full[p] for p in survivors}
+
+
+@settings(max_examples=40)
+@given(ids_strategy, seed_strategy, round_strategy,
+       st.integers(min_value=0, max_value=4))
+def test_assign_home_after_member_death_still_partitions(ids, seed,
+                                                         round_index,
+                                                         dead_slot):
+    """Member death composes: re-assigning over the shrunken committee
+    (the next round's re-election path) is still a partition over the
+    remaining members — no party is ever homed at the dead member."""
+    committee = [10, 20, 30, 40, 50]
+    dead = committee[dead_slot]
+    remaining = [w for w in committee if w != dead]
+    home = assign_home(ids, remaining, seed, round_index)
+    assert dead not in home.values()
+    assert set(home.values()) <= set(remaining)
+    assert set(home) == {int(i) for i in ids}
+
+
+# ---------------------------------------------------------------------------
+# resolve_region_blames: the strict-majority quorum
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=2,
+                max_size=7),
+       st.integers(min_value=0, max_value=2 ** 16 - 1))
+def test_region_quorum_condemns_only_with_strict_majority(live, mask):
+    """For every accusation pattern: condemned ⊆ accused, and each
+    condemned member has a strict majority of its live peers as
+    accusers — the invariant the wire coordinator relies on so a
+    malicious receiver cannot frame an honest sender."""
+    live = sorted(set(live))
+    accused = live[0]
+    accusers = {w for k, w in enumerate(live) if (mask >> k) & 1}
+    condemned = resolve_region_blames({accused: accusers}, live)
+    voters = accusers & (set(live) - {accused})
+    if len(voters) * 2 > len(live) - 1:
+        assert condemned == {accused}
+    else:
+        assert condemned == set()
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=3,
+                max_size=7),
+       st.integers(min_value=0, max_value=7))
+def test_region_quorum_single_accuser_condemns_nobody(live, accuser):
+    """With >= 3 live members one accuser is never a strict majority:
+    a lone malicious member cannot evict an honest one."""
+    live = sorted(set(live))
+    if len(live) < 3:
+        live = sorted(set(live) | {8, 9, 10})[:3]
+    accusations = {w: {accuser} for w in live if w != accuser}
+    assert resolve_region_blames(accusations, live) == set()
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=2,
+                max_size=7))
+def test_region_quorum_self_accusation_is_void(live):
+    live = sorted(set(live))
+    accusations = {w: {w} for w in live}
+    assert resolve_region_blames(accusations, live) == set()
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=2,
+                max_size=7))
+def test_region_quorum_unanimous_peers_always_condemn(live):
+    """All live peers accusing is always a strict majority — the
+    honest-receivers case of the tree tamper battery (every receiver
+    sees the same corrupted frames and reaches the same verdict)."""
+    live = sorted(set(live))
+    accused = live[-1]
+    peers = set(live) - {accused}
+    condemned = resolve_region_blames({accused: peers}, live)
+    assert condemned == ({accused} if peers else set())
+
+
+# ---------------------------------------------------------------------------
+# sim oracle: the tamperer — and only the tamperer — is blamed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.adversarial
+@pytest.mark.parametrize("mode", ["flip", "wrong_poly", "replay"])
+@pytest.mark.parametrize("victim_slot", [0, 1])
+def test_sim_tamper_blames_exactly_the_tamperer(mode, victim_slot):
+    """Sim half of the hardening acceptance: for every tamper mode and
+    every non-final committee slot the blamed set is exactly the
+    tampering member — never a receiver, never empty — and the round
+    completes (no abort) with the honest parties alive."""
+    n, s, m, deg = 4, 32, 3, 1
+    rng = np.random.RandomState(0)
+    flats = rng.randn(n, s).astype(np.float32)
+    rounds = 2 if mode == "replay" else 1
+    tamper_round = rounds - 1
+    victim = committee_mod.elect(n, m, 10,
+                                 1 + tamper_round).committee[victim_slot]
+    sim = make_transport("two_phase", n, m=m, scheme="shamir",
+                         shamir_degree=deg, seed=1, vss=True,
+                         reelect_each_round=True)
+    for r in range(rounds):
+        kw = ({"committee_tamper": {victim: mode}}
+              if r == tamper_round else {})
+        sim.aggregate(flats, round_index=r, **kw)
+    out = sim.last_outcome
+    assert out.blamed == {victim}
+    assert victim not in out.alive
+    assert out.alive == set(range(n)) - {victim}

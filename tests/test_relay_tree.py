@@ -263,14 +263,18 @@ def test_coordinator_data_bytes_tree_shrinks_ingress():
     # the tree replaces both directions with m·(m−1) regional sums
     assert hub_in - tree_in == (40 * 3 - 3 * 2) * upload
     assert hub_out - tree_out == (40 * 3 - 3 * 2) * upload
-    # VSS moves the commitment fan-in off the coordinator too
+    # VSS moves the commitment fan-in off the coordinator too: the
+    # tree carries m·(m−1) REGION_COMMIT messages (every member
+    # broadcasts its regional aggregate to every other member — the
+    # receivers' commitment check of DESIGN.md §13), still independent
+    # of the cohort size
     hub_v = costmodel.coordinator_data_bytes(
         p, relay="hub", chunk_elems=1024, vss=True, degree=1)[0]
     tree_v = costmodel.coordinator_data_bytes(
         p, relay="tree", chunk_elems=1024, vss=True, degree=1)[0]
     assert hub_v - hub_in == 40 * 3 * costmodel.message_wire_bytes(
         500 * 2 * 2, 1024)
-    assert tree_v - tree_in == 2 * costmodel.message_wire_bytes(
+    assert tree_v - tree_in == 3 * 2 * costmodel.message_wire_bytes(
         500 * 2 * 2, 1024)
 
 

@@ -30,6 +30,7 @@ from repro.core import costmodel, philox, shamir, vss
 from repro.core.costmodel import CostParams
 from repro.core.field import MERSENNE_P_INT
 from repro.fl import FLSimulation, make_transport
+from repro.fl.cohort import assign_home
 from repro.fl.faults import RoundOutcome, resolve_outcome
 from repro.kernels.verify_shares import verify_shares
 
@@ -319,10 +320,12 @@ wire = pytest.mark.net
 @pytest.mark.adversarial
 @pytest.mark.parametrize("mode,relay", [
     ("flip", "hub"), ("wrong_poly", "hub"), ("replay", "hub"),
-    # tree relay: detection is identical — the chain row still reaches
-    # the final verifier, only the upload fan-in route changed; flip
-    # covers the in-round corruption, replay the cross-round cache
-    ("flip", "tree"), ("replay", "tree"),
+    # tree relay, own-row corruption: wrong_poly keeps the hub's
+    # semantics under the tree too (the chain row still reaches the
+    # final verifier unchanged); flip/replay under the tree corrupt
+    # the member's *outgoing* REGION_SUMs instead and are covered by
+    # test_wire_tree_region_tamper_condemns_sender below
+    ("wrong_poly", "tree"),
 ])
 def test_wire_tampering_member_blamed_evicted_reelected(mode, relay,
                                                         net_log_dir):
@@ -356,14 +359,14 @@ def test_wire_tampering_member_blamed_evicted_reelected(mode, relay,
     sim.aggregate(flats, round_index=rounds)
     sim_next_committee = sim.committee
 
-    # deadline_s=None: the battery tests tampering, not stragglers —
-    # the fixed-base exponentiation JIT in each party process can
-    # outlast the default 30s stage deadline on a loaded CI machine,
-    # which would inject straggler noise into the RoundOutcome parity
-    # (EOF dropout detection stays on regardless)
+    # warmup=True: the pre-round compile barrier JITs the Feldman
+    # exponentiation ladders and per-point-set verify_shares variants
+    # before any stage monitor arms, so the battery runs under the
+    # REAL straggler deadline instead of the old deadline_s=None
+    # blanket (which would have masked a deadline regression)
     with make_transport(
             "two_phase", N, backend="wire", m=M, scheme="shamir",
-            shamir_degree=DEG, seed=1, vss=True, deadline_s=None,
+            shamir_degree=DEG, seed=1, vss=True, warmup=True,
             reelect_each_round=True, relay=relay, log_dir=net_log_dir,
             party_extra_args={victim: ["--tamper", mode,
                                        "--tamper-round",
@@ -391,6 +394,84 @@ def test_wire_tampering_member_blamed_evicted_reelected(mode, relay,
 
 @wire
 @pytest.mark.adversarial
+@pytest.mark.relay_tree
+@pytest.mark.parametrize("mode,tamper_round,victim_slot", [
+    # flip: round-0 committee (3,0,1), victim 3 homes region [2,3]
+    ("flip", 0, 0),
+    # replay: needs a previous round's cached sums; round-1 committee
+    # (3,0,1), member 0 homes region [0] (slot 0's region is empty
+    # that round, which would fall back to own-row semantics)
+    ("replay", 1, 1),
+])
+def test_wire_tree_region_tamper_condemns_sender(mode, tamper_round,
+                                                 victim_slot,
+                                                 net_log_dir):
+    """Relay-tree hardening (ISSUE 10): a home member that corrupts
+    its outgoing REGION_SUMs draws blame *onto itself* — every
+    receiver's commitment check fails on the sender's frames, the
+    strict-majority region quorum condemns it, its region's dealers
+    leave the divisor, and the round COMPLETES over the survivors
+    bit-identical to the sim with the same member dropped (before
+    this sweep the m−1 receivers folded the tampered data, every
+    chain row failed, all members were blamed and the round aborted).
+    The condemned member is evicted and the next round re-elects
+    without it."""
+    flats = _flats()
+    rounds = tamper_round + 1
+    committee = committee_mod.elect(N, M, B, 1 + tamper_round).committee
+    victim = committee[victim_slot]
+    ids = list(range(N))
+    home = assign_home(ids, committee, 1, tamper_round)
+    region = sorted(p for p in ids if home[p] == victim)
+    # guards on the scenario constants: the tamper hook only corrupts
+    # outgoing REGION_SUMs when the region is non-empty, and the
+    # verifier (final member) must stay honest
+    assert region and victim != committee[-1]
+    survivors = [p for p in ids if p not in region]
+    honest = _honest_sim(flats, rounds=rounds + 1,
+                         reelect_each_round=True)
+
+    # sim oracle for the degraded round: the survivors' data over the
+    # committee minus the condemned member — the wire's receivers
+    # exclude the condemned region's sum AND its dealers, so the
+    # reconstruction runs sub-threshold over the same points
+    sim = make_transport("two_phase", N, m=M, scheme="shamir",
+                         shamir_degree=DEG, seed=1, vss=True,
+                         reelect_each_round=True)
+    for r in range(tamper_round):
+        sim.aggregate(flats, round_index=r)
+    want = np.asarray(sim.aggregate(
+        np.asarray(flats)[survivors], party_ids=survivors,
+        round_index=tamper_round, committee_dropout=[victim]))
+
+    with make_transport(
+            "two_phase", N, backend="wire", m=M, scheme="shamir",
+            shamir_degree=DEG, seed=1, vss=True, warmup=True,
+            reelect_each_round=True, relay="tree", log_dir=net_log_dir,
+            party_extra_args={victim: ["--tamper", mode,
+                                       "--tamper-round",
+                                       str(tamper_round)]}) as tr:
+        for r in range(tamper_round):
+            got = np.asarray(tr.aggregate(flats, round_index=r))
+            np.testing.assert_array_equal(got, honest[r])
+        got = np.asarray(tr.aggregate(flats,
+                                      round_index=tamper_round))
+        np.testing.assert_array_equal(got, want)
+        out = tr.last_outcome
+        assert out.blamed == {victim}
+        assert out.dropped == set(region) - {victim}
+        assert out.alive == set(survivors)
+        assert out.straggled == set()
+        assert tr.evicted == {victim}
+        # eviction: the next round re-elects without the condemned
+        # member and (all parties back in) matches the honest mean
+        got = np.asarray(tr.aggregate(flats, round_index=rounds))
+        np.testing.assert_array_equal(got, honest[rounds])
+        assert victim not in tr.committee
+
+
+@wire
+@pytest.mark.adversarial
 @pytest.mark.parametrize("relay", ["hub", "tree"])
 def test_wire_honest_vss_round_bit_identical_counters_exact(
         relay, net_log_dir):
@@ -406,7 +487,7 @@ def test_wire_honest_vss_round_bit_identical_counters_exact(
     want = np.asarray(sim.aggregate(flats, round_index=0))
     with make_transport("two_phase", N, backend="wire", m=M,
                         scheme="shamir", shamir_degree=DEG, seed=1,
-                        vss=True, deadline_s=None, relay=relay,
+                        vss=True, warmup=True, relay=relay,
                         log_dir=net_log_dir) as tr:
         assert tr.elect() == sim.committee
         got = np.asarray(tr.aggregate(flats, round_index=0))

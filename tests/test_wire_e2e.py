@@ -351,6 +351,120 @@ def test_wire_pipelined_election_overlaps_and_keeps_outputs(net_log_dir):
             f"ended {t2_end:.6f}: no overlap — pipelining regressed")
 
 
+@pytest.mark.adversarial
+@pytest.mark.relay_tree
+@pytest.mark.parametrize("relay", ["hub", "tree"])
+def test_wire_norm_audit_blames_poisoned_dealer(relay, net_log_dir):
+    """Norm-bound audit over the wire, both topologies (ISSUE 10):
+    under ``relay="tree"`` the per-dealer rows a home member folds are
+    escrowed and streamed to the final member during PHASE2_AUDIT, so
+    ``norm_bound`` composes with the tree (the config used to reject
+    the combination outright).  A dealer shipping a scale-boosted
+    update is caught by the final member's reconstruction, reported in
+    ``blamed_dealers``, and the mean excludes it — bit-identical to
+    the sim twin running the same poison.  The coordinator's measured
+    data bytes equal the audit-extended closed forms exactly,
+    including the tree's escrow legs."""
+    from repro.fl.cohort import assign_home
+
+    n, s, m, deg, bound = 4, 242, 3, 1, 50.0
+    flats = np.asarray(_flats(n, s))
+    committee = committee_mod.elect(n, m, B, 1).committee
+    home = assign_home(range(n), committee, 1, 0)
+    # the poisoner is homed at a NON-final member, so under the tree
+    # its rows reach the verifier only through the escrow stream
+    poisoner = 2
+    assert home[poisoner] != committee[-1]
+
+    sim = make_transport("two_phase", n, m=m, scheme="shamir",
+                         shamir_degree=deg, seed=1, vss=True,
+                         norm_bound=bound,
+                         dealer_tamper={poisoner: ("scale", 0)})
+    sim.elect()
+    want = np.asarray(sim.aggregate(flats, round_index=0))
+    assert sim.last_outcome.blamed_dealers == {poisoner}
+
+    with make_transport(
+            "two_phase", n, backend="wire", m=m, scheme="shamir",
+            shamir_degree=deg, seed=1, vss=True, norm_bound=bound,
+            warmup=True, relay=relay, log_dir=net_log_dir,
+            dealer_tamper={poisoner: ("scale", 0)}) as wire:
+        wire.elect()
+        got = np.asarray(wire.aggregate(flats, round_index=0))
+        np.testing.assert_array_equal(got, want)
+        assert wire.last_outcome == sim.last_outcome
+        assert wire.last_outcome.blamed_dealers == {poisoner}
+
+        cfg = wire.cfg
+        p = CostParams(n=n, s=s, m=m, b=B)
+        region_sizes = None
+        if relay == "tree":
+            # one entry per member, final member last, summing to n
+            order = [w for w in committee if w != committee[-1]]
+            order.append(committee[-1])
+            region_sizes = [sum(1 for q in range(n) if home[q] == w)
+                            for w in order]
+        want_in, want_out = costmodel.coordinator_data_bytes(
+            p, relay=relay, chunk_elems=cfg.chunk_elems, vss=True,
+            degree=deg, audit=True, region_sizes=region_sizes)
+        co = wire.coordinator
+        assert (co.data_bytes_in, co.data_bytes_out) == \
+            (want_in, want_out)
+
+
+@pytest.mark.adversarial
+@pytest.mark.relay_tree
+def test_wire_tree_die_before_upload_fails_fast(net_log_dir):
+    """Fail-fast upload verdicts (ISSUE 10): a party that dies before
+    ever reaching its home member used to settle only at the stage
+    deadline (the one tree dropout the member cannot observe).  Now
+    the coordinator probes the home member on the party's EOF and the
+    member answers a deterministic dropout verdict for a party it
+    never saw.  deadline_s=None is deliberate here: with the deadline
+    disabled the upload stage can ONLY settle through the probe
+    verdict, so the round completing at all (inside round_timeout_s)
+    is the proof of fail-fast — before this sweep this test would
+    hang to the round timeout."""
+    n, s, m, deg = 4, 242, 3, 1
+    flats = np.asarray(_flats(n, s))
+    committee = committee_mod.elect(n, m, B, 1).committee
+    from repro.fl.cohort import assign_home
+    home = assign_home(range(n), committee, 1, 0)
+    # a non-member party homed at another (live) member: its death
+    # leaves no EOF on any region socket and kills no region
+    victim = next(p for p in range(n)
+                  if p not in committee and home[p] != p)
+    survivors = sorted(set(range(n)) - {victim})
+
+    sim = make_transport("two_phase", n, m=m, scheme="shamir",
+                         shamir_degree=deg, seed=1)
+    sim.elect()
+    want = np.asarray(sim.aggregate(flats[survivors],
+                                    party_ids=survivors,
+                                    round_index=0))
+
+    with make_transport(
+            "two_phase", n, backend="wire", m=m, scheme="shamir",
+            shamir_degree=deg, seed=1, relay="tree", deadline_s=None,
+            log_dir=net_log_dir,
+            party_extra_args={victim: ["--die-before-upload", "0"]}
+    ) as wire:
+        wire.elect()
+        got = np.asarray(wire.aggregate(flats, round_index=0))
+        np.testing.assert_array_equal(got, want)
+        # the same RoundOutcome the fault brain resolves for the
+        # observed dropout — exactly what the deadline path would
+        # have reported, minus the wait
+        assert wire.last_outcome == resolve_outcome(
+            set(range(n)), dropped={victim}, straggled=set(),
+            committee=committee, reconstruct_threshold=deg + 1,
+            resurrect=False)
+        assert wire.last_outcome.dropped == {victim}
+        # only the survivors' uploads were folded and metered
+        assert wire.net.stats("phase2_upload").msg_num == \
+            len(survivors) * m
+
+
 def test_simulation_facade_wire_backend(net_log_dir):
     """FLSimulation(backend='wire') routes two_phase over sockets and
     keeps the same Network the Eq cross-checks read."""
